@@ -1,0 +1,44 @@
+"""Paper Figure 11: Q1–Q5 performance on two micro-cluster sizes.
+
+Cluster 1 = 16 server slots, Cluster 2 = 2 slots (the paper's 965-core vs
+118-core clusters, scaled to a laptop).  The paper's headline: the small
+cluster is only modestly slower because indexed scans make work ∝ result
+size — CPU/IO totals stay flat while only parallelism changes.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.exec import AdHocEngine
+
+from .queries import QUERIES, build_catalog, q_variability
+
+__all__ = ["run"]
+
+
+def run(scale: float = 1.0, num_shards: int = 40, print_fn=print):
+    cat = build_catalog(scale=scale, num_shards=num_shards)
+    clusters = {"cluster1": 16, "cluster2": 2}
+    rows = []
+    for cname, slots in clusters.items():
+        engine = AdHocEngine(cat, num_servers=slots)
+        for qname, (cities, months) in QUERIES.items():
+            q = q_variability(cities, months, mode="multi_index")
+            engine.collect(q)                       # warm
+            t0 = time.perf_counter()
+            res = engine.collect(q)
+            exec_ms = (time.perf_counter() - t0) * 1e3
+            p = res.profile
+            rows.append({
+                "name": f"fig11_{qname}_{cname}",
+                "exec_ms": round(exec_ms, 2),
+                "cpu_ms": round(p.cpu_ms, 2),
+                "io_ms": round(p.io_ms, 2),
+                "rows_selected": p.rows_selected,
+                "bytes_read": p.bytes_read,
+                "result_rows": res.n,
+            })
+            print_fn(f"  {qname} {cname:9s} exec={exec_ms:8.1f}ms "
+                     f"cpu={p.cpu_ms:8.1f}ms io={p.io_ms:6.1f}ms "
+                     f"sel={p.rows_selected:7d}")
+    return rows

@@ -1,0 +1,31 @@
+"""Paper Figure 12: data scan size per query (Q1–Q5)."""
+from __future__ import annotations
+
+from repro.exec import AdHocEngine
+
+from .queries import QUERIES, build_catalog, q_variability
+
+__all__ = ["run"]
+
+
+def run(scale: float = 1.0, num_shards: int = 40, print_fn=print):
+    cat = build_catalog(scale=scale, num_shards=num_shards)
+    engine = AdHocEngine(cat, num_servers=16)
+    total_bytes = cat.get("SpeedObservations").nbytes()
+    rows = []
+    for qname, (cities, months) in QUERIES.items():
+        res = engine.collect(q_variability(cities, months,
+                                           mode="multi_index"))
+        p = res.profile
+        rows.append({
+            "name": f"fig12_{qname}",
+            "bytes_read": p.bytes_read,
+            "dataset_bytes": total_bytes,
+            "scan_fraction_pct": round(100 * p.bytes_read
+                                       / max(total_bytes, 1), 3),
+            "rows_selected": p.rows_selected,
+        })
+        print_fn(f"  {qname}: read {p.bytes_read:>10d} B "
+                 f"({100 * p.bytes_read / max(total_bytes, 1):6.2f}% of "
+                 f"{total_bytes} B)")
+    return rows

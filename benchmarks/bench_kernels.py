@@ -1,0 +1,81 @@
+"""Per-kernel microbenchmarks.
+
+Wall-clock on CPU measures the *reference* jnp path (interpret mode
+executes kernel bodies in Python — not a timing proxy); the Pallas kernels
+target TPU, so their perf claim lives in §Roofline, not here.  What this
+bench adds: per-call µs of the reference math (the dry-run's compute) and
+derived throughput figures.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+__all__ = ["run"]
+
+
+def _time(fn, *args, repeats=5, **kw):
+    fn(*args, **kw)                      # compile+warm
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6                    # µs
+
+
+def run(print_fn=print):
+    rng = np.random.default_rng(0)
+    rows = []
+
+    w = 1 << 20
+    stack = jnp.asarray(rng.integers(0, 2**32, (4, w), dtype=np.uint32))
+    us = _time(lambda s: ops.bitmap_intersect(s, impl="reference")[0],
+               stack)
+    rows.append({"name": "kernel_bitmap_intersect_4x1Mwords",
+                 "us_per_call": round(us, 1),
+                 "derived": f"{4 * w * 4 / us / 1e3:.2f} GB/s"})
+
+    n = 1 << 20
+    mask = jnp.asarray(rng.random(n) < 0.3)
+    us = _time(lambda m: ops.compact(m, impl="reference")[0], mask)
+    rows.append({"name": "kernel_compact_1M",
+                 "us_per_call": round(us, 1),
+                 "derived": f"{n / us:.1f} Melem/s"})
+
+    gid = jnp.asarray(rng.integers(0, 1024, n, dtype=np.int32))
+    vals = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    us = _time(lambda g, v: ops.segment_agg(g, v, 1024,
+                                            impl="reference")[1],
+               gid, vals)
+    rows.append({"name": "kernel_segment_agg_1M_1024g",
+                 "us_per_call": round(us, 1),
+                 "derived": f"{n / us:.1f} Melem/s"})
+
+    q = jnp.asarray(rng.normal(size=(1, 8, 1024, 64)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 2, 1024, 64)).astype(np.float32))
+    flops = 4 * 8 * 1024 * 1024 * 64 / 2     # causal ≈ half
+    us = _time(lambda a, b: ops.flash_attention(a, b, b,
+                                                impl="reference"), q, k)
+    rows.append({"name": "kernel_flash_attention_1k_gqa",
+                 "us_per_call": round(us, 1),
+                 "derived": f"{flops / us / 1e3:.2f} GFLOP/s"})
+
+    a = jnp.asarray(rng.uniform(0.8, 1.0, (4, 2048, 256)
+                                ).astype(np.float32))
+    bx = jnp.asarray(rng.normal(size=(4, 2048, 256)).astype(np.float32))
+    us = _time(lambda x, y: ops.ssm_scan(x, y, impl="reference")[0], a, bx)
+    rows.append({"name": "kernel_ssm_scan_4x2048x256",
+                 "us_per_call": round(us, 1),
+                 "derived": f"{4 * 2048 * 256 / us:.1f} Melem/s"})
+
+    for r in rows:
+        print_fn(f"  {r['name']:42s} {r['us_per_call']:10.1f} µs  "
+                 f"{r['derived']}")
+    return rows

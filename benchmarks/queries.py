@@ -1,0 +1,105 @@
+"""Shared query library for the paper-table benchmarks.
+
+Builds the §6 world (roads + speed observations) and the Q1–Q5 traffic
+speed-variability queries: "accumulate all the speed observations per road
+segment during the morning rush hours (8−9 am on weekdays), and compute
+the standard deviation of the speeds, normalized with respect to its mean
+— the *coefficient of variation*."
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import P, proto, IN, BETWEEN, group, fdb
+from repro.data.synthetic import CITIES, BAY_AREA, generate_world
+from repro.exec import AdHocEngine, Catalog
+from repro.fdb import build_fdb
+from repro.geo import AreaTree, mercator as M
+
+__all__ = ["build_catalog", "region_for", "q_variability", "QUERIES"]
+
+
+def build_catalog(scale: float = 1.0, num_shards: int = 20,
+                  seed: int = 0) -> Catalog:
+    world = generate_world(scale=scale, seed=seed)
+    cat = Catalog(server_slots=64)
+    cat.register(build_fdb("Roads", world["roads_schema"],
+                           world["roads"], num_shards=max(4, num_shards // 4)))
+    cat.register(build_fdb("SpeedObservations",
+                           world["observations_schema"],
+                           world["observations"], num_shards=num_shards))
+    cat.register(build_fdb("RouteRequests",
+                           world["route_requests_schema"],
+                           world["route_requests"],
+                           num_shards=max(4, num_shards // 4)))
+    return cat
+
+
+def region_for(cities) -> AreaTree:
+    """Union of city bounding boxes → selection region."""
+    area = AreaTree.empty()
+    for c in cities:
+        lat0, lng0, dlat, dlng = CITIES[c]
+        ix, iy = M.latlng_to_xy(np.array([lat0, lat0 + dlat]),
+                                np.array([lng0, lng0 + dlng]))
+        # level 6 ≈ 150 m cells: city-scale selection with ~100× fewer
+        # Morton ranges than level 7 (probe cost ∝ ranges)
+        area = area | AreaTree.from_box(int(ix[0]), int(iy[1]),
+                                        int(ix[1]), int(iy[0]),
+                                        max_level=6)
+    return area
+
+
+def q_variability(cities, months: int, *, mode: str = "multi_index",
+                  sample: float | None = None):
+    """Coefficient-of-variation per road (Q1–Q5) under a selection mode.
+
+    mode = 'multi_index'  — geospatial + hour + dow + month indices
+           'geo_index'    — geospatial index only; time filtered post-read
+           'full_scan'    — no index use at all (filter everything)
+    """
+    region = region_for(cities)
+    flow = fdb("SpeedObservations")
+    time_pred = (BETWEEN(P.hour, 8, 9) & BETWEEN(P.dow, 0, 4)
+                 & BETWEEN(P.month, 1, months))
+    if mode == "multi_index":
+        flow = flow.find(IN(P.loc, region) & time_pred)
+    elif mode == "geo_index":
+        flow = flow.find(IN(P.loc, region)).filter(time_pred)
+    elif mode == "full_scan":
+        # obscure the predicates so the planner cannot use any index:
+        # (x + 0) is no longer a bare FieldRef
+        flow = flow.filter(
+            IN(P.loc, region) if False else (
+                ((P.hour + 0) >= 8) & ((P.hour + 0) <= 9)
+                & ((P.dow + 0) <= 4) & ((P.month + 0) <= months)))
+        # geospatial containment without the index:
+        flow = flow.filter(IN_region_residual(region))
+    else:
+        raise ValueError(mode)
+    if sample:
+        flow = flow.sample(sample)
+    return (flow.aggregate(group(P.road_id)
+                           .avg(mean_speed=P.speed)
+                           .std_dev(std_speed=P.speed)
+                           .count("n"))
+            .map(lambda p: proto(road_id=p.road_id, n=p.n,
+                                 cov=p.std_speed / p.mean_speed)))
+
+
+def IN_region_residual(region):
+    """Point-in-region as a plain expression (no index use)."""
+    from repro.core.exprs import InRegion, FieldRef, ExprProxy, BinOp, Lit
+    # InRegion on a synthetic FieldRef copy — identical math, but applied
+    # via filter() so the planner never sees it in find()
+    return ExprProxy(InRegion(FieldRef("loc"), region))
+
+
+#: paper §6 query list
+QUERIES = {
+    "Q1": (("SF",), 1),
+    "Q2": (("SF",), 6),
+    "Q3": (BAY_AREA, 1),
+    "Q4": (BAY_AREA, 6),
+    "Q5": (tuple(CITIES), 1),       # "California" = every city
+}

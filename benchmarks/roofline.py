@@ -1,0 +1,127 @@
+"""§Roofline: three-term analysis from the dry-run artifacts.
+
+For every (arch × shape × mesh) JSON under runs/dryrun/:
+
+  compute_s    = HLO_FLOPs(global)       / (chips · 197 TFLOP/s)
+  memory_s     = HLO_bytes(global)       / (chips · 819 GB/s)
+  collective_s = collective_bytes(global)/ (chips · 50 GB/s/link)
+
+cost_analysis() reports the per-device SPMD module, so global = per-device
+× chips and the formulas above reduce to per-device quantities over
+per-chip rates.  MODEL_FLOPS = 6·N(_active)·D with D = tokens (decode: B·1
+token); the useful-fraction column MODEL/HLO exposes remat & redundancy
+(full remat ⇒ ≈ 0.7–0.75 by construction: 8·N·D recomputed vs 6·N·D
+useful).  ``mfu_bound`` = MODEL_FLOPS/(chips·peak) ÷ dominant term — the
+roofline-implied ceiling on MFU for this program.
+
+CPU-lowering caveat: XLA:CPU upconverts most bf16 math to f32, inflating
+HLO bytes (and memory_analysis) by up to 2× versus the TPU target; FLOPs
+and collective bytes are dtype-honest.  Recorded per EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip (v5e)
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / link
+
+__all__ = ["load_records", "roofline_terms", "table", "run"]
+
+
+def load_records(out_dir: str = "runs/dryrun", tag: Optional[str] = None
+                 ) -> List[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as fh:
+            r = json.load(fh)
+        if (r.get("tag") or "") != (tag or ""):
+            continue
+        recs.append(r)
+    return recs
+
+
+def roofline_terms(rec: dict, *, flash_adjust: bool = False) -> Dict:
+    """Three terms from the trip-count-aware HLO analysis.
+
+    ``flash_adjust`` subtracts the flash-interior fusion traffic (softmax
+    temporaries that the Pallas kernel keeps in VMEM) from the memory
+    term — the HLO-quantified effect of the flash_attention kernel.
+    """
+    chips = rec["chips"]
+    a = rec.get("analyzed") or {}
+    flops_dev = a.get("flops_per_device") or \
+        rec["cost"]["flops_per_device"] or 0.0
+    bytes_dev = a.get("bytes_per_device") or \
+        rec["cost"]["bytes_per_device"] or 0.0
+    if flash_adjust:
+        bytes_dev = bytes_dev - a.get("bytes_flash_interior", 0)
+    coll_dev = a.get("collective_bytes",
+                     rec["collectives"]["total_bytes"])
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_dev / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    # MODEL_FLOPS: 6·N_active·D for training (fwd+bwd); 2·N_active·D for
+    # inference kinds (forward only) — the dry-run artifact stores 6×.
+    model_flops = rec["model_flops_active"]
+    if rec["kind"] in ("prefill", "decode"):
+        model_flops /= 3.0
+    hlo_flops_global = flops_dev * chips
+    useful = model_flops / hlo_flops_global if hlo_flops_global else 0.0
+    ideal_s = model_flops / (chips * PEAK_FLOPS)
+    bound = ideal_s / max(terms[dominant], 1e-30)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dominant,
+        "useful_flops_frac": useful, "mfu_bound": bound,
+        "mem_gib": (rec["memory"]["peak_bytes"] or 0) / 2**30,
+        "kind": rec["kind"],
+        "flash_interior_frac": (a.get("bytes_flash_interior", 0)
+                                / max(a.get("bytes_per_device", 1), 1)),
+    }
+
+
+def table(out_dir: str = "runs/dryrun", tag: Optional[str] = None,
+          mesh_filter: str = "16x16", flash_adjust: bool = False
+          ) -> List[dict]:
+    rows = [roofline_terms(r, flash_adjust=flash_adjust)
+            for r in load_records(out_dir, tag)
+            if r["mesh"] == mesh_filter]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    return rows
+
+
+def fmt_row(t: dict) -> str:
+    return (f"| {t['arch']:23s} | {t['shape']:11s} "
+            f"| {t['compute_s']*1e3:9.2f} | {t['memory_s']*1e3:9.2f} "
+            f"| {t['collective_s']*1e3:9.2f} | {t['dominant'][:4]:4s} "
+            f"| {t['useful_flops_frac']:5.2f} | {t['mfu_bound']:6.3f} "
+            f"| {t['mem_gib']:6.1f} |")
+
+
+HEADER = ("| arch                    | shape       | compute ms | "
+          "memory ms | collect ms | dom  | MF/H  | bound  | GiB/dev |")
+
+
+def run(print_fn=print, out_dir: str = "runs/dryrun"):
+    rows = table(out_dir)
+    if not rows:
+        print_fn("  (no dry-run artifacts; run repro.launch.dryrun first)")
+        return []
+    print_fn(HEADER)
+    for t in rows:
+        print_fn(fmt_row(t))
+    out = [{"name": f"roofline_{t['arch']}_{t['shape']}",
+            "compute_ms": round(t["compute_s"] * 1e3, 3),
+            "memory_ms": round(t["memory_s"] * 1e3, 3),
+            "collective_ms": round(t["collective_s"] * 1e3, 3),
+            "dominant": t["dominant"],
+            "mfu_bound": round(t["mfu_bound"], 4)} for t in rows]
+    return out

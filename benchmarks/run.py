@@ -1,0 +1,52 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus per-bench extra
+columns) and a human-readable transcript.  ``--scale`` grows the synthetic
+world; default sizes finish on a laptop CPU in a few minutes.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.5)
+    ap.add_argument("--only", default=None,
+                    help="table2|fig11|fig12|flume|kernels|roofline")
+    args = ap.parse_args()
+
+    from . import (bench_fig11, bench_fig12, bench_flume_overhead,
+                   bench_kernels, bench_table2, roofline)
+
+    benches = {
+        "table2": lambda: bench_table2.run(scale=args.scale),
+        "fig11": lambda: bench_fig11.run(scale=args.scale),
+        "fig12": lambda: bench_fig12.run(scale=args.scale),
+        "flume": lambda: bench_flume_overhead.run(scale=args.scale),
+        "kernels": lambda: bench_kernels.run(),
+        "roofline": lambda: roofline.run(),
+    }
+    all_rows = []
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        print(f"== {name} ==", flush=True)
+        try:
+            all_rows.extend(fn() or [])
+        except Exception as e:  # keep the harness going; report at end
+            print(f"  BENCH FAILED: {name}: {e!r}", file=sys.stderr)
+            all_rows.append({"name": f"{name}_FAILED", "error": repr(e)})
+
+    print("\nname,us_per_call,derived")
+    for r in all_rows:
+        us = r.get("us_per_call", r.get("exec_ms", r.get("compute_ms", "")))
+        derived = r.get("derived") or ",".join(
+            f"{k}={v}" for k, v in r.items()
+            if k not in ("name", "us_per_call", "derived"))
+        print(f"{r['name']},{us},\"{derived}\"")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Batched LM serving demo: prefill + fused decode + continuous batching.
+
+Serves a reduced-config architecture (pick any of the ten with --arch);
+this is the decode-shape path the dry-run lowers at 512-chip scale.
+
+Run:  PYTHONPATH=src python examples/serving.py --arch qwen1_5_0_5b
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.launch.serve import Request, Server
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1_5_0_5b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max_new", type=int, default=12)
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(0)
+    srv = Server(args.arch, reduced=True, max_batch=4)
+    reqs = [Request(i,
+                    rng.integers(0, srv.cfg.vocab_size,
+                                 int(rng.integers(4, 20))
+                                 ).astype(np.int32),
+                    max_new=args.max_new)
+            for i in range(args.requests)]
+    t0 = time.perf_counter()
+    srv.serve(reqs)
+    dt = time.perf_counter() - t0
+    print(f"arch={args.arch}: served {sum(r.done for r in reqs)}"
+          f"/{len(reqs)} requests in {dt:.2f}s  stats={srv.stats}")
+    for r in reqs[:3]:
+        print(f"  req {r.rid}: prompt[{len(r.prompt)}] → {r.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Checkpointing: sharded, async, atomic, elastic."""
+from .checkpoint import (CheckpointManager, latest_step, restore_checkpoint,
+                         save_checkpoint)
+
+__all__ = ["CheckpointManager", "latest_step", "restore_checkpoint",
+           "save_checkpoint"]

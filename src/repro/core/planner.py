@@ -1,0 +1,272 @@
+"""Query planning (paper §4.3.4).
+
+When a WFL query is submitted, a plan determines (i) which index probes
+serve the ``find()`` predicate and what residual must be filtered after the
+read, (ii) the minimal viable set of source columns to load (§4.3.3), (iii)
+the split between remote (Server) stages, shuffle (Sharder) stages, and the
+final Mixer stage, and (iv) the shard subset when sampling.
+
+The planner is shared by both engines: Warp:AdHoc executes the plan
+interactively; Warp:Flume translates the same plan into checkpointed batch
+stages ("the logical model of data processing is maintained", §4.3).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field as dc_field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..fdb.fdb import FDb, Shard
+from ..fdb.index import bitmap_full
+from ..fdb.schema import Schema
+from .exprs import (Between, BinOp, Expr, FieldRef, InRegion, InSet, Lit,
+                    MakeProto, required_paths)
+from .flow import (AggregateOp, DistinctOp, FilterOp, FindOp, Flow,
+                   FlattenOp, JoinOp, LimitOp, MapOp, ModelApplyOp, Op,
+                   SampleOp, SortOp, SubFlowOp)
+
+__all__ = ["IndexProbe", "Plan", "plan_flow", "split_find_pred",
+           "probe_shard"]
+
+
+# --------------------------------------------------------------------------
+# Index probes
+# --------------------------------------------------------------------------
+
+@dataclass
+class IndexProbe:
+    path: str
+    kind: str               # tag | range | location | area
+    args: tuple             # lookup arguments
+
+    def run(self, shard: Shard) -> np.ndarray:
+        idx = shard.index(self.path, self.kind)
+        if idx is None:
+            raise RuntimeError(f"missing index {self.kind} on {self.path}")
+        if self.kind == "tag":
+            vals = self.args[0]
+            return idx.lookup_any(vals) if isinstance(vals, tuple) \
+                else idx.lookup(vals)
+        if self.kind == "range":
+            lo, hi = self.args
+            return idx.lookup(lo, hi)
+        if self.kind == "location":
+            return idx.lookup(self.args[0])
+        if self.kind == "area":
+            return idx.lookup_region(self.args[0])
+        raise ValueError(self.kind)
+
+
+def _indexable(e: Expr, schema: Schema) -> Optional[IndexProbe]:
+    """Match one conjunct against the index vocabulary."""
+    if isinstance(e, InRegion):
+        f = e.field
+        if schema.has(f.path):
+            fld = schema.field(f.path)
+            if "location" in fld.indexes:
+                return IndexProbe(f.path, "location", (e.region,))
+            if "area" in fld.indexes:
+                return IndexProbe(f.path, "area", (e.region,))
+        return None
+    if isinstance(e, Between) and isinstance(e.a, FieldRef):
+        if schema.has(e.a.path) and "range" in schema.field(e.a.path).indexes:
+            return IndexProbe(e.a.path, "range", (e.lo, e.hi))
+        return None
+    if isinstance(e, BinOp) and e.op in ("eq", "le", "ge", "lt", "gt"):
+        fr, lit = None, None
+        if isinstance(e.a, FieldRef) and isinstance(e.b, Lit):
+            fr, lit, op = e.a, e.b.value, e.op
+        elif isinstance(e.b, FieldRef) and isinstance(e.a, Lit):
+            flip = {"le": "ge", "ge": "le", "lt": "gt", "gt": "lt",
+                    "eq": "eq"}
+            fr, lit, op = e.b, e.a.value, flip[e.op]
+        else:
+            return None
+        if not schema.has(fr.path):
+            return None
+        fld = schema.field(fr.path)
+        if op == "eq" and "tag" in fld.indexes:
+            return IndexProbe(fr.path, "tag", (lit,))
+        if "range" in fld.indexes:
+            if op == "eq":
+                return IndexProbe(fr.path, "range", (lit, lit))
+            if op in ("le", "lt"):
+                return IndexProbe(fr.path, "range", (None, lit))
+            if op in ("ge", "gt"):
+                return IndexProbe(fr.path, "range", (lit, None))
+        return None
+    if isinstance(e, InSet) and isinstance(e.a, FieldRef):
+        if schema.has(e.a.path) and "tag" in schema.field(e.a.path).indexes:
+            return IndexProbe(e.a.path, "tag", (tuple(e.values),))
+        return None
+    return None
+
+
+def split_find_pred(pred: Expr, schema: Schema
+                    ) -> Tuple[List[IndexProbe], Optional[Expr]]:
+    """AND-split a find() predicate into index probes + residual filter.
+
+    Conjuncts that match an index become probes (bitmap AND); everything
+    else is evaluated as a post-read filter.  A fully-indexable OR of two
+    indexable subtrees could be supported with bitmap OR; we conservatively
+    treat OR as residual (matching the paper's "index-based selections" for
+    conjunctive Tesseract queries).
+    """
+    conjuncts: List[Expr] = []
+
+    def walk(e: Expr):
+        if isinstance(e, BinOp) and e.op == "and":
+            walk(e.a)
+            walk(e.b)
+        else:
+            conjuncts.append(e)
+
+    walk(pred)
+    probes: List[IndexProbe] = []
+    residual: List[Expr] = []
+    for c in conjuncts:
+        p = _indexable(c, schema)
+        if p is not None:
+            probes.append(p)
+        else:
+            residual.append(c)
+    res: Optional[Expr] = None
+    for r in residual:
+        res = r if res is None else BinOp("and", res, r)
+    return probes, res
+
+
+def probe_shard(shard: Shard, probes: Sequence[IndexProbe]) -> np.ndarray:
+    """Intersect all probe bitmaps (device-side analog: kernels bitset)."""
+    bm = shard.all_bitmap()
+    for p in probes:
+        bm = bm & p.run(shard)
+    return bm
+
+
+# --------------------------------------------------------------------------
+# Plans
+# --------------------------------------------------------------------------
+
+@dataclass
+class Plan:
+    source: str
+    schema: Schema                   # source schema
+    shard_ids: List[int]             # after sampling
+    sample_fraction: float
+    probes: List[IndexProbe]
+    residual: Optional[Expr]
+    source_paths: List[str]          # minimal viable read set
+    server_ops: List[Op]             # record-parallel per shard
+    mixer_ops: List[Op]              # final combine stage
+    out_schema: Schema
+    stats: Dict[str, Any] = dc_field(default_factory=dict)
+
+    def describe(self) -> str:
+        lines = [f"plan for {self.source} "
+                 f"[{len(self.shard_ids)} shards, sample={self.sample_fraction}]",
+                 f"  read columns: {self.source_paths}"]
+        for p in self.probes:
+            lines.append(f"  index probe: {p.kind}({p.path})")
+        if self.residual is not None:
+            lines.append("  residual filter: yes")
+        lines.append(f"  server ops: "
+                     f"{[type(o).__name__ for o in self.server_ops]}")
+        lines.append(f"  mixer ops: "
+                     f"{[type(o).__name__ for o in self.mixer_ops]}")
+        return "\n".join(lines)
+
+
+def plan_flow(flow: Flow, catalog) -> Plan:
+    schema = catalog.schema_of(flow.source)
+    db: FDb = catalog.get(flow.source)
+
+    ops = list(flow.ops)
+
+    # -- sampling: select a shard subset (paper §6: "sampling selects only a
+    #    subset of shards to feed the query")
+    fraction = 1.0
+    kept_ops: List[Op] = []
+    for op in ops:
+        if isinstance(op, SampleOp):
+            fraction *= op.fraction
+        else:
+            kept_ops.append(op)
+    ops = kept_ops
+    num_shards = db.num_shards
+    n_keep = max(1, int(round(num_shards * fraction)))
+    shard_ids = list(range(n_keep))            # round-robin ingest ⇒ unbiased
+
+    # -- find(): split into probes + residual
+    probes: List[IndexProbe] = []
+    residual: Optional[Expr] = None
+    if ops and isinstance(ops[0], FindOp):
+        probes, residual = split_find_pred(ops[0].pred, schema)
+        ops = ops[1:]
+    elif any(isinstance(o, FindOp) for o in ops):
+        raise ValueError("find() must be the first operator on a source")
+
+    # -- server/mixer split: everything record-parallel runs on servers; the
+    #    first global operator (aggregate/sort/limit/distinct without keys)
+    #    and everything after it runs on the mixer over merged partials.
+    server_ops: List[Op] = []
+    mixer_ops: List[Op] = []
+    on_server = True
+    for op in ops:
+        if on_server and isinstance(op, (MapOp, FilterOp, FlattenOp,
+                                         ModelApplyOp, JoinOp, SubFlowOp)):
+            server_ops.append(op)
+        else:
+            on_server = False
+            mixer_ops.append(op)
+
+    # -- minimal viable schema: source columns any server-side expression or
+    #    raw-collect touches (paper §4.3.3)
+    cur_schema = schema
+    needed: set = set()
+    saw_map = False
+    for op in ([FindOp(residual)] if residual is not None else []) \
+            + [FindOp(p_expr) for p_expr in []] + server_ops + mixer_ops:
+        exprs: List[Expr] = []
+        if isinstance(op, FindOp) and op.pred is not None:
+            exprs = [op.pred]
+        elif isinstance(op, MapOp):
+            exprs = [e for _, e in op.make.fields]
+        elif isinstance(op, FilterOp):
+            exprs = [op.pred]
+        elif isinstance(op, SortOp):
+            exprs = [op.expr]
+        elif isinstance(op, DistinctOp) and op.expr is not None:
+            exprs = [op.expr]
+        elif isinstance(op, AggregateOp):
+            exprs = [e for _, e in op.spec.keys] + \
+                [e for _, _, e in op.spec.aggs if e is not None]
+        elif isinstance(op, (JoinOp,)):
+            exprs = [op.left_key]
+        elif isinstance(op, SubFlowOp):
+            exprs = [op.key]
+        elif isinstance(op, ModelApplyOp):
+            exprs = [e for _, e in op.inputs]
+        for e in exprs:
+            if saw_map:
+                break
+            needed.update(required_paths(e, schema))
+        if isinstance(op, (MapOp, AggregateOp)):
+            saw_map = True      # later ops see the derived schema
+    for p in probes:
+        # probes run on indices; location residual verification may still
+        # need the columns — include them (cheap) for exactness checks
+        if p.kind in ("location",):
+            needed.update({p.path + ".lat", p.path + ".lng"})
+    if not saw_map and not any(isinstance(o, AggregateOp)
+                               for o in server_ops + mixer_ops):
+        # raw collect: every stored column is semantically required
+        needed.update(schema.leaf_paths())
+    source_paths = sorted(x for x in needed
+                          if schema.has(x)
+                          and schema.field(x).virtual is None)
+
+    out_schema = flow.schema_after(catalog)
+    return Plan(flow.source, schema, shard_ids, fraction, probes, residual,
+                source_paths, server_ops, mixer_ops, out_schema)

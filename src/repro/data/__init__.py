@@ -1,0 +1,8 @@
+"""Data substrate: synthetic world generator + training pipelines."""
+from .synthetic import (generate_world, roads_schema, observations_schema,
+                        route_requests_schema, CITIES, BAY_AREA)
+from .pipeline import TokenPipeline, WflBatcher
+
+__all__ = ["generate_world", "roads_schema", "observations_schema",
+           "route_requests_schema", "CITIES", "BAY_AREA",
+           "TokenPipeline", "WflBatcher"]

@@ -1,0 +1,9 @@
+"""Execution engines: Warp:AdHoc (interactive) and Warp:Flume (batch)."""
+from .catalog import Catalog, StructureManager, ResourceManager, default_catalog
+from .adhoc import AdHocEngine, QueryResult, default_engine
+from .flume import FlumeEngine
+from .failures import FaultPlan, TaskFailure
+
+__all__ = ["Catalog", "StructureManager", "ResourceManager",
+           "default_catalog", "AdHocEngine", "QueryResult", "default_engine",
+           "FlumeEngine", "FaultPlan", "TaskFailure"]

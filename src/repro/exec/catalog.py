@@ -1,0 +1,105 @@
+"""Catalog & Structure managers (paper §4.3.1).
+
+"*Structure manager* maintains a global repository of Protocol Buffers
+structures defined statically or registered at run-time.  *Catalog manager*
+maintains pointers to all registered FDbs, and maps them to Servers for
+query and load distribution."
+
+The Catalog manager here also owns *execution isolation* (§4.3.5): each
+query must acquire a micro-cluster of server slots before it runs; when the
+pool is exhausted, queries wait in a FIFO queue ("if resources are not
+immediately available then the query waits in a queue").
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional
+
+from ..fdb.fdb import FDb
+from ..fdb.schema import Schema
+
+__all__ = ["Catalog", "StructureManager", "ResourceManager",
+           "default_catalog"]
+
+
+class StructureManager:
+    def __init__(self):
+        self._schemas: Dict[str, Schema] = {}
+
+    def register(self, schema: Schema) -> None:
+        self._schemas[schema.name] = schema
+
+    def get(self, name: str) -> Schema:
+        if name not in self._schemas:
+            raise KeyError(f"schema {name!r} not registered; known: "
+                           f"{sorted(self._schemas)}")
+        return self._schemas[name]
+
+    def names(self) -> List[str]:
+        return sorted(self._schemas)
+
+
+class ResourceManager:
+    """Server-slot pool with FIFO admission (execution isolation, §4.3.5)."""
+
+    def __init__(self, total_slots: int = 64):
+        self.total_slots = total_slots
+        self._free = total_slots
+        self._cv = threading.Condition()
+        self.stats = {"queries": 0, "waited": 0}
+
+    def acquire(self, want: int, timeout: Optional[float] = None) -> int:
+        """Blocks until ``min(want, total)`` slots are available; returns
+        the grant size."""
+        want = max(1, min(want, self.total_slots))
+        with self._cv:
+            self.stats["queries"] += 1
+            if self._free < want:
+                self.stats["waited"] += 1
+            ok = self._cv.wait_for(lambda: self._free >= want,
+                                   timeout=timeout)
+            if not ok:
+                raise TimeoutError("resource allocation timed out "
+                                   "(query queue)")
+            self._free -= want
+            return want
+
+    def release(self, n: int) -> None:
+        with self._cv:
+            self._free += n
+            self._cv.notify_all()
+
+
+class Catalog:
+    """Registered FDbs + schemas + the shared server pool."""
+
+    def __init__(self, server_slots: int = 64):
+        self._dbs: Dict[str, FDb] = {}
+        self.structures = StructureManager()
+        self.resources = ResourceManager(server_slots)
+
+    def register(self, db: FDb) -> None:
+        self._dbs[db.name] = db
+        self.structures.register(db.schema)
+
+    def get(self, name: str) -> FDb:
+        if name not in self._dbs:
+            raise KeyError(f"FDb {name!r} not registered; known: "
+                           f"{sorted(self._dbs)}")
+        return self._dbs[name]
+
+    def schema_of(self, name: str) -> Schema:
+        return self.get(name).schema
+
+    def names(self) -> List[str]:
+        return sorted(self._dbs)
+
+
+_DEFAULT: Optional[Catalog] = None
+
+
+def default_catalog() -> Catalog:
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = Catalog()
+    return _DEFAULT

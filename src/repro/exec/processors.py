@@ -1,0 +1,408 @@
+"""Stage processors (paper §4.3.6).
+
+"Each stage of a WFL pipeline is internally implemented using *processors*,
+such as find processor for find(), map processor for map(), and so on."
+Both engines share these: Warp:AdHoc drives them interactively per shard;
+Warp:Flume wraps each into a batch-stage function with checkpoints.
+
+Servers evaluate record-parallel processors over their shards' column
+batches and emit *partials*; the Mixer merges partials and runs the final
+stage (``aggregate_consume``, global sort/limit/distinct).
+"""
+from __future__ import annotations
+
+import numpy as np
+from dataclasses import dataclass, field as dc_field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from ..core.exprs import (AggSpec, CollectedTable, EvalContext, Expr,
+                          MakeProto, Val, eval_expr)
+from ..core.flow import (AggregateOp, DistinctOp, FilterOp, FlattenOp,
+                         JoinOp, LimitOp, MapOp, ModelApplyOp, Op, SortOp,
+                         SubFlowOp)
+from ..core.sketches import HyperLogLog, hash_values
+from ..fdb.columnar import Column, ColumnBatch
+from ..fdb.fdb import FDb
+from ..fdb.index import ids_from_bitmap
+from ..fdb.schema import BOOL, DOUBLE, INT, STRING, Schema
+
+__all__ = ["val_to_column", "apply_map", "apply_filter", "apply_flatten",
+           "apply_sort", "apply_limit", "apply_distinct", "apply_model",
+           "apply_hash_join", "apply_sub_flow", "aggregate_produce",
+           "merge_agg_partials", "aggregate_consume", "partition_by_hash",
+           "AggPartial", "run_record_ops"]
+
+
+# --------------------------------------------------------------------------
+# Column/batch helpers
+# --------------------------------------------------------------------------
+
+def val_to_column(v: Val, n: int) -> Column:
+    if v.table is not None:
+        raise TypeError("record-valued expression must be reduced to leaf "
+                        "fields before materialization (access .field)")
+    vals = v.values
+    if vals is None:
+        raise TypeError("cannot materialize non-columnar value")
+    vals = np.asarray(vals)
+    if not v.is_repeated and vals.ndim == 0:
+        vals = np.broadcast_to(vals, (n,)).copy()
+    return Column(vals, v.splits, v.vocab)
+
+
+def _dyn_schema(name: str, cols: Dict[str, Column]) -> Schema:
+    spec = {}
+    for p, c in cols.items():
+        if c.vocab is not None:
+            t = STRING
+        elif c.values.dtype == np.bool_:
+            t = BOOL
+        elif c.values.dtype.kind in "iu":
+            t = INT
+        else:
+            t = DOUBLE
+        spec[p] = (t, c.is_repeated)
+    return Schema.dynamic(name, spec)
+
+
+# --------------------------------------------------------------------------
+# Record-parallel processors
+# --------------------------------------------------------------------------
+
+def apply_map(batch: ColumnBatch, make: MakeProto) -> ColumnBatch:
+    ctx = EvalContext(batch)
+    cols = {name: val_to_column(eval_expr(e, ctx), batch.n)
+            for name, e in make.fields}
+    return ColumnBatch(_dyn_schema(batch.schema.name + "#map", cols), cols,
+                       batch.n)
+
+
+def apply_filter(batch: ColumnBatch, pred: Expr) -> ColumnBatch:
+    v = eval_expr(pred, EvalContext(batch))
+    if v.is_repeated:
+        raise TypeError("filter() predicate must be singular "
+                        "(reduce vectors with vsum/vmax/…)")
+    mask = np.asarray(v.values, dtype=bool)
+    if mask.ndim == 0:
+        mask = np.broadcast_to(mask, (batch.n,))
+    return batch.gather(np.nonzero(mask)[0])
+
+
+def apply_flatten(batch: ColumnBatch, path: str) -> ColumnBatch:
+    target = [p for p in batch.paths()
+              if p == path or p.startswith(path + ".")]
+    if not target:
+        raise KeyError(f"flatten: no columns under {path!r}")
+    sp = batch[target[0]].row_splits
+    if sp is None:
+        raise TypeError(f"flatten: {path!r} is not repeated")
+    lens = np.diff(sp)
+    n_new = int(sp[-1])
+    cols: Dict[str, Column] = {}
+    for p in batch.paths():
+        c = batch[p]
+        if p in target:
+            cols[p] = Column(c.values, None, c.vocab)
+        elif not c.is_repeated:
+            cols[p] = Column(np.repeat(c.values, lens), None, c.vocab)
+        else:
+            if np.array_equal(c.row_splits, sp):
+                cols[p] = Column(c.values, None, c.vocab)
+            else:
+                raise TypeError(
+                    f"flatten: {p!r} is repeated with a different shape")
+    return ColumnBatch(_dyn_schema(batch.schema.name + "#flat", cols), cols,
+                       n_new)
+
+
+def apply_sort(batch: ColumnBatch, op: SortOp) -> ColumnBatch:
+    v = eval_expr(op.expr, EvalContext(batch))
+    order = np.argsort(v.values, kind="stable")
+    if op.descending:
+        order = order[::-1]
+    return batch.gather(order)
+
+
+def apply_limit(batch: ColumnBatch, k: int) -> ColumnBatch:
+    if batch.n <= k:
+        return batch
+    return batch.gather(np.arange(k))
+
+
+def apply_distinct(batch: ColumnBatch, expr: Optional[Expr]) -> ColumnBatch:
+    if expr is not None:
+        v = eval_expr(expr, EvalContext(batch))
+        keys = hash_values(v.values, v.vocab)
+    else:
+        acc = np.zeros(batch.n, dtype=np.uint64)
+        for p in batch.paths():
+            c = batch[p]
+            if c.is_repeated:
+                continue
+            acc ^= hash_values(c.values, c.vocab) * np.uint64(
+                0x9E3779B97F4A7C15)
+        keys = acc
+    _, first = np.unique(keys, return_index=True)
+    return batch.gather(np.sort(first))
+
+
+def apply_model(batch: ColumnBatch, op: ModelApplyOp) -> ColumnBatch:
+    ctx = EvalContext(batch)
+    cols = dict(batch.columns)
+    ins = {name: np.asarray(eval_expr(e, ctx).values)
+           for name, e in op.inputs}
+    pred = np.asarray(op.model.apply_columns(ins))
+    if pred.shape[0] != batch.n:
+        raise ValueError("model output row count mismatch")
+    cols[op.output] = Column(pred.astype(np.float64)
+                             if pred.dtype.kind == "f" else pred)
+    return ColumnBatch(_dyn_schema(batch.schema.name + "#model", cols), cols,
+                       batch.n)
+
+
+# --------------------------------------------------------------------------
+# Joins
+# --------------------------------------------------------------------------
+
+def apply_hash_join(left: ColumnBatch, right: CollectedTable,
+                    left_key: Expr, alias: str) -> ColumnBatch:
+    """Inner hash join: left rows × matching right rows (paper Table 1)."""
+    lk = eval_expr(left_key, EvalContext(left))
+    if lk.is_repeated:
+        raise TypeError("join key must be singular")
+    rows = right.lookup_rows(np.asarray(lk.values), lk.vocab)
+    keep = np.nonzero(rows >= 0)[0]
+    lbatch = left.gather(keep)
+    rrows = rows[keep]
+    cols = dict(lbatch.columns)
+    for p, c in right.batch.columns.items():
+        cols[f"{alias}.{p}"] = c.gather(rrows)
+    return ColumnBatch(_dyn_schema(left.schema.name + "#join", cols), cols,
+                       lbatch.n)
+
+
+def apply_sub_flow(left: ColumnBatch, right_db: FDb, key: Expr,
+                   index_path: str, alias: str) -> ColumnBatch:
+    """Index join (paper ``sub_flow``): probe the right FDb's tag index per
+    key instead of scanning it — one output row per (left row, right doc)."""
+    lk = eval_expr(key, EvalContext(left))
+    if lk.is_repeated:
+        raise TypeError("sub_flow key must be singular")
+    keys = np.asarray(lk.values)
+    uniq = np.unique(keys)
+    left_rows: List[np.ndarray] = []
+    right_parts: List[ColumnBatch] = []
+    for shard in right_db.shards:
+        idx = shard.index(index_path, "tag")
+        if idx is None:
+            raise RuntimeError(f"sub_flow: no tag index on "
+                               f"{right_db.name}.{index_path}")
+        for u in uniq:
+            u_val = (lk.vocab[int(u)] if lk.vocab is not None else u)
+            bm = idx.lookup(u_val)
+            ids = ids_from_bitmap(bm, shard.n)
+            if ids.size == 0:
+                continue
+            lrows = np.nonzero(keys == u)[0]
+            # cross product left-rows × right-docs
+            left_rows.append(np.repeat(lrows, ids.size))
+            right_parts.append(shard.batch.gather(
+                np.tile(ids, lrows.size)))
+    if not left_rows:
+        empty_ids = np.zeros(0, dtype=np.int64)
+        lbatch = left.gather(empty_ids)
+        cols = dict(lbatch.columns)
+        for p in right_db.shards[0].batch.paths():
+            c = right_db.shards[0].batch[p]
+            cols[f"{alias}.{p}"] = c.gather(empty_ids)
+        return ColumnBatch(_dyn_schema(left.schema.name + "#subflow", cols),
+                           cols, 0)
+    lrows_all = np.concatenate(left_rows)
+    rbatch = ColumnBatch.concat(right_parts)
+    lbatch = left.gather(lrows_all)
+    cols = dict(lbatch.columns)
+    for p, c in rbatch.columns.items():
+        cols[f"{alias}.{p}"] = c
+    return ColumnBatch(_dyn_schema(left.schema.name + "#subflow", cols),
+                       cols, lbatch.n)
+
+
+def partition_by_hash(batch: ColumnBatch, key: Expr, num_parts: int
+                      ) -> List[ColumnBatch]:
+    """Sharder-style hash repartition (paper §4.3.5: "Sharders perform
+    intermediate shuffles and joins")."""
+    v = eval_expr(key, EvalContext(batch))
+    h = hash_values(v.values, v.vocab)
+    part = (h % np.uint64(num_parts)).astype(np.int64)
+    return [batch.gather(np.nonzero(part == i)[0]) for i in range(num_parts)]
+
+
+# --------------------------------------------------------------------------
+# Distributed aggregation (aggregate_produce / aggregate_consume, §4.3.4)
+# --------------------------------------------------------------------------
+
+@dataclass
+class AggPartial:
+    """Mergeable per-shard aggregation state."""
+    groups: Dict[tuple, List[Any]] = dc_field(default_factory=dict)
+
+
+def _key_tuples(batch: ColumnBatch, spec: AggSpec) -> List[tuple]:
+    ctx = EvalContext(batch)
+    key_arrays = []
+    for _, e in spec.keys:
+        v = eval_expr(e, ctx)
+        if v.is_repeated:
+            raise TypeError("group key must be singular")
+        vals = np.asarray(v.values)
+        if v.vocab is not None:
+            vv = np.asarray(v.vocab, dtype=object)
+            vals = vv[vals]
+        key_arrays.append(vals)
+    if not key_arrays:
+        return [()] * batch.n
+    return list(zip(*(a.tolist() for a in key_arrays)))
+
+
+def aggregate_produce(batch: ColumnBatch, spec: AggSpec) -> AggPartial:
+    ctx = EvalContext(batch)
+    keys = _key_tuples(batch, spec)
+    vals: List[Optional[np.ndarray]] = []
+    vocabs: List[Optional[list]] = []
+    for kind, name, e in spec.aggs:
+        if e is None:
+            vals.append(None)
+            vocabs.append(None)
+        else:
+            v = eval_expr(e, ctx)
+            if v.is_repeated:
+                raise TypeError(f"aggregate input {name!r} must be singular")
+            arr = np.asarray(v.values)
+            if arr.ndim == 0:
+                arr = np.broadcast_to(arr, (batch.n,))
+            vals.append(arr)
+            vocabs.append(v.vocab)
+
+    # Group rows by key (host groupby; the device path uses the
+    # segment_agg kernel over integer key codes — see kernels/segment_agg).
+    order: Dict[tuple, List[int]] = {}
+    for i, k in enumerate(keys):
+        order.setdefault(k, []).append(i)
+
+    part = AggPartial()
+    for k, rows in order.items():
+        rows_a = np.asarray(rows)
+        accs: List[Any] = []
+        for (kind, name, e), arr, voc in zip(spec.aggs, vals, vocabs):
+            if kind == "count":
+                accs.append(len(rows))
+            elif kind == "sum":
+                accs.append(float(arr[rows_a].sum()))
+            elif kind == "avg":
+                accs.append((float(arr[rows_a].sum()), len(rows)))
+            elif kind == "std_dev":
+                x = arr[rows_a].astype(np.float64)
+                accs.append((float(x.sum()), float((x * x).sum()), len(rows)))
+            elif kind == "min":
+                accs.append(float(arr[rows_a].min()))
+            elif kind == "max":
+                accs.append(float(arr[rows_a].max()))
+            elif kind == "approx_distinct":
+                accs.append(HyperLogLog().add(arr[rows_a], voc))
+            else:
+                raise ValueError(kind)
+        part.groups[k] = accs
+    return part
+
+
+def merge_agg_partials(parts: Sequence[AggPartial], spec: AggSpec
+                       ) -> AggPartial:
+    out = AggPartial()
+    for p in parts:
+        for k, accs in p.groups.items():
+            if k not in out.groups:
+                out.groups[k] = [a if not isinstance(a, HyperLogLog)
+                                 else HyperLogLog(a.p, a.registers.copy())
+                                 for a in accs]
+                continue
+            cur = out.groups[k]
+            for i, (kind, name, e) in enumerate(spec.aggs):
+                if kind == "count":
+                    cur[i] += accs[i]
+                elif kind == "sum":
+                    cur[i] += accs[i]
+                elif kind == "avg":
+                    cur[i] = (cur[i][0] + accs[i][0], cur[i][1] + accs[i][1])
+                elif kind == "std_dev":
+                    cur[i] = (cur[i][0] + accs[i][0],
+                              cur[i][1] + accs[i][1],
+                              cur[i][2] + accs[i][2])
+                elif kind == "min":
+                    cur[i] = min(cur[i], accs[i])
+                elif kind == "max":
+                    cur[i] = max(cur[i], accs[i])
+                elif kind == "approx_distinct":
+                    cur[i].merge(accs[i])
+    return out
+
+
+def aggregate_consume(part: AggPartial, spec: AggSpec) -> ColumnBatch:
+    """Finish accumulators → output batch (runs on the Mixer)."""
+    keys = sorted(part.groups.keys(), key=lambda t: tuple(map(str, t)))
+    n = len(keys)
+    cols: Dict[str, Column] = {}
+    for j, (name, _) in enumerate(spec.keys):
+        col_vals = [k[j] for k in keys]
+        if col_vals and isinstance(col_vals[0], str):
+            cols[name] = Column.from_strings(col_vals)
+        else:
+            cols[name] = Column(np.asarray(col_vals))
+    for i, (kind, name, e) in enumerate(spec.aggs):
+        accs = [part.groups[k][i] for k in keys]
+        if kind == "count":
+            cols[name] = Column(np.asarray(accs, dtype=np.int64))
+        elif kind in ("sum", "min", "max"):
+            cols[name] = Column(np.asarray(accs, dtype=np.float64))
+        elif kind == "avg":
+            cols[name] = Column(np.asarray(
+                [s / max(c, 1) for s, c in accs], dtype=np.float64))
+        elif kind == "std_dev":
+            out = []
+            for s, s2, c in accs:
+                m = s / max(c, 1)
+                out.append(np.sqrt(max(s2 / max(c, 1) - m * m, 0.0)))
+            cols[name] = Column(np.asarray(out, dtype=np.float64))
+        elif kind == "approx_distinct":
+            cols[name] = Column(np.asarray([h.estimate() for h in accs],
+                                           dtype=np.float64))
+    return ColumnBatch(_dyn_schema("agg", cols), cols, n)
+
+
+# --------------------------------------------------------------------------
+# Server-side record pipeline
+# --------------------------------------------------------------------------
+
+def run_record_ops(batch: ColumnBatch, ops: Sequence[Op], catalog,
+                   collected_cache: Optional[Dict[int, CollectedTable]] = None
+                   ) -> ColumnBatch:
+    """Run record-parallel ops on one shard's (already index-selected) batch."""
+    for op in ops:
+        if isinstance(op, MapOp):
+            batch = apply_map(batch, op.make)
+        elif isinstance(op, FilterOp):
+            batch = apply_filter(batch, op.pred)
+        elif isinstance(op, FlattenOp):
+            batch = apply_flatten(batch, op.path)
+        elif isinstance(op, ModelApplyOp):
+            batch = apply_model(batch, op)
+        elif isinstance(op, JoinOp):
+            table = collected_cache[id(op)] if collected_cache else None
+            if table is None:
+                raise RuntimeError("join table missing from broadcast cache")
+            batch = apply_hash_join(batch, table, op.left_key, op.alias)
+        elif isinstance(op, SubFlowOp):
+            batch = apply_sub_flow(batch, catalog.get(op.right_fdb), op.key,
+                                   op.index_path, op.alias)
+        else:
+            raise TypeError(f"non-record op on server: {type(op).__name__}")
+    return batch

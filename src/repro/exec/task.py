@@ -1,0 +1,74 @@
+"""The per-shard server task, shared by Warp:AdHoc and Warp:Flume.
+
+This is the unit of distribution and the unit of failure: index probe →
+selective column read → residual filter → record-parallel ops →
+(aggregate_produce | pre-sorted batch).  Both engines schedule it; they
+differ only in what happens when it fails or lags (§4.3.5 vs §4.3.6).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..core.exprs import CollectedTable
+from ..core.flow import AggregateOp, LimitOp, SortOp
+from ..core.planner import Plan, probe_shard
+from ..fdb.columnar import ColumnBatch
+from ..fdb.fdb import FDb
+from ..fdb.index import ids_from_bitmap
+from .failures import FaultPlan
+from .processors import (AggPartial, aggregate_produce, apply_filter,
+                         apply_limit, apply_sort, run_record_ops)
+
+__all__ = ["ShardPartial", "run_shard_task"]
+
+
+@dataclass
+class ShardPartial:
+    shard_id: int = -1
+    batch: Optional[ColumnBatch] = None
+    agg: Optional[AggPartial] = None
+    rows_scanned: int = 0
+    rows_selected: int = 0
+    bytes_read: int = 0
+    cpu_ms: float = 0.0
+    io_ms: float = 0.0
+
+
+def run_shard_task(db: FDb, plan: Plan, shard_id: int,
+                   tables: Optional[Dict[int, CollectedTable]],
+                   catalog, fault_plan: Optional[FaultPlan] = None,
+                   stage: str = "server") -> ShardPartial:
+    if fault_plan is not None:
+        fault_plan.check(stage, shard_id)
+    t0 = time.perf_counter()
+    shard = db.shards[shard_id]
+    bm = probe_shard(shard, plan.probes)
+    ids = ids_from_bitmap(bm, shard.n)
+    t1 = time.perf_counter()
+    paths = [p for p in plan.source_paths if p in shard.batch.columns]
+    if not paths:
+        paths = shard.batch.paths()
+    batch = shard.batch.select_paths(paths).gather(ids)
+    t2 = time.perf_counter()
+    out = ShardPartial(shard_id=shard_id, rows_scanned=shard.n,
+                       rows_selected=len(ids), bytes_read=batch.nbytes(),
+                       io_ms=(t2 - t1) * 1e3)
+    if plan.residual is not None:
+        batch = apply_filter(batch, plan.residual)
+    batch = run_record_ops(batch, plan.server_ops, catalog, tables)
+    if plan.mixer_ops and isinstance(plan.mixer_ops[0], AggregateOp):
+        out.agg = aggregate_produce(batch, plan.mixer_ops[0].spec)
+    else:
+        pre = batch
+        if (len(plan.mixer_ops) >= 2
+                and isinstance(plan.mixer_ops[0], SortOp)
+                and isinstance(plan.mixer_ops[1], LimitOp)):
+            pre = apply_limit(apply_sort(pre, plan.mixer_ops[0]),
+                              plan.mixer_ops[1].k)
+        out.batch = pre
+    out.cpu_ms = (time.perf_counter() - t0) * 1e3
+    return out

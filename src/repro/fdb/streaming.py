@@ -1,0 +1,71 @@
+"""Read-write (streaming) FDb (paper §4.1.1).
+
+The paper implements read-write FDbs on Bigtable "for streaming FDbs,
+including for query profiling and data ingestion logs".  We reproduce the
+abstraction on the same key-value contract: an append memtable that flushes
+into immutable indexed shards; readers see memtable + flushed shards merged.
+WarpFlow itself uses this for its query-profiling log (exec.adhoc writes one
+record per query stage).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Sequence
+
+from .columnar import ColumnBatch
+from .fdb import FDb, Shard, _build_shard_indexes
+from .schema import Schema
+
+__all__ = ["StreamingFDb"]
+
+
+class StreamingFDb:
+    def __init__(self, name: str, schema: Schema,
+                 flush_threshold: int = 4096):
+        self.name = name
+        self.schema = schema
+        self.flush_threshold = int(flush_threshold)
+        self._memtable: List[dict] = []
+        self._shards: List[Shard] = []
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------- writes
+    def append(self, record: dict) -> None:
+        with self._lock:
+            self._memtable.append(record)
+            if len(self._memtable) >= self.flush_threshold:
+                self._flush_locked()
+
+    def extend(self, records: Sequence[dict]) -> None:
+        with self._lock:
+            self._memtable.extend(records)
+            while len(self._memtable) >= self.flush_threshold:
+                self._flush_locked()
+
+    def flush(self) -> None:
+        with self._lock:
+            if self._memtable:
+                self._flush_locked()
+
+    def _flush_locked(self) -> None:
+        chunk = self._memtable[:self.flush_threshold]
+        self._memtable = self._memtable[self.flush_threshold:]
+        batch = ColumnBatch.from_records(self.schema, chunk)
+        self._shards.append(Shard(batch,
+                                  _build_shard_indexes(self.schema, batch)))
+
+    # -------------------------------------------------------------- reads
+    def snapshot(self) -> FDb:
+        """Immutable read view: flushed shards + memtable as a final shard."""
+        with self._lock:
+            shards = list(self._shards)
+            if self._memtable:
+                batch = ColumnBatch.from_records(self.schema, self._memtable)
+                shards.append(
+                    Shard(batch, _build_shard_indexes(self.schema, batch)))
+        return FDb(self.name, self.schema, shards)
+
+    @property
+    def num_docs(self) -> int:
+        with self._lock:
+            return (sum(s.n for s in self._shards) + len(self._memtable))

@@ -1,0 +1,154 @@
+"""Data de-noising (paper §4.1.3, Figure 6).
+
+Smartphone location fixes are 3–30 m off; the paper turns a noisy point into
+a *probabilistic location* (mean + confidence radius → circular area) and a
+noisy trace into a *probabilistic path* (time-ordered curvilinear strip),
+then snaps them onto a well-defined space (POIs, road segments) with a
+scored model.
+
+We reproduce:
+  * ``prob_location`` / ``prob_path`` — the area representations, built on
+    :class:`repro.geo.areatree.AreaTree` so fuzzy selections compose with the
+    area index.
+  * ``snap_points`` — point → nearest candidate, scored by a Gaussian
+    distance likelihood × a popularity prior (the paper's "popularity of
+    places" signal).  Scoring is vectorized jnp so it can run inside WFL
+    ``map()`` stages and, per §5, be swapped for a learned model.
+  * ``snap_path`` — trace → road-segment sequence via Viterbi over an HMM
+    whose emissions are distance likelihoods and whose transitions penalize
+    discontinuity (the standard map-matching formulation, vectorized).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .areatree import AreaTree
+from .geometry import point_segment_dist
+
+__all__ = ["prob_location", "prob_path", "snap_points", "snap_path",
+           "SnapModel"]
+
+
+def prob_location(ix: int, iy: int, accuracy_m: float, meters_per_unit: float,
+                  max_level: int = 8) -> AreaTree:
+    """Probabilistic location: mean point + confidence radius → circular area."""
+    r_units = max(accuracy_m / meters_per_unit, 1.0)
+    return AreaTree.from_circle(ix, iy, r_units, max_level=max_level)
+
+
+def prob_path(xs, ys, accuracy_m: float, meters_per_unit: float,
+              max_level: int = 7) -> AreaTree:
+    """Probabilistic path: waypoints + noise strength → envelope strip.
+
+    Note (paper): this is *not* the bbox of the points — it is an envelope
+    around the path, so time ordering is preserved by construction.
+    """
+    w_units = max(accuracy_m / meters_per_unit, 1.0)
+    return AreaTree.from_path(xs, ys, w_units, max_level=max_level)
+
+
+@dataclass
+class SnapModel:
+    """Scoring model for snapping: Gaussian distance × popularity prior.
+
+    ``sigma_m`` is the expected GPS noise.  ``w_dist``/``w_pop`` are log-space
+    weights — a learned replacement (paper §5) only has to produce the same
+    log-score interface.
+    """
+
+    sigma_m: float = 15.0
+    w_dist: float = 1.0
+    w_pop: float = 0.25
+
+    def log_score(self, dist_m, popularity):
+        d = jnp.asarray(dist_m, dtype=jnp.float32)
+        p = jnp.asarray(popularity, dtype=jnp.float32)
+        return (-self.w_dist * 0.5 * (d / self.sigma_m) ** 2
+                + self.w_pop * jnp.log1p(p))
+
+
+def snap_points(px, py, cand_x, cand_y, cand_pop, meters_per_unit: float,
+                model: SnapModel | None = None,
+                max_dist_m: float = 100.0) -> Tuple[np.ndarray, np.ndarray]:
+    """Snap each noisy point to the best candidate POI.
+
+    Returns (candidate index per point, log-score); index −1 where no
+    candidate is within ``max_dist_m``.
+    """
+    model = model or SnapModel()
+    px = jnp.asarray(np.asarray(px, dtype=np.float64) * meters_per_unit,
+                     dtype=jnp.float32)
+    py = jnp.asarray(np.asarray(py, dtype=np.float64) * meters_per_unit,
+                     dtype=jnp.float32)
+    cx = jnp.asarray(np.asarray(cand_x, dtype=np.float64) * meters_per_unit,
+                     dtype=jnp.float32)
+    cy = jnp.asarray(np.asarray(cand_y, dtype=np.float64) * meters_per_unit,
+                     dtype=jnp.float32)
+    pop = jnp.asarray(cand_pop, dtype=jnp.float32)
+
+    d = jnp.sqrt((px[:, None] - cx[None, :]) ** 2
+                 + (py[:, None] - cy[None, :]) ** 2)          # [P, C] meters
+    score = model.log_score(d, pop[None, :])
+    score = jnp.where(d <= max_dist_m, score, -jnp.inf)
+    best = jnp.argmax(score, axis=1)
+    best_score = jnp.max(score, axis=1)
+    best = jnp.where(jnp.isfinite(best_score), best, -1)
+    return np.asarray(best), np.asarray(best_score)
+
+
+def snap_path(px, py, seg_ax, seg_ay, seg_bx, seg_by, seg_pop,
+              meters_per_unit: float, model: SnapModel | None = None,
+              transition_scale_m: float = 50.0) -> np.ndarray:
+    """Map-match a noisy trace to road segments (paper Fig. 6).
+
+    HMM over (waypoint × segment): emission = Gaussian distance likelihood ×
+    popularity prior; transition penalizes hopping between far-apart
+    segments.  Viterbi is a ``lax.scan`` over waypoints with a [S]-state
+    value vector — O(T·S²) vectorized.
+
+    Returns the best segment index per waypoint.
+    """
+    model = model or SnapModel()
+    mpu = meters_per_unit
+    # Emission distances: waypoints × segments, meters.
+    d = point_segment_dist(
+        np.asarray(px, dtype=np.float64)[:, None],
+        np.asarray(py, dtype=np.float64)[:, None],
+        np.asarray(seg_ax, dtype=np.float64)[None, :],
+        np.asarray(seg_ay, dtype=np.float64)[None, :],
+        np.asarray(seg_bx, dtype=np.float64)[None, :],
+        np.asarray(seg_by, dtype=np.float64)[None, :]) * mpu
+    emit = np.asarray(
+        SnapModel.log_score(model, d, np.asarray(seg_pop)[None, :]))
+
+    # Transition: distance between segment midpoints.
+    mx = (np.asarray(seg_ax, dtype=np.float64)
+          + np.asarray(seg_bx, dtype=np.float64)) / 2 * mpu
+    my = (np.asarray(seg_ay, dtype=np.float64)
+          + np.asarray(seg_by, dtype=np.float64)) / 2 * mpu
+    hop = np.hypot(mx[:, None] - mx[None, :], my[:, None] - my[None, :])
+    trans = jnp.asarray(-hop / transition_scale_m, dtype=jnp.float32)  # [S,S]
+
+    emit_j = jnp.asarray(emit, dtype=jnp.float32)                      # [T,S]
+
+    def step(carry, e_t):
+        # carry: [S] best log-prob ending in each state
+        cand = carry[:, None] + trans                                  # [S,S]
+        best_prev = jnp.argmax(cand, axis=0)                           # [S]
+        val = jnp.max(cand, axis=0) + e_t
+        return val, best_prev
+
+    v0 = emit_j[0]
+    vT, back = jax.lax.scan(step, v0, emit_j[1:])
+    back = np.asarray(back)                                            # [T-1,S]
+    T = emit.shape[0]
+    out = np.zeros(T, dtype=np.int64)
+    out[-1] = int(np.argmax(np.asarray(vT)))
+    for t in range(T - 2, -1, -1):
+        out[t] = back[t, out[t + 1]]
+    return out

@@ -1,0 +1,83 @@
+"""Pallas stream-compaction (prefix-scan) kernel.
+
+After index intersection, the engine needs the *positions* of set mask bits
+to gather selected documents.  The parallel primitive is an exclusive
+prefix sum over the mask; the scatter that finishes compaction is left to
+XLA (it is memory-bound either way).
+
+The kernel walks row-blocks sequentially, carrying the running count in
+SMEM scratch — the canonical "scan with carry" pattern on TPU where grid
+steps execute in order.  Within a block, a 2-D (8, L) tile is scanned
+row-major: lane-wise cumsum + per-sublane offsets.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["mask_prefix_sum", "compact"]
+
+DEFAULT_BLOCK = 8 * 512
+
+
+def _scan_kernel(mask_ref, pos_ref, total_ref, carry_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_ref[0, 0] = 0
+
+    x = mask_ref[...].astype(jnp.int32)            # (1, 8, L)
+    lane_cs = jnp.cumsum(x, axis=2)                # inclusive along lanes
+    row_tot = lane_cs[:, :, -1]                    # (1, 8)
+    row_off = jnp.cumsum(row_tot, axis=1) - row_tot
+    carry = carry_ref[0, 0]
+    pos_ref[...] = lane_cs - x + row_off[:, :, None] + carry   # exclusive
+    block_total = row_tot.sum()
+    carry_ref[0, 0] = carry + block_total
+    total_ref[0, 0] = carry + block_total          # running total per block
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def mask_prefix_sum(mask: jnp.ndarray, block: int = DEFAULT_BLOCK,
+                    interpret: bool = False):
+    """mask [N] bool → (exclusive prefix sum [N] int32, count int32)."""
+    n = mask.shape[0]
+    padded = pl.cdiv(n, block) * block
+    m_p = jnp.zeros((padded,), jnp.bool_).at[:n].set(mask)
+    m2 = m_p.reshape(-1, 8, block // 8)
+    nblk = m2.shape[0]
+    pos, totals = pl.pallas_call(
+        _scan_kernel,
+        grid=(nblk,),
+        in_specs=[pl.BlockSpec((1, 8, block // 8), lambda i: (i, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((1, 8, block // 8), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(m2.shape, jnp.int32),
+            jax.ShapeDtypeStruct((nblk, 1), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((1, 1), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(m2)
+    return pos.reshape(-1)[:n], totals[-1, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def compact(mask: jnp.ndarray, block: int = DEFAULT_BLOCK,
+            interpret: bool = False):
+    """mask [N] → (indices [N] int32, -1 padded; count int32)."""
+    n = mask.shape[0]
+    pos, count = mask_prefix_sum(mask, block=block, interpret=interpret)
+    slot = jnp.where(mask, pos, n)
+    idx = jnp.full((n,), -1, jnp.int32)
+    idx = idx.at[slot].set(jnp.arange(n, dtype=jnp.int32), mode="drop")
+    return idx, count

@@ -1,0 +1,95 @@
+"""Unified jit'd entry points for every kernel, with implementation select.
+
+``impl``:
+  * ``"pallas"``     — compiled Pallas kernel (TPU target)
+  * ``"interpret"``  — Pallas kernel body interpreted on CPU (correctness
+                       validation of the exact kernel code)
+  * ``"reference"``  — pure-jnp oracle (CPU tests at scale; the 512-device
+                       dry-run lowers this path)
+
+Default: ``pallas`` on TPU backends, ``reference`` elsewhere — override
+with ``REPRO_KERNEL_IMPL`` or per call.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+from . import bitset as _bitset
+from . import compact as _compact
+from . import flash_attention as _fa
+from . import ref as _ref
+from . import segment_agg as _seg
+from . import ssm_scan as _ssm
+
+__all__ = ["default_impl", "bitmap_binary", "bitmap_intersect", "compact",
+           "segment_agg", "flash_attention", "ssm_scan"]
+
+
+def default_impl() -> str:
+    env = os.environ.get("REPRO_KERNEL_IMPL")
+    if env:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "reference"
+
+
+def _resolve(impl: Optional[str]) -> str:
+    impl = impl or default_impl()
+    if impl not in ("pallas", "interpret", "reference"):
+        raise ValueError(f"unknown kernel impl {impl!r}")
+    return impl
+
+
+def bitmap_binary(a, b, op: str = "and", impl: Optional[str] = None):
+    impl = _resolve(impl)
+    if impl == "reference":
+        return {"and": _ref.bitset_and_ref, "or": _ref.bitset_or_ref,
+                "andnot": _ref.bitset_andnot_ref}[op](a, b)
+    return _bitset.bitset_binary(a, b, op=op,
+                                 interpret=(impl == "interpret"))
+
+
+def bitmap_intersect(stack, impl: Optional[str] = None):
+    impl = _resolve(impl)
+    if impl == "reference":
+        bm = _ref.bitmap_intersect_ref(stack)
+        return bm, _ref.popcount_ref(bm)
+    return _bitset.bitmap_intersect(stack, interpret=(impl == "interpret"))
+
+
+def compact(mask, impl: Optional[str] = None):
+    impl = _resolve(impl)
+    if impl == "reference":
+        return _ref.compact_ref(mask)
+    return _compact.compact(mask, interpret=(impl == "interpret"))
+
+
+def segment_agg(group_ids, values, num_groups: int,
+                impl: Optional[str] = None):
+    impl = _resolve(impl)
+    if impl == "reference":
+        return _ref.segment_agg_ref(group_ids, values, num_groups)
+    return _seg.segment_agg(group_ids, values, num_groups,
+                            interpret=(impl == "interpret"))
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    softcap=None, scale=None, impl: Optional[str] = None,
+                    **block_kw):
+    impl = _resolve(impl)
+    if impl == "reference":
+        return _ref.flash_attention_ref(q, k, v, causal=causal,
+                                        window=window, softcap=softcap,
+                                        scale=scale)
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, scale=scale,
+                               interpret=(impl == "interpret"), **block_kw)
+
+
+def ssm_scan(a, bx, impl: Optional[str] = None, **kw):
+    impl = _resolve(impl)
+    if impl == "reference":
+        return _ref.ssm_scan_ref(a, bx)
+    return _ssm.ssm_scan(a, bx, interpret=(impl == "interpret"), **kw)

@@ -1,0 +1,168 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the semantic ground truth: kernel unit tests sweep shapes/dtypes
+and assert_allclose against these; the 512-device dry-run lowers *these*
+(kernels compile for the TPU target, not the CPU host platform), so the
+roofline FLOPs/bytes come from the same math the kernels implement.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["bitset_and_ref", "bitset_or_ref", "bitset_andnot_ref",
+           "popcount_ref", "bitmap_intersect_ref", "compact_ref",
+           "segment_agg_ref", "flash_attention_ref", "ssm_scan_ref",
+           "decode_attention_ref"]
+
+
+# ----------------------------------------------------------------- bitsets
+
+def bitset_and_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return a & b
+
+
+def bitset_or_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return a | b
+
+
+def bitset_andnot_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return a & ~b
+
+
+def popcount_ref(a: jnp.ndarray) -> jnp.ndarray:
+    """Total set bits over a uint32 word array → int32 scalar."""
+    x = a.astype(jnp.uint32)
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    per_word = (x * jnp.uint32(0x01010101)) >> jnp.uint32(24)
+    return per_word.astype(jnp.int32).sum()
+
+
+def bitmap_intersect_ref(stack: jnp.ndarray) -> jnp.ndarray:
+    """AND-reduce K probe bitmaps [K, W] → [W] (the find() hot loop)."""
+    return jax.lax.reduce(stack, jnp.uint32(0xFFFFFFFF),
+                          jax.lax.bitwise_and, dimensions=(0,))
+
+
+# ------------------------------------------------------------- compaction
+
+def compact_ref(mask: jnp.ndarray):
+    """mask [N] bool → (indices [N] int32 with -1 padding, count int32).
+
+    Stream compaction: indices[:count] are the positions of set bits in
+    ascending order; the tail is -1.
+    """
+    n = mask.shape[0]
+    mask_i = mask.astype(jnp.int32)
+    count = mask_i.sum()
+    pos = jnp.where(mask, jnp.cumsum(mask_i) - 1, n)  # target slot per hit
+    src = jnp.arange(n, dtype=jnp.int32)
+    idx = jnp.full((n,), -1, dtype=jnp.int32)
+    idx = idx.at[pos].set(src, mode="drop")
+    return idx, count.astype(jnp.int32)
+
+
+# -------------------------------------------------------- group-by partials
+
+def segment_agg_ref(group_ids: jnp.ndarray, values: jnp.ndarray,
+                    num_groups: int):
+    """Per-group (count, sum, sumsq) — aggregate_produce's inner loop.
+
+    group_ids [N] int32 in [0, num_groups); ids < 0 are masked out.
+    """
+    valid = group_ids >= 0
+    gid = jnp.where(valid, group_ids, 0)
+    v = jnp.where(valid, values.astype(jnp.float32), 0.0)
+    ones = valid.astype(jnp.float32)
+    count = jax.ops.segment_sum(ones, gid, num_segments=num_groups)
+    s = jax.ops.segment_sum(v, gid, num_segments=num_groups)
+    s2 = jax.ops.segment_sum(v * v, gid, num_segments=num_groups)
+    return count, s, s2
+
+
+# --------------------------------------------------------- flash attention
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: int | None = None,
+                        softcap: float | None = None,
+                        scale: float | None = None):
+    """Reference GQA attention.
+
+    q [B, Hq, Sq, D]; k, v [B, Hkv, Skv, D]; Hq % Hkv == 0.
+    ``window``: sliding-window size (keys within [i-window+1, i]).
+    ``softcap``: tanh logit soft-capping (Gemma-style).
+    Decode: Sq may be 1 with Skv = cache length (causal mask then permits
+    everything up to the cache length).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    # query i sits at absolute position (skv - sq + i): supports decode
+    qpos = jnp.arange(sq) + (skv - sq)
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_len, *, window=None,
+                         softcap=None):
+    """Single-token decode: q [B, Hq, 1, D] against a [B, Hkv, Smax, D]
+    cache of which the first ``cache_len`` entries are valid."""
+    b, hq, _, d = q.shape
+    _, hkv, smax, _ = k_cache.shape
+    group = hq // hkv
+    scale = 1.0 / np.sqrt(d)
+    k = jnp.repeat(k_cache, group, axis=1)
+    v = jnp.repeat(v_cache, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    kpos = jnp.arange(smax)
+    mask = kpos[None, :] < cache_len          # [B?, Smax] broadcast
+    if window is not None:
+        mask = mask & (kpos[None, :] >= cache_len - window)
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+# ------------------------------------------------------------- SSM scan
+
+def ssm_scan_ref(a, bx, h0=None):
+    """Diagonal linear recurrence h_t = a_t ⊙ h_{t-1} + bx_t.
+
+    a, bx: [B, L, D] (elementwise decay and input); returns hs [B, L, D]
+    and final state [B, D].  This is the Mamba/mLSTM inner scan with the
+    state dimension folded into D.
+    """
+    B, L, D = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, D), a.dtype)
+
+    def step(h, inputs):
+        a_t, bx_t = inputs
+        h = a_t * h + bx_t
+        return h, h
+
+    hT, hs = jax.lax.scan(step, h0, (jnp.moveaxis(a, 1, 0),
+                                     jnp.moveaxis(bx, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1), hT

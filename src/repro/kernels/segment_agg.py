@@ -1,0 +1,93 @@
+"""Pallas group-by partial-aggregation kernel (aggregate_produce, §4.3.4).
+
+Per-shard servers reduce (count, sum, sumsq) per group — enough to finish
+count/sum/avg/std_dev at the Mixer.  On TPU the natural formulation is a
+one-hot matmul: for a row tile T and group tile G,
+
+    onehot[T, G] = (gid[:, None] == group_base + iota(G))
+    sum   += onehotᵀ @ v          (MXU)
+    sumsq += onehotᵀ @ v²         (MXU)
+    count += onehotᵀ @ 1          (MXU)
+
+which turns a scatter-heavy reduction into dense systolic work — the
+paper's CPU hash aggregation re-thought for the MXU (see DESIGN.md
+§hardware adaptation).  Grid: (group-blocks, row-blocks); row dimension is
+sequential and accumulates into the same output block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["segment_agg"]
+
+DEFAULT_ROW_BLOCK = 512
+DEFAULT_GROUP_BLOCK = 128
+
+
+def _seg_kernel(gid_ref, val_ref, cnt_ref, sum_ref, ssq_ref, *,
+                group_block: int):
+    g = pl.program_id(0)
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        ssq_ref[...] = jnp.zeros_like(ssq_ref)
+
+    gid = gid_ref[...]                                # (1, T) int32
+    v = val_ref[...].astype(jnp.float32)              # (1, T)
+    base = g * group_block
+    groups = base + jax.lax.broadcasted_iota(jnp.int32, (1, group_block), 1)
+    onehot = (gid[0, :, None] == groups[0, None, :]).astype(jnp.float32)
+    vv = v[0]                                         # (T,)
+    cnt_ref[...] += jnp.sum(onehot, axis=0, keepdims=True)
+    sum_ref[...] += (vv @ onehot)[None, :]            # (1, G) via MXU
+    ssq_ref[...] += ((vv * vv) @ onehot)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("num_groups", "row_block",
+                                             "group_block", "interpret"))
+def segment_agg(group_ids: jnp.ndarray, values: jnp.ndarray,
+                num_groups: int, row_block: int = DEFAULT_ROW_BLOCK,
+                group_block: int = DEFAULT_GROUP_BLOCK,
+                interpret: bool = False):
+    """group_ids [N] int32 (−1 = masked), values [N] → count/sum/sumsq [G]."""
+    n = group_ids.shape[0]
+    padded_n = pl.cdiv(n, row_block) * row_block
+    padded_g = pl.cdiv(num_groups, group_block) * group_block
+    gid = jnp.full((padded_n,), -1, jnp.int32).at[:n].set(
+        group_ids.astype(jnp.int32))
+    val = jnp.zeros((padded_n,), jnp.float32).at[:n].set(
+        values.astype(jnp.float32))
+    gid2 = gid.reshape(1, -1)
+    val2 = val.reshape(1, -1)
+    n_row_blocks = padded_n // row_block
+    n_grp_blocks = padded_g // group_block
+    cnt, s, s2 = pl.pallas_call(
+        functools.partial(_seg_kernel, group_block=group_block),
+        grid=(n_grp_blocks, n_row_blocks),
+        in_specs=[
+            pl.BlockSpec((1, row_block), lambda g, t: (0, t)),
+            pl.BlockSpec((1, row_block), lambda g, t: (0, t)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, group_block), lambda g, t: (0, g)),
+            pl.BlockSpec((1, group_block), lambda g, t: (0, g)),
+            pl.BlockSpec((1, group_block), lambda g, t: (0, g)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, padded_g), jnp.float32),
+            jax.ShapeDtypeStruct((1, padded_g), jnp.float32),
+            jax.ShapeDtypeStruct((1, padded_g), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(gid2, val2)
+    return (cnt[0, :num_groups], s[0, :num_groups], s2[0, :num_groups])

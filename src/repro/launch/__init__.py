@@ -1,0 +1,4 @@
+"""Launch layer: meshes, dry-run, training and serving drivers."""
+from .mesh import make_production_mesh, make_local_mesh
+
+__all__ = ["make_production_mesh", "make_local_mesh"]

@@ -1,0 +1,239 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import/init: jax locks the device count on first
+# use, and only the dry-run may see 512 placeholder host devices.
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape × mesh) cell, ``.lower().compile()``
+the production pjit program — train_step for train shapes, prefill for
+prefill shapes, serve_step (one token against a seq-len KV/state cache)
+for decode shapes — on the 16×16 single-pod and 2×16×16 multi-pod meshes.
+
+Prints ``memory_analysis()`` (proves the per-device footprint fits) and
+``cost_analysis()`` (FLOPs/bytes for §Roofline), parses the post-SPMD HLO
+for collective operand bytes, and writes one JSON artifact per cell under
+``runs/dryrun/`` for ``benchmarks/roofline.py`` to aggregate.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen1_5_0_5b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all --multi_pod both
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from ..configs.base import SHAPES, get_config, list_archs, shape_cells
+from ..ml.model import ModelBundle, TrainConfig, input_specs
+from .hlo_analysis import analyze_hlo
+from .mesh import make_production_mesh
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?(%?[\w\.\-]+)\s*=\s*(.+?)\s+"
+                       r"([\w\-]+)\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO shape string (tuples summed)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str):
+    """Sum operand bytes of every collective in the post-SPMD module.
+
+    HLO operands are printed as bare ``%name`` references, so we first
+    build a name → result-shape table, then look up each collective's
+    operands; ``-start`` variants are counted once (their ``-done`` twin
+    carries no new data).
+    """
+    shapes = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if m:
+            shapes[m.group(1).lstrip("%")] = m.group(2)
+    per_kind = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    opnd_re = re.compile(r"\(([^)]*)\)")
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        op = m.group(3)
+        kind = next((k for k in _COLLECTIVES
+                     if op == k or op == k + "-start"), None)
+        if kind is None:
+            continue
+        # operand bytes: look up each %ref; fall back to result shape
+        args = opnd_re.search(line.split(op, 1)[1])
+        nbytes = 0
+        if args:
+            for ref in re.findall(r"%?([\w\.\-]+)", args.group(1)):
+                if ref in shapes:
+                    nbytes += _shape_bytes(shapes[ref])
+        if nbytes == 0:
+            nbytes = _shape_bytes(m.group(2))
+        per_kind[kind]["count"] += 1
+        per_kind[kind]["bytes"] += nbytes
+    total = sum(v["bytes"] for v in per_kind.values())
+    return {"per_kind": per_kind, "total_bytes": total}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str = "runs/dryrun", *,
+             train_overrides: dict | None = None,
+             tag: str = "") -> dict:
+    cfg = get_config(arch)
+    if os.environ.get("REPRO_MOE_GROUP"):
+        from dataclasses import replace as dc_replace
+        cfg = dc_replace(cfg, moe_group_size=int(
+            os.environ["REPRO_MOE_GROUP"]))
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tc = TrainConfig(**(train_overrides or {}))
+    mb = ModelBundle(cfg, mesh, impl="reference", train_cfg=tc)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        lowered = mb.lower_train(shape)
+    elif shape.kind == "prefill":
+        lowered = mb.lower_prefill(shape)
+    else:
+        lowered = mb.lower_decode(shape)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)          # legacy (no trip counts)
+    analyzed = analyze_hlo(hlo)           # trip-count-aware (§Roofline)
+
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    record = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+        "axes": list(mesh.axis_names), "chips": n_chips,
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0) or 0)
+            + (getattr(mem, "temp_size_in_bytes", 0) or 0),
+        },
+        "cost": {
+            "flops_per_device": cost.get("flops"),
+            "bytes_per_device": cost.get("bytes accessed"),
+        },
+        "analyzed": analyzed,
+        "collectives": coll,
+        "model_flops_dense": 6 * cfg.params_count()
+        * (shape.global_batch * (1 if shape.kind == "decode"
+                                 else shape.seq_len)),
+        "model_flops_active": 6 * cfg.active_params_count()
+        * (shape.global_batch * (1 if shape.kind == "decode"
+                                 else shape.seq_len)),
+        "params": cfg.params_count(),
+        "tag": tag,
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    mesh_tag = "multipod" if multi_pod else "pod"
+    suffix = f"-{tag}" if tag else ""
+    path = os.path.join(out_dir,
+                        f"{arch}-{shape_name}-{mesh_tag}{suffix}.json")
+    with open(path, "w") as fh:
+        json.dump(record, fh, indent=1)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi_pod", default="both",
+                    choices=["true", "false", "both"])
+    ap.add_argument("--out_dir", default="runs/dryrun")
+    ap.add_argument("--tag", default="", help="artifact suffix (perf iters)")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--loss_chunk", type=int, default=2048)
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--fsdp", default="false", choices=["true", "false"])
+    ap.add_argument("--param_dtype", default="bfloat16")
+    ap.add_argument("--no_zero1", action="store_true")
+    ap.add_argument("--no_seq_parallel", action="store_true")
+    ap.add_argument("--moe_group", type=int, default=None)
+    ap.add_argument("--ssm_chunk", type=int, default=None)
+    ap.add_argument("--keep_going", action="store_true")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    pods = {"true": [True], "false": [False],
+            "both": [False, True]}[args.multi_pod]
+    overrides = {"remat": args.remat, "loss_chunk": args.loss_chunk,
+                 "zero1": not args.no_zero1, "fsdp": args.fsdp == "true",
+                 "param_dtype": args.param_dtype,
+                 "seq_parallel": not args.no_seq_parallel}
+    if args.moe_group:
+        os.environ["REPRO_MOE_GROUP"] = str(args.moe_group)
+    if args.ssm_chunk:
+        os.environ["REPRO_SSM_CHUNK"] = str(args.ssm_chunk)
+
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = ([s.name for s in shape_cells(cfg)]
+                  if args.shape == "all" else [args.shape])
+        for shape_name in shapes:
+            for mp in pods:
+                cell = f"{arch} × {shape_name} × " \
+                       f"{'2x16x16' if mp else '16x16'}"
+                try:
+                    rec = run_cell(arch, shape_name, mp, args.out_dir,
+                                   train_overrides=overrides, tag=args.tag)
+                    mem_gb = rec["memory"]["peak_bytes"] / 2**30 \
+                        if rec["memory"]["peak_bytes"] else float("nan")
+                    print(f"[OK]   {cell:58s} compile={rec['compile_s']:7.1f}s"
+                          f" mem/dev={mem_gb:6.2f}GiB"
+                          f" coll={rec['collectives']['total_bytes']/2**20:9.1f}MiB",
+                          flush=True)
+                except Exception as e:
+                    failures.append((cell, repr(e)))
+                    print(f"[FAIL] {cell}: {e}", flush=True)
+                    if not args.keep_going:
+                        traceback.print_exc()
+                        raise
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for cell, err in failures:
+            print(f"  {cell}: {err[:200]}")
+        raise SystemExit(1)
+    print("\nAll dry-run cells compiled.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Elastic scaling: restart a job on a different mesh from checkpoints.
+
+The mechanism is deliberately boring — that is the point: checkpoints are
+mesh-agnostic (host npz + manifest), and ``restore_checkpoint`` re-places
+leaves with the *target* shardings.  ``reshard_plan`` summarizes what a
+scale-up/down changes (per-device bytes before/after) so an operator can
+sanity-check a topology move; ``tests/test_checkpoint.py`` proves a train
+state saved on mesh A restores bit-exactly onto mesh B.
+
+At 1000+ nodes this is the recovery path for partial-pod loss: drain,
+restart on the surviving slice (smaller data axis), restore, continue —
+no resharding service needed because shard assembly happens at load.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import numpy as np
+
+from ..ml.model import ModelBundle
+
+__all__ = ["reshard_plan"]
+
+
+def reshard_plan(mb_from: ModelBundle, mb_to: ModelBundle) -> Dict:
+    """Summarize a topology move for the same architecture."""
+    shape = mb_from.params_shape()
+    from_sh = mb_from.param_shardings()
+    to_sh = mb_to.param_shardings()
+
+    def per_device(leaf, sharding):
+        n = int(np.prod([sharding.mesh.shape[a]
+                         for spec_ax in (sharding.spec or ())
+                         if spec_ax
+                         for a in (spec_ax if isinstance(spec_ax, tuple)
+                                   else (spec_ax,))])) or 1
+        return int(np.prod(leaf.shape)) * leaf.dtype.itemsize / max(n, 1)
+
+    before = sum(jax.tree_util.tree_leaves(
+        jax.tree_util.tree_map(per_device, shape, from_sh)))
+    after = sum(jax.tree_util.tree_leaves(
+        jax.tree_util.tree_map(per_device, shape, to_sh)))
+    return {
+        "from_mesh": dict(mb_from.mesh.shape),
+        "to_mesh": dict(mb_to.mesh.shape),
+        "param_bytes_per_device_before": int(before),
+        "param_bytes_per_device_after": int(after),
+        "ratio": after / max(before, 1),
+    }

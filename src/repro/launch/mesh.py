@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A function (NOT a module-level constant) so importing this module never
+touches jax device state — the dry-run driver must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+initialization, and tests/benches must keep seeing the single real CPU
+device.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips/pod; multi-pod adds a leading 2-pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests, CPU training)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, max(n // data, 1))
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,132 @@
+"""Training driver: checkpointed, restartable, elastic.
+
+End-to-end trainer usable at two scales from the same code path:
+  * CPU / tests: ``--arch <id> --reduced`` trains the reduced config for a
+    few hundred steps (the examples/ml path),
+  * production: the same pjit program the dry-run compiles, on a real mesh.
+
+Fault-tolerance contract:
+  * checkpoint every ``--ckpt_every`` steps (async, atomic, keep-last-k)
+    including the data-pipeline state (seed, step) — restart replays
+    nothing and loses at most one interval;
+  * ``--resume`` restores the newest committed step, *resharding* onto the
+    current mesh (elastic: restart on a different topology just works);
+  * preemption-safe: SIGTERM finishes the in-flight step, saves, exits.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1_5_0_5b \
+      --reduced --steps 200 --batch 8 --seq 128 --ckpt_dir runs/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import signal
+import time
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..ckpt.checkpoint import CheckpointManager
+from ..configs.base import get_config
+from ..data.pipeline import TokenPipeline
+from ..ml.model import ModelBundle, TrainConfig
+from .mesh import make_local_mesh, make_production_mesh
+
+__all__ = ["train_loop", "main"]
+
+
+def train_loop(arch: str, *, reduced: bool = True, steps: int = 200,
+               batch: int = 8, seq: int = 128, lr: float = 1e-3,
+               ckpt_dir: str | None = None, ckpt_every: int = 50,
+               resume: bool = False, mesh=None, log_every: int = 10,
+               seed: int = 0, loss_chunk: int | None = None,
+               print_fn=print):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    mesh = mesh or make_local_mesh()
+    tc = TrainConfig(lr=lr, warmup=min(20, steps // 10 + 1),
+                     total_steps=steps, loss_chunk=loss_chunk,
+                     remat="none" if reduced else "full")
+    mb = ModelBundle(cfg, mesh, train_cfg=tc)
+
+    params = mb.init_params(jax.random.key(seed))
+    opt = mb.init_opt_state(params)
+    pipe_state = {"seed": seed, "step": 0}
+    start_step = 0
+
+    mgr = CheckpointManager(ckpt_dir, keep=3) if ckpt_dir else None
+    if mgr is not None and resume:
+        template = {"params": params, "opt": opt,
+                    "data": {"seed": np.int64(seed), "step": np.int64(0)},
+                    "step": np.int64(0)}
+        restored, ck_step = mgr.restore_or_none(template)
+        if restored is not None:
+            params, opt = restored["params"], restored["opt"]
+            pipe_state = {"seed": int(restored["data"]["seed"]),
+                          "step": int(restored["data"]["step"])}
+            start_step = int(restored["step"])
+            print_fn(f"resumed from step {start_step}")
+
+    pipe = TokenPipeline.restore(pipe_state, cfg.vocab_size, batch, seq)
+    step_fn = jax.jit(mb.make_train_step(), donate_argnums=(0, 1))
+
+    stop = {"now": False}
+    old = signal.signal(signal.SIGTERM,
+                        lambda *_: stop.__setitem__("now", True))
+
+    losses = []
+    t0 = time.perf_counter()
+    try:
+        for step in range(start_step, steps):
+            data = next(pipe)
+            batch_dev = {k: jnp.asarray(v) for k, v in data.items()}
+            params, opt, metrics = step_fn(params, opt, batch_dev)
+            if step % log_every == 0 or step == steps - 1:
+                loss = float(metrics["loss"])
+                losses.append((step, loss))
+                dt = time.perf_counter() - t0
+                print_fn(f"step {step:5d} loss {loss:8.4f} "
+                         f"gnorm {float(metrics['grad_norm']):7.3f} "
+                         f"lr {float(metrics['lr']):.2e} [{dt:6.1f}s]")
+            if mgr is not None and ((step + 1) % ckpt_every == 0
+                                    or stop["now"]):
+                mgr.save(step + 1, {
+                    "params": params, "opt": opt,
+                    "data": {"seed": np.int64(pipe.seed),
+                             "step": np.int64(pipe.step)},
+                    "step": np.int64(step + 1)})
+            if stop["now"]:
+                print_fn(f"SIGTERM: checkpointed at {step + 1}, exiting")
+                break
+    finally:
+        pipe.close()
+        if mgr is not None:
+            mgr.wait()
+        signal.signal(signal.SIGTERM, old)
+    return params, opt, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt_dir", default=None)
+    ap.add_argument("--ckpt_every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    train_loop(args.arch, reduced=args.reduced, steps=args.steps,
+               batch=args.batch, seq=args.seq, lr=args.lr,
+               ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+               resume=args.resume, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""ML stack: model zoo, training/serving steps, WFL integration (§5)."""
+from .transformer import LM, cycle_len
+from .model import ModelBundle, TrainConfig, input_specs
+from .integration import ColumnModel, MLPRegressor
+
+__all__ = ["LM", "cycle_len", "ModelBundle", "TrainConfig", "input_specs",
+           "ColumnModel", "MLPRegressor"]

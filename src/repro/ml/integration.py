@@ -1,0 +1,155 @@
+"""WFL ↔ JAX model integration (paper §5).
+
+The paper exposes TensorFlow model loading/application as WFL operators so
+pipelines can "run large-scale inference and annotate datasets".  Here any
+JAX callable becomes a flow operator via :class:`ColumnModel`, which
+adapts ``{column name: np array}`` batches to the model and is what
+``Flow.model_apply`` and expression-level ``ModelApply`` call.
+
+``SavedModel``-style persistence: ``save``/``load`` round-trip params +
+feature spec through npz (the paper's SavedModel-compat surface).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ColumnModel", "MLPRegressor"]
+
+
+class ColumnModel:
+    """Adapter: named numpy columns → JAX model → numpy column."""
+
+    def __init__(self, apply_fn: Callable, params, feature_order: List[str],
+                 batch_size: int = 8192):
+        self.apply_fn = apply_fn
+        self.params = params
+        self.feature_order = feature_order
+        self.batch_size = batch_size
+        self._jitted = jax.jit(apply_fn)
+
+    def apply_columns(self, cols: Dict[str, np.ndarray]) -> np.ndarray:
+        feats = np.stack([np.asarray(cols[f], dtype=np.float32)
+                          for f in self.feature_order], axis=-1)
+        outs = []
+        for i in range(0, feats.shape[0], self.batch_size):
+            chunk = feats[i:i + self.batch_size]
+            outs.append(np.asarray(self._jitted(self.params,
+                                                jnp.asarray(chunk))))
+        return np.concatenate(outs) if outs else np.zeros((0,), np.float32)
+
+
+class MLPRegressor:
+    """Small MLP head — the paper's road-speed model stand-in (§6).
+
+    Trained inside ``examples/ml_workflow.py`` on features extracted by a
+    WFL query; applied at scale back through WFL ``model_apply``.
+    """
+
+    def __init__(self, num_features: int, hidden: int = 64, depth: int = 2,
+                 seed: int = 0):
+        self.num_features = num_features
+        key = jax.random.key(seed)
+        dims = [num_features] + [hidden] * depth + [1]
+        layers = []
+        for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+            key, k = jax.random.split(key)
+            layers.append({
+                "w": jax.random.normal(k, (a, b), jnp.float32)
+                / jnp.sqrt(a),
+                "b": jnp.zeros((b,), jnp.float32)})
+        # feature/target standardization lives IN the params so the model
+        # is self-contained through save/load and WFL application
+        self.params = {"layers": layers,
+                       "x_mu": jnp.zeros((num_features,), jnp.float32),
+                       "x_sd": jnp.ones((num_features,), jnp.float32),
+                       "y_mu": jnp.zeros((), jnp.float32),
+                       "y_sd": jnp.ones((), jnp.float32)}
+
+    @staticmethod
+    def apply(params, x):
+        h = (x - params["x_mu"]) / params["x_sd"]
+        layers = params["layers"]
+        for i, layer in enumerate(layers):
+            h = h @ layer["w"] + layer["b"]
+            if i < len(layers) - 1:
+                h = jax.nn.relu(h)
+        return h[..., 0] * params["y_sd"] + params["y_mu"]
+
+    def train(self, feats: np.ndarray, targets: np.ndarray, *,
+              steps: int = 500, lr: float = 1e-2, batch: int = 1024,
+              seed: int = 0):
+        x = jnp.asarray(feats, jnp.float32)
+        y = jnp.asarray(targets, jnp.float32)
+        self.params["x_mu"] = x.mean(axis=0)
+        self.params["x_sd"] = x.std(axis=0) + 1e-6
+        self.params["y_mu"] = y.mean()
+        self.params["y_sd"] = y.std() + 1e-6
+
+        def loss_fn(p, xb, yb):
+            # normalized-space loss: keeps gradient scale O(1) regardless
+            # of target units (raw-space loss diverges: grads ∝ y_sd²)
+            pred_n = (MLPRegressor.apply(p, xb) - p["y_mu"]) / p["y_sd"]
+            yn = (yb - p["y_mu"]) / p["y_sd"]
+            return jnp.mean((pred_n - yn) ** 2)
+
+        @jax.jit
+        def step(p, key):
+            idx = jax.random.randint(key, (min(batch, x.shape[0]),), 0,
+                                     x.shape[0])
+            l, g = jax.value_and_grad(loss_fn)(p, x[idx], y[idx])
+            p = {**jax.tree_util.tree_map(lambda a, b: a - lr * b, p, g),
+                 "x_mu": p["x_mu"], "x_sd": p["x_sd"],
+                 "y_mu": p["y_mu"], "y_sd": p["y_sd"]}
+            return p, l
+
+        key = jax.random.key(seed)
+        p = self.params
+        losses = []
+        for _ in range(steps):
+            key, k = jax.random.split(key)
+            p, l = step(p, k)
+            losses.append(float(l))
+        self.params = p
+        return losses
+
+    def as_column_model(self, feature_order: List[str]) -> ColumnModel:
+        return ColumnModel(MLPRegressor.apply, self.params, feature_order)
+
+    # SavedModel-style persistence (§5)
+    def save(self, directory: str, feature_order: List[str]) -> None:
+        os.makedirs(directory, exist_ok=True)
+        arrays = {"x_mu": np.asarray(self.params["x_mu"]),
+                  "x_sd": np.asarray(self.params["x_sd"]),
+                  "y_mu": np.asarray(self.params["y_mu"]),
+                  "y_sd": np.asarray(self.params["y_sd"])}
+        for i, layer in enumerate(self.params["layers"]):
+            arrays[f"w{i}"] = np.asarray(layer["w"])
+            arrays[f"b{i}"] = np.asarray(layer["b"])
+        np.savez(os.path.join(directory, "params.npz"), **arrays)
+        with open(os.path.join(directory, "model.json"), "w") as fh:
+            json.dump({"features": feature_order,
+                       "num_features": self.num_features}, fh)
+
+    @staticmethod
+    def load(directory: str) -> "ColumnModel":
+        with open(os.path.join(directory, "model.json")) as fh:
+            meta = json.load(fh)
+        z = np.load(os.path.join(directory, "params.npz"))
+        layers = []
+        i = 0
+        while f"w{i}" in z:
+            layers.append({"w": jnp.asarray(z[f"w{i}"]),
+                           "b": jnp.asarray(z[f"b{i}"])})
+            i += 1
+        params = {"layers": layers,
+                  "x_mu": jnp.asarray(z["x_mu"]),
+                  "x_sd": jnp.asarray(z["x_sd"]),
+                  "y_mu": jnp.asarray(z["y_mu"]),
+                  "y_sd": jnp.asarray(z["y_sd"])}
+        return ColumnModel(MLPRegressor.apply, params, meta["features"])

@@ -1,0 +1,136 @@
+"""Shared neural layers (pure JAX, parameter pytrees).
+
+Everything is written against *logical* shapes; sharding comes from
+``repro.ml.sharding`` path rules at pjit time.  Initializers return nested
+dicts so ``jax.eval_shape`` gives the dry-run parameter tree without
+allocation.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["rms_norm", "layer_norm", "dense_init", "rope", "mrope",
+           "mlp_init", "mlp_apply", "norm_init", "embed_init", "gelu",
+           "silu"]
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32,
+               scale: Optional[float] = None) -> jnp.ndarray:
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+            ).astype(dtype)
+
+
+def norm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(x, p, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * p["scale"].astype(jnp.float32)
+            ).astype(dt)
+
+
+def layer_norm(x, p, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+# ------------------------------------------------------------------ RoPE
+
+def _rope_angles(positions, dim: int, theta: float):
+    """positions [...,] → cos/sin [..., dim/2]."""
+    half = dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """Rotary embedding. x [B, H, S, D], positions [B, S] (absolute)."""
+    b, h, s, d = x.shape
+    cos, sin = _rope_angles(positions, d, theta)        # [B, S, D/2]
+    cos = cos[:, None, :, :]
+    sin = sin[:, None, :, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope(x, positions3, theta: float = 10000.0,
+          sections: Tuple[int, int, int] = (2, 1, 1)):
+    """Multimodal RoPE (Qwen2-VL §3.1): head_dim split into temporal/
+    height/width sections with separate position streams.
+
+    x [B, H, S, D]; positions3 [3, B, S] (equal streams ⇒ plain RoPE on
+    text).  ``sections`` are relative weights over D/2 frequency slots.
+    """
+    b, h, s, d = x.shape
+    half = d // 2
+    total = sum(sections)
+    sizes = [half * w // total for w in sections]
+    sizes[-1] = half - sum(sizes[:-1])
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # per-frequency-slot stream selection
+    sel = jnp.concatenate([jnp.full((sz,), i, jnp.int32)
+                           for i, sz in enumerate(sizes)])
+    # gather: ang[b, s, f] = positions3[sel[f], b, s] * freqs[f]
+    p_sel = positions3[sel, :, :]                        # [half, B, S]
+    ang = jnp.moveaxis(p_sel, 0, -1).astype(jnp.float32) * freqs  # [B,S,half]
+    cos = jnp.cos(ang)[:, None, :, :]
+    sin = jnp.sin(ang)[:, None, :, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- MLP
+
+def mlp_init(key, d: int, f: int, *, gated: bool = True,
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    if gated:
+        return {"w_gate": dense_init(ks[0], d, f, dtype),
+                "w_up": dense_init(ks[1], d, f, dtype),
+                "w_down": dense_init(ks[2], f, d, dtype)}
+    return {"w_up": dense_init(ks[0], d, f, dtype),
+            "w_down": dense_init(ks[1], f, d, dtype)}
+
+
+def mlp_apply(x, p, act: str = "silu"):
+    a = {"silu": silu, "gelu": gelu}[act]
+    wg = p.get("w_gate")
+    wu = p["w_up"].astype(x.dtype)
+    wd = p["w_down"].astype(x.dtype)
+    if wg is not None:
+        h = a(x @ wg.astype(x.dtype)) * (x @ wu)
+    else:
+        h = a(x @ wu)
+    return h @ wd

@@ -1,0 +1,166 @@
+"""Mamba (selective SSM) block — Jamba's recurrent layer.
+
+Training/prefill use a *chunked* selective scan: within a chunk the
+diagonal recurrence is solved by an associative scan (the same algorithm
+as the Pallas ``ssm_scan`` kernel — the kernel is the TPU-target fast path
+for the flattened inner scan), and chunks are threaded sequentially via a
+[B, dI, N] carry.  Live memory is O(B·chunk·dI·N) instead of
+O(B·S·dI·N), which is what makes seq=512k lowerable.
+
+Decode keeps O(1) state: {h: [B, dI, N], conv: [B, K-1, dI]}.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, silu
+from .sharding import constrain
+
+__all__ = ["mamba_init", "mamba_apply", "mamba_decode", "mamba_cache_init"]
+
+
+def mamba_init(key, d: int, *, expand: int = 2, state: int = 16,
+               conv: int = 4, dt_rank: Optional[int] = None,
+               dtype=jnp.float32):
+    di = expand * d
+    r = dt_rank or max(1, d // 16)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (di, conv), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], di, r + 2 * state, dtype),
+        "dt_proj": dense_init(ks[3], r, di, dtype),
+        "dt_bias": jnp.zeros((di,), dtype),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, state + 1,
+                                             dtype=jnp.float32), (di, 1))),
+        "D_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d, dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv: x [B, S, dI], w [dI, K]."""
+    k = w.shape[1]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + pad[:, i:i + x.shape[1], :] * w[:, i]
+    return out + b
+
+
+def _ssm_params(x1, p):
+    """x1 [B, S, dI] → (delta, B_ssm, C_ssm) with A from A_log."""
+    r = p["dt_proj"].shape[0]
+    n = (p["x_proj"].shape[1] - r) // 2
+    x_dbl = x1 @ p["x_proj"].astype(x1.dtype)
+    dt_raw, b_ssm, c_ssm = jnp.split(x_dbl, [r, r + n], axis=-1)
+    delta = jax.nn.softplus(dt_raw @ p["dt_proj"].astype(dt_raw.dtype)
+                            + p["dt_bias"].astype(dt_raw.dtype))
+    return delta, b_ssm, c_ssm
+
+
+def mamba_apply(x, p, *, chunk: int = None, return_state: bool = False):
+    """x [B, S, D] → [B, S, D] (training / prefill).
+
+    ``return_state`` additionally returns the decode cache
+    {h: [B, dI, N], conv: [B, K-1, dI]} after the last position.
+    """
+    import os
+    chunk = chunk or int(os.environ.get("REPRO_SSM_CHUNK", 256))
+    b, s, d = x.shape
+    di = p["conv_w"].shape[0]
+    n = p["A_log"].shape[1]
+    xz = x @ p["in_proj"].astype(x.dtype)
+    x1, z = jnp.split(xz, 2, axis=-1)
+    x1 = silu(_causal_conv(x1, p["conv_w"], p["conv_b"]))
+    delta, b_ssm, c_ssm = _ssm_params(x1, p)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))          # [dI, N]
+
+    c = min(chunk, s)
+    pad = (-s) % c
+    # chunk inputs stored bf16 (the scan saves them as backward residuals;
+    # all recurrence math upcasts to f32 inside the chunk)
+    x1h = x1.astype(jnp.bfloat16)
+    dh_ = delta.astype(jnp.bfloat16)
+    bh = b_ssm.astype(jnp.bfloat16)
+    ch = c_ssm.astype(jnp.bfloat16)
+    if pad:
+        x1p = jnp.pad(x1h, ((0, 0), (0, pad), (0, 0)))
+        dp = jnp.pad(dh_, ((0, 0), (0, pad), (0, 0)))
+        bp = jnp.pad(bh, ((0, 0), (0, pad), (0, 0)))
+        cp = jnp.pad(ch, ((0, 0), (0, pad), (0, 0)))
+    else:
+        x1p, dp, bp, cp = x1h, dh_, bh, ch
+    nc = (s + pad) // c
+
+    @jax.checkpoint
+    def chunk_body(h, inp):
+      with jax.named_scope("kernel_interior"):   # VMEM on the Pallas path
+        xc, dc, bc, cc = inp        # [B, c, dI], [B, c, dI], [B,c,N], [B,c,N]
+        dc = dc.astype(jnp.float32)
+        a = jnp.exp(dc[..., None] * A)                          # [B,c,dI,N]
+        bx = (dc * xc.astype(jnp.float32))[..., None] * \
+            bc.astype(jnp.float32)[:, :, None, :]               # [B,c,dI,N]
+
+        def comb(u, w):
+            return u[0] * w[0], w[1] + w[0] * u[1]
+
+        a_sc, b_sc = jax.lax.associative_scan(comb, (a, bx), axis=1)
+        hs = b_sc + a_sc * h[:, None]                           # [B,c,dI,N]
+        y = jnp.einsum("bcdn,bcn->bcd", hs, cc.astype(jnp.float32))
+        return constrain(hs[:, -1], ("batch", "model", None)), y
+
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    to_chunks = lambda t: jnp.moveaxis(
+        t.reshape(b, nc, c, t.shape[-1]), 1, 0)
+    hT, ys = jax.lax.scan(chunk_body, h0,
+                          (to_chunks(x1p), to_chunks(dp), to_chunks(bp),
+                           to_chunks(cp)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nc * c, di)[:, :s]
+    y = y + p["D_skip"] * x1
+    y = y.astype(x.dtype) * silu(z)
+    out = y @ p["out_proj"].astype(y.dtype)
+    if return_state:
+        # NOTE: padding chunks have a=exp(0·A)=1, bx=0 ⇒ they do NOT decay
+        # or perturb the carry, so hT is exact for the s real positions.
+        k = p["conv_w"].shape[1]
+        x1_raw = jnp.split(x @ p["in_proj"].astype(x.dtype), 2, axis=-1)[0]
+        pre = jnp.pad(x1_raw, ((0, 0), (k - 1, 0), (0, 0)))[:, -(k - 1):]
+        return out, {"h": hT, "conv": pre.astype(jnp.float32)}
+    return out
+
+
+def mamba_cache_init(batch: int, p, dtype=jnp.float32):
+    di, k = p["conv_w"].shape
+    n = p["A_log"].shape[1]
+    return {"h": jnp.zeros((batch, di, n), jnp.float32),
+            "conv": jnp.zeros((batch, k - 1, di), jnp.float32)}
+
+
+def mamba_decode(x, p, cache):
+    """Single token: x [B, 1, D] → (y [B, 1, D], cache)."""
+    b = x.shape[0]
+    xz = x[:, 0] @ p["in_proj"].astype(x.dtype)
+    x1, z = jnp.split(xz, 2, axis=-1)                      # [B, dI]
+    conv_buf = jnp.concatenate([cache["conv"], x1[:, None]], axis=1)
+    w = p["conv_w"]
+    k = w.shape[1]
+    x1c = jnp.einsum("bkd,dk->bd", conv_buf[:, -k:], w) + p["conv_b"]
+    x1c = silu(x1c)
+    delta, b_ssm, c_ssm = _ssm_params(x1c[:, None], p)
+    delta, b_ssm, c_ssm = delta[:, 0], b_ssm[:, 0], c_ssm[:, 0]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(delta.astype(jnp.float32)[..., None] * A)  # [B, dI, N]
+    bx = (delta * x1c).astype(jnp.float32)[..., None] * \
+        b_ssm.astype(jnp.float32)[:, None, :]
+    h = a * cache["h"] + bx
+    y = jnp.einsum("bdn,bn->bd", h, c_ssm.astype(jnp.float32))
+    y = y + p["D_skip"] * x1c
+    y = y.astype(x.dtype) * silu(z)
+    out = (y @ p["out_proj"].astype(y.dtype))[:, None]
+    return out, {"h": h, "conv": conv_buf[:, 1:]}

@@ -1,0 +1,306 @@
+"""Model bundle: arch config → pjit train/prefill/decode programs.
+
+This is the layer ``launch/`` drives: it owns parameter/optimizer/cache
+sharding (via ``repro.ml.sharding`` rules), the training step (chunked CE
+loss, MoE aux losses, clipping, AdamW, optional ZeRO-1 / int8-EF grad
+compression), and the serving steps — plus ``input_specs`` returning
+ShapeDtypeStruct stand-ins for every (arch × shape) cell of the dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeConfig
+from . import sharding as sh
+from .sharding import set_active_mesh
+from .losses import chunked_lm_loss
+from .optim import (adamw_init, adamw_update, clip_by_global_norm,
+                    compress_ef, cosine_schedule, ef_init)
+from .transformer import LM, MAX_LEARNED_POS
+
+__all__ = ["ModelBundle", "input_specs"]
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    out: Dict[str, Any] = {}
+    if shape.kind == "train":
+        out["tokens"] = tok
+        out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    elif shape.kind == "prefill":
+        out["tokens"] = tok
+    else:  # decode
+        out["tokens"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    if cfg.frontend == "audio_stub" and shape.kind != "decode":
+        out["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                             jnp.bfloat16)
+    if cfg.mrope and shape.kind == "train":
+        out["positions"] = jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+    return out
+
+
+def _cache_spec_leaf(path, leaf, mesh: Mesh) -> P:
+    """Per-leaf cache specs: batch → (pod,data); heads/channels → model.
+
+    When the batch is too small for the data axes (long_500k has B=1),
+    KV caches switch to *sequence-parallel* layout: the cache length
+    shards over (pod, data) — context parallelism — and GSPMD reduces the
+    attention softmax across the seq shards.
+    """
+    name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+    batch = sh.batch_axes(mesh)
+    n_batch = int(np.prod([mesh.shape[a] for a in batch])) if batch else 1
+    n_model = mesh.shape.get("model", 1)
+    nd = len(leaf.shape)
+    b = leaf.shape[1] if nd >= 2 else 1
+    seq_parallel = b < n_batch
+
+    def div(i):
+        return leaf.shape[i] % n_model == 0 and leaf.shape[i] >= n_model
+
+    if name in ("k", "v", "cross_k", "cross_v"):    # [G,B,H,S,hd]
+        # heads over model when the count divides (qwen1.5 kv=16);
+        # otherwise shard the cache length over model (flash-decode style
+        # context parallelism — GSPMD reduces the softmax across shards).
+        head_ax = "model" if div(2) else None
+        seq_model = None if head_ax else "model"
+        if seq_parallel:
+            seq = tuple(a for a in (batch if isinstance(batch, tuple)
+                                    else (batch,)) if a) + \
+                ((seq_model,) if seq_model else ())
+            return P(None, None, head_ax, tuple(x for x in seq if x), None)
+        return P(None, batch, head_ax,
+                 seq_model if seq_model and div(3) else None, None)
+    bspec = None if seq_parallel else batch
+    if name == "h" and nd == 4:                     # mamba [G,B,dI,N]
+        return P(None, bspec, "model" if div(2) else None, None)
+    if name == "conv":                              # [G,B,K-1,dI]
+        return P(None, bspec, None, "model" if div(3) else None)
+    if name == "C":                                 # mlstm [G,B,H,dk,dv]
+        return P(None, bspec, "model" if div(2) else None,
+                 "model" if not div(2) and div(3) else None, None)
+    if name == "n" and nd == 4:
+        return P(None, bspec, "model" if div(2) else None,
+                 "model" if not div(2) and div(3) else None)
+    if nd >= 2:                                     # slstm scalars [G,B,D]
+        return P(None, bspec)
+    return P()
+
+
+@dataclass
+class TrainConfig:
+    lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    clip_norm: float = 1.0
+    weight_decay: float = 0.1
+    loss_chunk: Optional[int] = 2048
+    moe_lb_weight: float = 0.01
+    moe_z_weight: float = 1e-3
+    zero1: bool = False
+    fsdp: bool = False              # shard weights over data (gather/layer)
+    param_dtype: str = "float32"    # bfloat16 = mixed precision (f32 moments)
+    seq_parallel: bool = True       # shard activations' seq dim over model
+    compress_grads: bool = False
+    remat: str = "dots"             # none | dots | full
+
+
+class ModelBundle:
+    def __init__(self, cfg: ArchConfig, mesh: Mesh, *,
+                 impl: str = "reference",
+                 train_cfg: Optional[TrainConfig] = None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.train_cfg = train_cfg or TrainConfig()
+        self.lm = LM(cfg, impl=impl, remat=self.train_cfg.remat,
+                     mesh=mesh, seq_parallel=self.train_cfg.seq_parallel)
+
+    # ------------------------------------------------------------ shapes
+    def init_params(self, key):
+        return self._cast_params(self.lm.init(key))
+
+    def _cast_params(self, params):
+        if self.train_cfg.param_dtype == "float32":
+            return params
+        dt = jnp.dtype(self.train_cfg.param_dtype)
+
+        def cast(x):
+            # matrices → bf16 (matmul sites cast activations to match);
+            # vectors (norms, biases, A_log, …) stay f32 for stability
+            return x.astype(dt) if getattr(x, "ndim", 0) >= 2 and                 x.dtype == jnp.float32 else x
+
+        return jax.tree_util.tree_map(cast, params)
+
+    def params_shape(self):
+        return jax.eval_shape(self.init_params, jax.random.key(0))
+
+    def param_shardings(self):
+        params_shape = self.params_shape()
+        specs = sh.param_specs(params_shape, self.mesh)
+        if self.train_cfg.fsdp:
+            specs = sh.extend_specs(specs, self.mesh, params_shape, "data")
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(self.mesh, s), specs)
+
+    def opt_shardings(self, params_shape):
+        specs = sh.param_specs(params_shape, self.mesh)
+        if self.train_cfg.fsdp:
+            specs = sh.extend_specs(specs, self.mesh, params_shape, "data")
+        elif self.train_cfg.zero1:
+            specs = sh.zero1_specs(specs, self.mesh, params_shape)
+        m = jax.tree_util.tree_map(
+            lambda s: NamedSharding(self.mesh, s), specs)
+        return {"m": m, "v": m,
+                "step": NamedSharding(self.mesh, P())}
+
+    def cache_shardings(self, caches_shape):
+        return jax.tree_util.tree_map_with_path(
+            lambda p, l: NamedSharding(self.mesh,
+                                       _cache_spec_leaf(p, l, self.mesh)),
+            caches_shape)
+
+    def _data_sharding(self, ndim: int, batch_dim: int = 0,
+                       batch_size: Optional[int] = None):
+        axes: list = [None] * ndim
+        baxes = sh.batch_axes(self.mesh)
+        n_batch = int(np.prod([self.mesh.shape[a] for a in baxes])) \
+            if baxes else 1
+        if batch_size is None or batch_size % n_batch == 0:
+            axes[batch_dim] = baxes
+        # else: replicate (tiny-batch decode; cache is seq-parallel instead)
+        return NamedSharding(self.mesh, P(*axes))
+
+    # ------------------------------------------------------------- train
+    def make_train_step(self):
+        cfg, tc, lm = self.cfg, self.train_cfg, self.lm
+        lr_fn = cosine_schedule(tc.lr, tc.warmup, tc.total_steps)
+
+        def train_step(params, opt_state, batch):
+            def loss_fn(p):
+                hid, aux = lm.hidden(p, batch["tokens"],
+                                     batch.get("positions"),
+                                     batch.get("frames"))
+                loss = chunked_lm_loss(hid, lm.head(p), batch["labels"],
+                                       chunk=tc.loss_chunk)
+                total = loss + tc.moe_lb_weight * aux["load_balance"] \
+                    + tc.moe_z_weight * aux["router_z"]
+                return total, (loss, aux)
+
+            (total, (loss, aux)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            if tc.compress_grads:
+                grads, new_err = compress_ef(grads, opt_state["ef"])
+            grads, gnorm = clip_by_global_norm(grads, tc.clip_norm)
+            lr = lr_fn(opt_state["adam"]["step"] + 1)   # 1-indexed schedule
+            new_params, new_adam = adamw_update(
+                params, grads, opt_state["adam"], lr,
+                weight_decay=tc.weight_decay)
+            new_opt = {"adam": new_adam}
+            if tc.compress_grads:
+                new_opt["ef"] = new_err
+            metrics = {"loss": loss, "total_loss": total,
+                       "grad_norm": gnorm, "lr": lr,
+                       "moe_lb": aux["load_balance"]}
+            return new_params, new_opt, metrics
+
+        return train_step
+
+    def init_opt_state(self, params):
+        opt = {"adam": adamw_init(params)}
+        if self.train_cfg.compress_grads:
+            opt["ef"] = ef_init(params)
+        return opt
+
+    def lower_train(self, shape: ShapeConfig):
+        set_active_mesh(self.mesh)
+        """.lower() the pjit train step for a shape cell (dry-run entry)."""
+        mesh = self.mesh
+        params_shape = self.params_shape()
+        p_shard = self.param_shardings()
+        opt_shape = jax.eval_shape(self.init_opt_state, params_shape)
+        o_shard = self.opt_shardings(params_shape)
+        if self.train_cfg.compress_grads:
+            o_shard = {"adam": o_shard,
+                       "ef": self.opt_shardings(params_shape)["m"]}
+        else:
+            o_shard = {"adam": o_shard}
+        specs = input_specs(self.cfg, shape)
+        b_shard = {k: self._data_sharding(
+            len(v.shape), 1 if k == "positions" else 0,
+            batch_size=v.shape[1 if k == "positions" else 0])
+            for k, v in specs.items()}
+        step = self.make_train_step()
+        with mesh:
+            jitted = jax.jit(step,
+                             in_shardings=(p_shard, o_shard, b_shard),
+                             out_shardings=(p_shard, o_shard, None),
+                             donate_argnums=(0, 1))
+            return jitted.lower(params_shape, opt_shape, specs)
+
+    # ------------------------------------------------------------- serve
+    def make_prefill(self):
+        lm = self.lm
+
+        def prefill(params, batch):
+            return lm.prefill(params, batch["tokens"],
+                              frames=batch.get("frames"))
+
+        return prefill
+
+    def make_decode_step(self):
+        lm = self.lm
+
+        def serve_step(params, caches, tokens, pos):
+            logits, caches = lm.decode_step(params, tokens, caches, pos)
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return next_tok, caches
+
+        return serve_step
+
+    def lower_prefill(self, shape: ShapeConfig):
+        set_active_mesh(self.mesh)
+        mesh = self.mesh
+        params_shape = self.params_shape()
+        p_shard = self.param_shardings()
+        specs = input_specs(self.cfg, shape)
+        b_shard = {k: self._data_sharding(len(v.shape),
+                                          batch_size=v.shape[0])
+                   for k, v in specs.items()}
+        fn = self.make_prefill()
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=(p_shard, b_shard))
+            return jitted.lower(params_shape, specs)
+
+    def lower_decode(self, shape: ShapeConfig):
+        set_active_mesh(self.mesh)
+        mesh = self.mesh
+        cfg = self.cfg
+        b = shape.global_batch
+        params_shape = self.params_shape()
+        p_shard = self.param_shardings()
+        enc_len = shape.seq_len if cfg.encoder_layers > 0 else None
+        caches_shape = jax.eval_shape(
+            functools.partial(self.lm.init_caches, b, shape.seq_len,
+                              enc_len=enc_len))
+        c_shard = self.cache_shardings(caches_shape)
+        tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        fn = self.make_decode_step()
+        with mesh:
+            jitted = jax.jit(
+                fn,
+                in_shardings=(p_shard, c_shard,
+                              self._data_sharding(2, batch_size=b), None),
+                out_shardings=(self._data_sharding(2, batch_size=b),
+                               c_shard),
+                donate_argnums=(1,))
+            return jitted.lower(params_shape, caches_shape, tok,
+                                jax.ShapeDtypeStruct((), jnp.int32))

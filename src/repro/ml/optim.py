@@ -1,0 +1,128 @@
+"""Optimizer stack: AdamW + global-norm clip + schedules + int8
+error-feedback gradient compression (no optax — built in raw JAX).
+
+Distributed-optimization features:
+  * **ZeRO-1** — optimizer moments take the params' TP specs *plus* a
+    data-axis shard on their largest free dim (``sharding.zero1_specs``);
+    pjit then keeps each data shard's slice of m/v resident only once.
+  * **int8 error-feedback compression** — ``compress_ef`` quantizes grads
+    to int8 with a per-tensor scale, carrying the quantization error into
+    the next step (error feedback keeps AdamW convergence); on a mesh,
+    ``compressed_psum`` (shard_map) moves int8 over the wire (all-gather +
+    local reduce) instead of fp32 all-reduce — 4× fewer collective bytes,
+    visible in the §Roofline collective term.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["adamw_init", "adamw_update", "clip_by_global_norm",
+           "cosine_schedule", "compress_ef", "ef_init", "compressed_psum"]
+
+
+# ------------------------------------------------------------------ AdamW
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {"m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        update = (m2 / c1) / (jnp.sqrt(v2 / c2) + eps)
+        if p.ndim >= 2:     # decay matrices only (norms/bias exempt)
+            update = update + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * update).astype(p.dtype), m2, v2
+
+    out = jax.tree_util.tree_map(upd, params, grads, state["m"],
+                                 state["v"])
+    flat, treedef = jax.tree_util.tree_flatten(out,
+                                               is_leaf=lambda x:
+                                               isinstance(x, tuple))
+    new_p = jax.tree_util.tree_unflatten(treedef, [x[0] for x in flat])
+    new_m = jax.tree_util.tree_unflatten(treedef, [x[1] for x in flat])
+    new_v = jax.tree_util.tree_unflatten(treedef, [x[2] for x in flat])
+    return new_p, {"m": new_m, "v": new_v, "step": step}
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gn
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_ratio + (1 - min_ratio)
+                         * 0.5 * (1 + jnp.cos(np.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+# ----------------------------------------------- int8 error-feedback EF21
+
+def ef_init(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+def _quant_int8(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_ef(grads, err):
+    """Quantize grads+carried error to int8; return (deq grads, new err).
+
+    Error feedback: e' = (g + e) − deq(quant(g + e)); the residual is
+    re-injected next step, preserving convergence under 4× compression.
+    """
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        q, scale = _quant_int8(x)
+        deq = q.astype(jnp.float32) * scale
+        return deq, x - deq
+
+    out = jax.tree_util.tree_map(one, grads, err)
+    flat, treedef = jax.tree_util.tree_flatten(
+        out, is_leaf=lambda x: isinstance(x, tuple))
+    deq = jax.tree_util.tree_unflatten(treedef, [x[0] for x in flat])
+    new_err = jax.tree_util.tree_unflatten(treedef, [x[1] for x in flat])
+    return deq, new_err
+
+
+def compressed_psum(x, axis_name: str):
+    """Mean over a mesh axis moving int8 on the wire (inside shard_map).
+
+    all-gather of (int8 payload, fp32 scale) + local dequant-reduce:
+    wire bytes ≈ N·R·1B vs 2·N·4B for ring all-reduce — the §Perf
+    cross-pod gradient-compression lever.
+    """
+    q, scale = _quant_int8(x.astype(jnp.float32))
+    qs = jax.lax.all_gather(q, axis_name)                 # [R, ...] int8
+    ss = jax.lax.all_gather(scale, axis_name)             # [R]
+    deq = qs.astype(jnp.float32) * ss.reshape((-1,) + (1,) * x.ndim)
+    return deq.mean(axis=0)

@@ -1,0 +1,191 @@
+"""Sharding rules: logical parameter/activation axes → mesh axes.
+
+Mesh: ``(data, model)`` single-pod (16×16) or ``(pod, data, model)``
+multi-pod (2×16×16).  Batch shards over (pod, data); tensor-parallel dims
+shard over model:
+
+  * attention QKV out-dim and O in-dim → model (Megatron col/row split)
+  * MLP hidden dim → model
+  * vocab dim of embedding & lm_head → model
+  * MoE expert dim → model (expert parallelism)
+  * KV caches: batch → data, kv-heads → model (GSPMD pads when the head
+    count does not divide the axis)
+
+Rules are *path-based*: ``param_specs`` walks the params pytree and matches
+leaf path names, so every architecture (dense / MoE / SSM / hybrid) gets
+specs without per-arch plumbing.  ``zero1`` additionally shards optimizer
+state over the data axis (ZeRO-1).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["batch_axes", "param_specs", "act_spec", "cache_specs",
+           "NONE_SPEC", "zero1_specs", "extend_specs", "constrain",
+           "active_mesh", "set_active_mesh"]
+
+NONE_SPEC = P()
+
+# Ambient mesh for activation-sharding constraints inside model code.
+# Set by ModelBundle during lowering; None in CPU tests (constraints no-op).
+_ACTIVE_MESH: list = [None]
+
+
+def set_active_mesh(mesh):
+    _ACTIVE_MESH[0] = mesh
+
+
+def active_mesh():
+    return _ACTIVE_MESH[0]
+
+
+def constrain(x, dims):
+    """Pin an intermediate's sharding: ``dims`` per-axis ∈ {None, "batch",
+    "model"}.  No-op without an active mesh; axes that don't divide are
+    dropped.  This is how recurrent scan carries (mLSTM C, mamba h) stay
+    sharded when GSPMD's fixed-point propagation gives up on loop carries.
+    """
+    mesh = _ACTIVE_MESH[0]
+    if mesh is None:
+        return x
+    spec = []
+    for size, d in zip(x.shape, dims):
+        if d == "batch":
+            ax = batch_axes(mesh)
+            n = int(np.prod([mesh.shape[a] for a in ax])) if ax else 1
+            spec.append(ax if n > 1 and size % n == 0 else None)
+        elif d == "model" and "model" in mesh.axis_names:
+            n = mesh.shape["model"]
+            spec.append("model" if size % n == 0 and size >= n else None)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes the global batch shards over."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# Leaf-name patterns → (sharded_dim_from_end, description).
+# Dims are indexed from the end so stacked (scan-over-layers) params with a
+# leading group dim match the same rules.
+_RULES = [
+    (r"\bembed\b",        2, "vocab"),          # [V, D] → V on model
+    (r"\blm_head\b",      1, "vocab"),          # [D, V] → V on model
+    # NOTE: ordered — the experts rule must precede w_gate/w_up/w_down,
+    # or expert FFN weights match the dense-FFN rules and EP never engages
+    (r"\bexperts?\.",     3, "experts"),        # [E, ., .] → E on model
+    (r"\bw(q|k|v)\b",     1, "heads"),          # [D, H*hd] → out on model
+    (r"\bw(q|k|v)_bias\b", 1, "heads"),
+    (r"\bwo\b",           2, "heads"),          # [H*hd, D] → in on model
+    (r"\bw_gate\b",       1, "ffn"),            # [D, F]
+    (r"\bw_up\b",         1, "ffn"),
+    (r"\bw_down\b",       2, "ffn"),            # [F, D]
+    (r"\brouter\b",       1, "experts"),        # [D, E]
+    (r"\bin_proj\b",      1, "ssm_inner"),      # [D, 2*dI]
+    (r"\bout_proj\b",     2, "ssm_inner"),      # [dI, D]
+    (r"\bx_proj\b",       2, "ssm_inner"),      # [dI, R]
+    (r"\bdt_proj\b",      1, "ssm_inner"),      # [R, dI] → dI on model
+    (r"\bconv_w\b",       2, "ssm_inner"),      # [dI, K]
+    (r"\bA_log\b",        2, "ssm_inner"),      # [dI, N]
+    (r"\bD_skip\b",       1, "ssm_inner"),      # [dI]
+    (r"\b(wi|wf|wo_gate)\b", 1, "heads"),       # xlstm gate projections
+    (r"\bw_upA\b",        1, "ffn"),
+    (r"\bw_upB\b",        1, "ffn"),
+]
+
+
+def _leaf_path(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(p.name)
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def _spec_for(path: str, ndim: int, shape, model_size: int,
+              model_axis: str = "model") -> P:
+    for pat, dim_from_end, _ in _RULES:
+        if re.search(pat, path):
+            if ndim >= dim_from_end:
+                d = ndim - dim_from_end
+                if shape[d] % model_size == 0:
+                    axes: list = [None] * ndim
+                    axes[d] = model_axis
+                    return P(*axes)
+                # primary dim not divisible (e.g. 8 kv heads on a 16-way
+                # axis): fall back to the largest divisible dim, else
+                # replicate — pjit rejects uneven shards outright.
+                order = sorted(range(ndim), key=lambda i: -shape[i])
+                for d2 in order:
+                    if shape[d2] % model_size == 0 and shape[d2] >= \
+                            model_size:
+                        axes = [None] * ndim
+                        axes[d2] = model_axis
+                        return P(*axes)
+                return P()
+    return P()   # replicated (norms, small biases, scalars)
+
+
+def param_specs(params_shape, mesh: Mesh):
+    """Params (or eval_shape thereof) → matching PartitionSpec pytree."""
+    model_axis = "model" if "model" in mesh.axis_names else None
+    model_size = mesh.shape.get("model", 1)
+
+    def fn(path, leaf):
+        if model_axis is None:
+            return P()
+        return _spec_for(_leaf_path(path), len(leaf.shape), leaf.shape,
+                         model_size)
+
+    return jax.tree_util.tree_map_with_path(fn, params_shape)
+
+
+def act_spec(mesh: Mesh, *more_axes) -> P:
+    """Activation spec: batch over (pod, data), then given axes."""
+    return P(batch_axes(mesh), *more_axes)
+
+
+def cache_specs(mesh: Mesh):
+    """KV cache spec: [B, Hkv, S, hd] → batch on (pod,data), heads on model."""
+    return P(batch_axes(mesh), "model", None, None)
+
+
+def extend_specs(specs, mesh: Mesh, params_shape, axis: str = "data"):
+    """Shard each leaf's largest unsharded divisible dim over ``axis``.
+
+    Applied to optimizer moments this is **ZeRO-1**; applied to the
+    parameters themselves it is **FSDP** (weights gathered per layer
+    inside the step, stored 1/data-fraction per device).
+    """
+    size = mesh.shape.get(axis, 1)
+
+    def fn(spec, leaf):
+        if size <= 1 or not hasattr(leaf, "shape") or len(leaf.shape) == 0:
+            return spec
+        cur = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        # choose the largest dim not already sharded & divisible by axis
+        order = np.argsort([-s for s in leaf.shape])
+        for d in order:
+            if cur[d] is None and leaf.shape[d] % size == 0 \
+                    and leaf.shape[d] >= size:
+                cur[d] = axis
+                return P(*cur)
+        return spec
+
+    return jax.tree_util.tree_map(fn, specs, params_shape)
+
+
+def zero1_specs(specs, mesh: Mesh, params_shape):
+    return extend_specs(specs, mesh, params_shape, "data")

@@ -1,0 +1,548 @@
+"""Unified LM: dense / MoE / SSM / hybrid / enc-dec from one ArchConfig.
+
+Layers are stacked into *pattern groups* and scanned: a group is one cycle
+of ``block_pattern`` × ``attention_pattern`` (e.g. Gemma-3's 5 local + 1
+global, Jamba's 7 mamba + 1 attn); parameters carry a leading [G] dim and
+``lax.scan`` runs the G groups — one traced copy of the cycle regardless
+of depth, which keeps 512-device HLO small and compile times sane.
+
+Entry points per shape kind:
+  * ``apply``       — training forward → logits [B, S, V]
+  * ``encode``      — whisper encoder over frame embeddings
+  * ``prefill``     — forward over a prompt, returns last-token logits +
+                      filled caches (KV for attn, state for SSM)
+  * ``decode_step`` — one token against caches (scan over groups carrying
+                      the hidden state, caches as scan xs/ys)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from . import attention as A
+from . import mamba as Mb
+from . import xlstm as X
+from .layers import (embed_init, dense_init, layer_norm, mlp_apply,
+                     mlp_init, norm_init, rms_norm)
+from .moe import moe_apply, moe_init
+
+__all__ = ["LM", "cycle_len"]
+
+MAX_LEARNED_POS = 32768
+
+
+def cycle_len(cfg: ArchConfig) -> int:
+    import math
+    a, b = len(cfg.block_pattern), len(cfg.attention_pattern)
+    return a * b // math.gcd(a, b)
+
+
+def _norm(cfg):
+    return rms_norm if cfg.norm == "rmsnorm" else layer_norm
+
+
+def _slot_info(cfg: ArchConfig, slot: int, *, decoder: bool = True):
+    kind = cfg.block_pattern[slot % len(cfg.block_pattern)]
+    attn_kind = cfg.attention_pattern[slot % len(cfg.attention_pattern)]
+    window = cfg.window if attn_kind == "local" else None
+    spec = A.AttnSpec(cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd,
+                      qkv_bias=cfg.qkv_bias, window=window,
+                      softcap=cfg.logit_softcap,
+                      rope_theta=cfg.rope_theta, mrope=cfg.mrope,
+                      causal=decoder)
+    is_moe = cfg.layer_is_moe(slot)
+    return kind, spec, is_moe, window
+
+
+# ---------------------------------------------------------------- init
+
+def _block_init(key, cfg: ArchConfig, slot: int, *, cross: bool = False,
+                decoder: bool = True):
+    kind, spec, is_moe, _ = _slot_info(cfg, slot, decoder=decoder)
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {"norm1": norm_init(cfg.d_model)}
+    if cfg.norm == "layernorm":
+        p["norm1"]["bias"] = jnp.zeros((cfg.d_model,))
+    if kind == "attn":
+        p["attn"] = A.attn_init(ks[0], spec)
+    elif kind == "mamba":
+        p["mamba"] = Mb.mamba_init(ks[0], cfg.d_model,
+                                   expand=cfg.ssm_expand,
+                                   state=cfg.ssm_state, conv=cfg.ssm_conv)
+    elif kind == "mlstm":
+        p["cell"] = X.mlstm_init(ks[0], cfg.d_model, cfg.num_heads)
+    elif kind == "slstm":
+        p["cell"] = X.slstm_init(ks[0], cfg.d_model, cfg.num_heads)
+    else:
+        raise ValueError(kind)
+    if cross and kind == "attn":
+        p["normx"] = norm_init(cfg.d_model)
+        p["xattn"] = A.attn_init(ks[1], spec)
+    if cfg.d_ff > 0 and kind in ("attn", "mamba"):
+        p["norm2"] = norm_init(cfg.d_model)
+        if cfg.norm == "layernorm":
+            p["norm2"]["bias"] = jnp.zeros((cfg.d_model,))
+        if is_moe:
+            p["moe"] = moe_init(ks[2], cfg.d_model, cfg.d_ff,
+                                cfg.moe_experts)
+        else:
+            p["mlp"] = mlp_init(ks[2], cfg.d_model, cfg.d_ff,
+                                gated=(cfg.act == "silu"))
+    return p
+
+
+# ---------------------------------------------------------------- apply
+
+def _positions_for(cfg: ArchConfig, b: int, s: int, offset=0):
+    pos = jnp.arange(s, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (b, s))
+    if cfg.mrope:
+        return jnp.broadcast_to(pos[None], (3, b, s))
+    return pos
+
+
+def _project_cross_kv(enc_out, p_attn, spec):
+    """Project encoder states with a block's wk/wv → [B, Hkv, Se, hd]."""
+    be, se, _ = enc_out.shape
+    kx = (enc_out @ p_attn["wk"].astype(enc_out.dtype)).reshape(be, se, spec.num_kv_heads,
+                                          spec.head_dim).transpose(0, 2, 1, 3)
+    vx = (enc_out @ p_attn["wv"].astype(enc_out.dtype)).reshape(be, se, spec.num_kv_heads,
+                                          spec.head_dim).transpose(0, 2, 1, 3)
+    return kx, vx
+
+
+def _block_apply(cfg: ArchConfig, slot: int, x, p, positions, *,
+                 enc_out=None, impl: str, decoder: bool = True,
+                 return_state: bool = False):
+    """Full-sequence forward for one layer.
+
+    Returns (x, aux, extras): extras is (k, v[, cross_k, cross_v]) for attn
+    layers or the final recurrent state for SSM layers (when
+    ``return_state``), feeding prefill cache construction.
+    """
+    kind, spec, is_moe, _ = _slot_info(cfg, slot, decoder=decoder)
+    nrm = _norm(cfg)
+    aux = {"load_balance": jnp.zeros((), jnp.float32),
+           "router_z": jnp.zeros((), jnp.float32)}
+    in_dtype = x.dtype
+    h = nrm(x, p["norm1"], cfg.norm_eps)
+    extras = None
+    if kind == "attn":
+        rope_pos = positions if cfg.pos == "rope" else None
+        q, k, v = A._project_qkv(h, p["attn"], spec, rope_pos)
+        out = A._attention(q, k, v, causal=spec.causal, window=spec.window,
+                           softcap=spec.softcap, scale=None, impl=impl)
+        b_, s_ = h.shape[0], h.shape[1]
+        out = out.transpose(0, 2, 1, 3).reshape(b_, s_, -1)
+        x = x + out @ p["attn"]["wo"].astype(out.dtype)
+        extras = {"k": k, "v": v}
+        if enc_out is not None and "xattn" in p:
+            hx = nrm(x, p["normx"], cfg.norm_eps)
+            qx, _, _ = A._project_qkv(hx, p["xattn"], spec, None)
+            kx, vx = _project_cross_kv(enc_out, p["xattn"], spec)
+            xo = A._attention(qx, kx, vx, causal=False, window=None,
+                              softcap=None, scale=None, impl=impl)
+            xo = xo.transpose(0, 2, 1, 3).reshape(b_, s_, -1)
+            x = x + xo @ p["xattn"]["wo"].astype(xo.dtype)
+            extras["cross_k"] = kx
+            extras["cross_v"] = vx
+    elif kind == "mamba":
+        if return_state:
+            y, extras = Mb.mamba_apply(h, p["mamba"], return_state=True)
+        else:
+            y = Mb.mamba_apply(h, p["mamba"])
+        x = x + y
+    elif kind == "mlstm":
+        if return_state:
+            y, extras = X.mlstm_apply(h, p["cell"], cfg.num_heads,
+                                      return_state=True)
+        else:
+            y = X.mlstm_apply(h, p["cell"], cfg.num_heads)
+        x = x + y
+    elif kind == "slstm":
+        if return_state:
+            y, extras = X.slstm_apply(h, p["cell"], cfg.num_heads,
+                                      return_state=True)
+        else:
+            y = X.slstm_apply(h, p["cell"], cfg.num_heads)
+        x = x + y
+    if "mlp" in p or "moe" in p:
+        h2 = nrm(x, p["norm2"], cfg.norm_eps)
+        if "moe" in p:
+            mo, a = moe_apply(h2, p["moe"], top_k=cfg.moe_top_k,
+                              capacity_factor=cfg.moe_capacity_factor,
+                              act=cfg.act,
+                              group_size=cfg.moe_group_size)
+            aux = a
+            x = x + mo
+        else:
+            x = x + mlp_apply(h2, p["mlp"], cfg.act)
+    return x.astype(in_dtype), aux, extras
+
+
+def _block_decode(cfg: ArchConfig, slot: int, x, p, cache, pos, *,
+                  enc_out=None):
+    """Single-token step; returns (x, new_cache)."""
+    kind, spec, is_moe, window = _slot_info(cfg, slot)
+    nrm = _norm(cfg)
+    in_dtype = x.dtype
+    h = nrm(x, p["norm1"], cfg.norm_eps)
+    if kind == "attn":
+        b = x.shape[0]
+        rolling = window is not None
+        if cfg.pos == "rope":
+            positions = jnp.broadcast_to(
+                jnp.asarray(pos, jnp.int32)[None, None], (x.shape[0], 1))
+            if cfg.mrope:
+                positions = jnp.broadcast_to(positions[None], (3, b, 1))
+        else:
+            positions = None
+        q, k, v = A._project_qkv(h, p["attn"], spec, positions)
+        smax = cache["k"].shape[2]
+        slot_pos = (pos % smax) if rolling else pos
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, slot_pos, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, slot_pos, 0))
+        new_cache = dict(cache)
+        new_cache["k"], new_cache["v"] = ck, cv
+        out = A.decode_attention(
+            q, {"k": ck, "v": cv, "len": jnp.asarray(pos + 1, jnp.int32)},
+            window=window, softcap=spec.softcap, rolling=rolling)
+        out = out.transpose(0, 2, 1, 3).reshape(x.shape[0], 1, -1)
+        x = x + out @ p["attn"]["wo"].astype(out.dtype)
+        if "cross_k" in cache and "xattn" in p:
+            hx = nrm(x, p["normx"], cfg.norm_eps)
+            qx, _, _ = A._project_qkv(hx, p["xattn"], spec, None)
+            xo = A.decode_attention(
+                qx, {"k": cache["cross_k"], "v": cache["cross_v"],
+                     "len": jnp.asarray(cache["cross_k"].shape[2],
+                                        jnp.int32)})
+            xo = xo.transpose(0, 2, 1, 3).reshape(x.shape[0], 1, -1)
+            x = x + xo @ p["xattn"]["wo"].astype(xo.dtype)
+        cache = new_cache
+    elif kind == "mamba":
+        y, cache = Mb.mamba_decode(h, p["mamba"], cache)
+        x = x + y
+    elif kind == "mlstm":
+        y, cache = X.mlstm_decode(h, p["cell"], cfg.num_heads, cache)
+        x = x + y
+    elif kind == "slstm":
+        y, cache = X.slstm_decode(h, p["cell"], cfg.num_heads, cache)
+        x = x + y
+    if "mlp" in p or "moe" in p:
+        h2 = nrm(x, p["norm2"], cfg.norm_eps)
+        if "moe" in p:
+            mo, _ = moe_apply(h2, p["moe"], top_k=cfg.moe_top_k,
+                              capacity_factor=cfg.moe_capacity_factor,
+                              act=cfg.act,
+                              group_size=cfg.moe_group_size)
+            x = x + mo
+        else:
+            x = x + mlp_apply(h2, p["mlp"], cfg.act)
+    return x.astype(in_dtype), cache
+
+
+# ---------------------------------------------------------------- model
+
+class LM:
+    def __init__(self, cfg: ArchConfig, *, impl: str = "reference",
+                 remat: str = "none", mesh=None, seq_parallel: bool = True):
+        self.cfg = cfg
+        self.impl = impl
+        self.remat = remat
+        self.mesh = mesh            # enables activation sharding constraints
+        self.seq_parallel = seq_parallel
+        self.cyc = cycle_len(cfg)
+        assert cfg.num_layers % self.cyc == 0, \
+            f"{cfg.name}: layers {cfg.num_layers} not divisible by " \
+            f"pattern cycle {self.cyc}"
+        self.groups = cfg.num_layers // self.cyc
+        self.enc_groups = cfg.encoder_layers  # encoder: uniform layers
+
+    # ------------------------------------------------------------- init
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        ks = jax.random.split(key, 8)
+        p: Dict[str, Any] = {"embed": embed_init(ks[0], cfg.vocab_size,
+                                                 cfg.d_model)}
+        if cfg.pos == "learned":
+            p["pos_embed"] = (jax.random.normal(
+                ks[1], (MAX_LEARNED_POS, cfg.d_model), jnp.float32)
+                * 0.02)
+        cross = cfg.encoder_layers > 0
+
+        def stack_group(key, init_one):
+            keys = jax.random.split(key, self.groups)
+            return jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs),
+                *[init_one(k) for k in keys])
+
+        p["blocks"] = {}
+        for s in range(self.cyc):
+            p["blocks"][f"slot{s}"] = stack_group(
+                jax.random.fold_in(ks[2], s),
+                lambda k, s=s: _block_init(k, cfg, s, cross=cross))
+        if cfg.encoder_layers > 0:
+            enc_cfg = cfg
+            keys = jax.random.split(ks[3], cfg.encoder_layers)
+            p["enc_blocks"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs),
+                *[_block_init(k, enc_cfg, 0, decoder=False) for k in keys])
+            p["enc_norm"] = norm_init(cfg.d_model)
+            p["enc_in"] = dense_init(ks[4], cfg.d_model, cfg.d_model)
+        p["final_norm"] = norm_init(cfg.d_model)
+        if cfg.norm == "layernorm":
+            p["final_norm"]["bias"] = jnp.zeros((cfg.d_model,))
+            if "enc_norm" in p:
+                p["enc_norm"]["bias"] = jnp.zeros((cfg.d_model,))
+        if not cfg.tie_embeddings:
+            p["lm_head"] = dense_init(ks[5], cfg.d_model, cfg.vocab_size)
+        return p
+
+    # --------------------------------------------------------- helpers
+    def _embed(self, p, tokens, positions):
+        cfg = self.cfg
+        adt = jnp.dtype(cfg.act_dtype)
+        x = jnp.take(p["embed"], tokens, axis=0).astype(adt)
+        if cfg.pos == "learned":
+            pos = positions if positions.ndim == 2 else positions[0]
+            x = x + jnp.take(p["pos_embed"], pos, axis=0).astype(adt)
+        return x
+
+    def _logits(self, p, x):
+        cfg = self.cfg
+        head = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+        return jax.lax.dot_general(
+            x, head.astype(x.dtype), (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    def _seq_constraint(self, x):
+        """Sequence-parallel activation constraint (MaxText-style).
+
+        Between blocks, activations shard [batch → (pod,data), seq →
+        model]; the layer-scan's saved carries then occupy 1/model of the
+        memory, at the cost of per-layer seq all-gather/reduce-scatter —
+        the classic sequence-parallelism trade, measured in §Perf.
+        """
+        if self.mesh is None or "model" not in self.mesh.axis_names \
+                or not self.seq_parallel:
+            return x
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from .sharding import batch_axes
+        b, s, _ = x.shape
+        n_model = self.mesh.shape["model"]
+        baxes = batch_axes(self.mesh)
+        n_b = 1
+        for a in baxes:
+            n_b *= self.mesh.shape[a]
+        bspec = baxes if b % n_b == 0 else None
+        sspec = "model" if s % n_model == 0 and s >= n_model else None
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(bspec, sspec, None)))
+
+    def _scan_blocks(self, p, x, positions, enc_out=None):
+        cfg = self.cfg
+        impl = self.impl
+
+        remat = self.remat
+
+        def body(carry, grp):
+            x = carry
+            aux_tot = jnp.zeros((2,), jnp.float32)
+            for s in range(self.cyc):
+                def one(x, gp, s=s):
+                    y, aux, _ = _block_apply(cfg, s, x, gp, positions,
+                                             enc_out=enc_out, impl=impl)
+                    return y, (aux["load_balance"], aux["router_z"])
+
+                if remat != "none":
+                    # nested remat: during the group's backward recompute
+                    # only ONE layer's internals are ever live
+                    one = jax.checkpoint(
+                        one, policy=jax.checkpoint_policies.dots_saveable
+                        if remat == "dots" else
+                        jax.checkpoint_policies.nothing_saveable)
+                x, (lb, rz) = one(x, grp[f"slot{s}"])
+                aux_tot = aux_tot + jnp.stack([lb, rz])
+            return self._seq_constraint(x), aux_tot
+
+        if self.remat != "none":
+            policy = (jax.checkpoint_policies.dots_saveable
+                      if self.remat == "dots" else
+                      jax.checkpoint_policies.nothing_saveable)
+            body = jax.checkpoint(body, policy=policy)
+        x, auxs = jax.lax.scan(body, x, p["blocks"])
+        return x, auxs.sum(axis=0)
+
+    # ------------------------------------------------------------ apply
+    def hidden(self, p, tokens, positions=None, frames=None):
+        """Training forward up to the final norm → (hidden, aux dict)."""
+        cfg = self.cfg
+        b, s = tokens.shape
+        positions = (_positions_for(cfg, b, s) if positions is None
+                     else positions)
+        x = self._embed(p, tokens, positions)
+        enc_out = None
+        if cfg.encoder_layers > 0:
+            if frames is None:
+                raise ValueError(f"{cfg.name} needs frame embeddings")
+            enc_out = self.encode(p, frames)
+        x, aux2 = self._scan_blocks(p, x, positions, enc_out=enc_out)
+        x = _norm(cfg)(x, p["final_norm"], cfg.norm_eps)
+        return x, {"load_balance": aux2[0], "router_z": aux2[1]}
+
+    def head(self, p):
+        return p["embed"].T if self.cfg.tie_embeddings else p["lm_head"]
+
+    def apply(self, p, tokens, positions=None, frames=None):
+        """Training forward → (logits [B,S,V] fp32, aux dict)."""
+        x, aux = self.hidden(p, tokens, positions, frames)
+        return self._logits(p, x), aux
+
+    def encode(self, p, frames):
+        """Whisper encoder over precomputed frame embeddings [B, S, D]."""
+        cfg = self.cfg
+        adt = jnp.dtype(cfg.act_dtype)
+        x = (frames.astype(adt) @ p["enc_in"].astype(adt))
+        b, s, _ = x.shape
+        positions = _positions_for(cfg, b, s)
+        if cfg.pos == "learned":
+            x = x + jnp.take(p["pos_embed"], positions, axis=0
+                             ).astype(jnp.bfloat16)
+
+        def body(x, lp):
+            x, _, _ = _block_apply(cfg, 0, x, lp, positions,
+                                   impl=self.impl, decoder=False)
+            return x, None
+
+        x, _ = jax.lax.scan(body, x, p["enc_blocks"])
+        return layer_norm(x, p["enc_norm"], cfg.norm_eps) \
+            if cfg.norm == "layernorm" else rms_norm(x, p["enc_norm"],
+                                                     cfg.norm_eps)
+
+    # ---------------------------------------------------------- serving
+    def init_caches(self, batch: int, max_len: int,
+                    enc_len: Optional[int] = None):
+        """Stacked per-slot caches [G, ...] matching the block scan."""
+        cfg = self.cfg
+        caches = {}
+        for s in range(self.cyc):
+            kind, spec, _, window = _slot_info(cfg, s)
+            if kind == "attn":
+                size = min(window, max_len) if window else max_len
+                c = {"k": jnp.zeros((batch, cfg.num_kv_heads, size,
+                                     cfg.hd), jnp.bfloat16),
+                     "v": jnp.zeros((batch, cfg.num_kv_heads, size,
+                                     cfg.hd), jnp.bfloat16)}
+                if cfg.encoder_layers > 0:
+                    el = enc_len or max_len
+                    c["cross_k"] = jnp.zeros((batch, cfg.num_kv_heads, el,
+                                              cfg.hd), jnp.bfloat16)
+                    c["cross_v"] = jnp.zeros((batch, cfg.num_kv_heads, el,
+                                              cfg.hd), jnp.bfloat16)
+            elif kind == "mamba":
+                di = cfg.ssm_expand * cfg.d_model
+                c = {"h": jnp.zeros((batch, di, cfg.ssm_state),
+                                    jnp.float32),
+                     "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di),
+                                       jnp.float32)}
+            elif kind == "mlstm":
+                c = X.mlstm_cache_init(batch, cfg.d_model, cfg.num_heads)
+            elif kind == "slstm":
+                c = X.slstm_cache_init(batch, cfg.d_model)
+            caches[f"slot{s}"] = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (self.groups,) + x.shape),
+                c)
+        return caches
+
+    def decode_step(self, p, tokens, caches, pos):
+        """tokens [B, 1], caches (stacked), pos scalar → (logits, caches)."""
+        cfg = self.cfg
+        b = tokens.shape[0]
+        positions = _positions_for(cfg, b, 1, offset=pos)
+        x = self._embed(p, tokens, positions)
+
+        def body(x, inp):
+            grp, gcache = inp
+            new_c = {}
+            for s in range(self.cyc):
+                x, c = _block_decode(cfg, s, x, grp[f"slot{s}"],
+                                     gcache[f"slot{s}"], pos)
+                new_c[f"slot{s}"] = c
+            return x, new_c
+
+        x, new_caches = jax.lax.scan(body, x, (p["blocks"], caches))
+        x = _norm(cfg)(x, p["final_norm"], cfg.norm_eps)
+        return self._logits(p, x[:, -1:, :]), new_caches
+
+    def prefill(self, p, tokens, frames=None):
+        """Prompt forward → (last-token logits, filled caches)."""
+        cfg = self.cfg
+        b, s = tokens.shape
+        positions = _positions_for(cfg, b, s)
+        x = self._embed(p, tokens, positions)
+        enc_out = None
+        if cfg.encoder_layers > 0:
+            enc_out = self.encode(p, frames)
+        caches = {}
+
+        def body(carry, grp):
+            x = carry
+            extras_out = {}
+            for sl in range(self.cyc):
+                x, _, extras = _block_apply(
+                    cfg, sl, x, grp[f"slot{sl}"], positions,
+                    enc_out=enc_out, impl=self.impl, return_state=True)
+                extras_out[f"slot{sl}"] = extras
+            return x, extras_out
+
+        x, extras = jax.lax.scan(body, x, p["blocks"])
+        x = _norm(cfg)(x, p["final_norm"], cfg.norm_eps)
+        logits = self._logits(p, x[:, -1:, :])
+        caches = self._caches_from_prefill(extras, s, b, enc_out)
+        return logits, caches
+
+    def _caches_from_prefill(self, extras, s, b, enc_out,
+                             decode_budget: int = 1024):
+        """extras [G-stacked per slot] → decode caches.
+
+        Rolling (windowed) caches are laid out so that slot == abs_pos %
+        window, matching the modulo writes of ``decode_step``.
+        """
+        cfg = self.cfg
+        caches = self.init_caches(b, max_len=s + decode_budget,
+                                  enc_len=enc_out.shape[1]
+                                  if enc_out is not None else None)
+        for sl in range(self.cyc):
+            key = f"slot{sl}"
+            kind = cfg.layer_kind(sl)
+            ex = extras[key]
+            if kind == "attn":
+                k, v = ex["k"], ex["v"]          # [G, B, Hq?, S, hd]
+                window = _slot_info(cfg, sl)[3]
+                if window and s >= window:
+                    k = k[..., s - window:s, :]
+                    v = v[..., s - window:s, :]
+                    shift = s % window
+                    k = jnp.roll(k, shift, axis=-2)
+                    v = jnp.roll(v, shift, axis=-2)
+                caches[key]["k"] = jax.lax.dynamic_update_slice(
+                    caches[key]["k"], k.astype(jnp.bfloat16),
+                    (0, 0, 0, 0, 0))
+                caches[key]["v"] = jax.lax.dynamic_update_slice(
+                    caches[key]["v"], v.astype(jnp.bfloat16),
+                    (0, 0, 0, 0, 0))
+                if "cross_k" in ex:
+                    caches[key]["cross_k"] = ex["cross_k"].astype(
+                        jnp.bfloat16)
+                    caches[key]["cross_v"] = ex["cross_v"].astype(
+                        jnp.bfloat16)
+            elif ex is not None:
+                caches[key].update(ex)
+        return caches

@@ -1,0 +1,309 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM (arXiv 2405.04517 §2.3) is a linear-attention-style cell with
+exponential input gates and matrix memory C ∈ ℝ^{dh×dh} per head.  Training
+and prefill use the *chunked* parallel form: intra-chunk decayed attention
+(quadratic within a small chunk) + inter-chunk state carry — sub-quadratic
+overall, the same structure as our Mamba path.  Decode is the O(1)
+recurrence.  Gates use sigmoid forget + clipped-exp input (the paper's
+stabilized exponential gating, with the running-max stabilizer folded into
+the per-chunk log-space cumulative sums).
+
+sLSTM (§2.2) has scalar memory with recurrent (block-diagonal per-head)
+connections — inherently sequential, computed with ``lax.scan`` over time;
+the paper itself notes it is not parallelizable (their GPU kernel
+parallelizes over heads, which the vectorized scan body gives us for free).
+A gated pf=4/3 MLP follows, per the paper's block layout.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, silu
+from .sharding import constrain
+
+__all__ = ["mlstm_init", "mlstm_apply", "mlstm_decode", "mlstm_cache_init",
+           "slstm_init", "slstm_apply", "slstm_decode", "slstm_cache_init"]
+
+_I_CLIP = 5.0
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+
+def mlstm_init(key, d: int, num_heads: int, *, pf: int = 2,
+               dtype=jnp.float32):
+    di = pf * d
+    dh = di // num_heads
+    ks = jax.random.split(key, 8)
+
+    def headwise(k):
+        # per-head block-diagonal projection (paper: q/k/v per head)
+        return (jax.random.normal(k, (num_heads, dh, dh), jnp.float32)
+                / jnp.sqrt(dh)).astype(dtype)
+
+    return {
+        "w_upA": dense_init(ks[0], d, di, dtype),     # cell input path
+        "w_upB": dense_init(ks[1], d, di, dtype),     # output gate path
+        "wq": headwise(ks[2]),
+        "wk": headwise(ks[3]),
+        "wv": headwise(ks[4]),
+        "wi": dense_init(ks[5], di, num_heads, jnp.float32),
+        "wf": dense_init(ks[6], di, num_heads, jnp.float32),
+        "out_proj": dense_init(ks[7], di, d, dtype),
+    }
+
+
+def _headwise_proj(u, w, num_heads):
+    """u [B, S, dI] × w [H, dh, dh] → [B, H, S, dh]."""
+    b, s, di = u.shape
+    dh = di // num_heads
+    uh = u.reshape(b, s, num_heads, dh)
+    return jnp.einsum("bshd,hde->bhse", uh, w.astype(u.dtype))
+
+
+def _mlstm_gates(u, p):
+    """u [B, S, dI] → log_f, log_i [B, S, H] (stabilized)."""
+    f_raw = u.astype(jnp.float32) @ p["wf"]
+    i_raw = u.astype(jnp.float32) @ p["wi"]
+    log_f = jax.nn.log_sigmoid(f_raw)
+    log_i = jnp.clip(i_raw, -_I_CLIP, _I_CLIP)
+    return log_f, log_i
+
+
+def mlstm_apply(x, p, num_heads: int, *, chunk: int = None,
+                return_state: bool = False):
+    """x [B, S, D] → [B, S, D] via chunked decayed linear attention."""
+    import os
+    chunk = chunk or int(os.environ.get("REPRO_SSM_CHUNK", 256))
+    b, s, d = x.shape
+    u = silu(x @ p["w_upA"].astype(x.dtype))
+    og = silu(x @ p["w_upB"].astype(x.dtype))
+    di = u.shape[-1]
+    dh = di // num_heads
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+
+    q = _headwise_proj(u, p["wq"], num_heads).astype(jnp.float32) * scale
+    k = _headwise_proj(u, p["wk"], num_heads).astype(jnp.float32)
+    v = _headwise_proj(u, p["wv"], num_heads).astype(jnp.float32)
+    log_f, log_i = _mlstm_gates(u, p)                     # [B, S, H]
+    log_f = log_f.transpose(0, 2, 1)                      # [B, H, S]
+    log_i = log_i.transpose(0, 2, 1)
+
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        log_f = jnp.pad(log_f, ((0, 0), (0, 0), (0, pad)))
+        log_i = jnp.pad(log_i, ((0, 0), (0, 0), (0, pad)),
+                        constant_values=-_I_CLIP)
+    nc = (s + pad) // c
+
+    def split_chunks(t, tail):
+        return jnp.moveaxis(t.reshape(b, num_heads, nc, c, *tail), 2, 0)
+
+    qc = split_chunks(q, (dh,))
+    kc = split_chunks(k, (dh,))
+    vc = split_chunks(v, (dh,))
+    fc = split_chunks(log_f, ())
+    ic = split_chunks(log_i, ())
+
+    @jax.checkpoint
+    def chunk_body(carry, inp):
+      # kernel_interior: the decay matrices/scores live in VMEM on the
+      # chunked Pallas path (ssm_scan kernel family) — bucketed by the
+      # roofline analyzer like flash_interior
+      with jax.named_scope("kernel_interior"):
+        C, n = carry                           # [B,H,dh,dh], [B,H,dh]
+        qq, kk, vv, lf, li = inp
+        Lf = jnp.cumsum(lf, axis=-1)           # [B,H,c] inclusive
+        # intra-chunk decay matrix (log space, lower triangular)
+        dmat = Lf[..., :, None] - Lf[..., None, :] + li[..., None, :]
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        dmat = jnp.where(tri, dmat, -jnp.inf)
+        w = jnp.exp(dmat)                      # [B,H,c,c]
+        scores = jnp.einsum("bhtd,bhsd->bhts", qq, kk) * w
+        intra = jnp.einsum("bhts,bhsd->bhtd", scores, vv)
+        n_intra = jnp.einsum("bhts,bhsd->bhtd", w *
+                             jnp.ones_like(scores), kk)
+        # inter-chunk contribution
+        decay_t = jnp.exp(Lf)[..., None]       # [B,H,c,1]
+        inter = jnp.einsum("bhtd,bhde->bhte", qq * decay_t, C)
+        n_inter = decay_t * n[:, :, None, :]
+        num = intra + inter
+        n_tot = n_intra + n_inter
+        denom = jnp.maximum(
+            jnp.abs(jnp.einsum("bhtd,bhtd->bht", qq, n_tot))[..., None],
+            1.0)
+        h = num / denom
+        # carry update
+        decay_end = jnp.exp(Lf[..., -1:] - Lf)            # [B,H,c]
+        ki = kk * jnp.exp(li)[..., None] * decay_end[..., None]
+        C_new = jnp.exp(Lf[..., -1])[..., None, None] * C + \
+            jnp.einsum("bhsd,bhse->bhde", ki, vv)
+        n_new = jnp.exp(Lf[..., -1])[..., None] * n + ki.sum(axis=2)
+        # pin carry sharding: GSPMD loop-carry propagation replicates the
+        # [B,H,dh,dv] matrix memory otherwise (observed: 4 GiB/chunk repl.)
+        C_new = constrain(C_new, ("batch", None, None, "model"))
+        n_new = constrain(n_new, ("batch", None, "model"))
+        return (C_new, n_new), h
+
+    C0 = jnp.zeros((b, num_heads, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, num_heads, dh), jnp.float32)
+    (CT, nT), hs = jax.lax.scan(chunk_body, (C0, n0), (qc, kc, vc, fc, ic))
+    h = jnp.moveaxis(hs, 0, 2).reshape(b, num_heads, nc * c, dh)[:, :, :s]
+    h = h.transpose(0, 2, 1, 3).reshape(b, s, di).astype(x.dtype)
+    out = (h * og) @ p["out_proj"].astype(h.dtype)
+    if return_state:
+        # exact: padded steps have log_f = 0 (no decay) and k = v = 0
+        # (no contribution), so (CT, nT) is the state after position s.
+        return out, {"C": CT, "n": nT}
+    return out
+
+
+def mlstm_cache_init(batch: int, d: int, num_heads: int, pf: int = 2):
+    di = pf * d
+    dh = di // num_heads
+    return {"C": jnp.zeros((batch, num_heads, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, num_heads, dh), jnp.float32)}
+
+
+def mlstm_decode(x, p, num_heads: int, cache):
+    """x [B, 1, D] → (y [B, 1, D], cache) — O(1) recurrent update."""
+    b, _, d = x.shape
+    u = silu(x[:, 0] @ p["w_upA"].astype(x.dtype))
+    og = silu(x[:, 0] @ p["w_upB"].astype(x.dtype))
+    di = u.shape[-1]
+    dh = di // num_heads
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    q = _headwise_proj(u[:, None], p["wq"], num_heads)[:, :, 0].astype(
+        jnp.float32) * scale
+    k = _headwise_proj(u[:, None], p["wk"], num_heads)[:, :, 0].astype(
+        jnp.float32)
+    v = _headwise_proj(u[:, None], p["wv"], num_heads)[:, :, 0].astype(
+        jnp.float32)
+    log_f, log_i = _mlstm_gates(u[:, None], p)
+    f = jnp.exp(log_f[:, 0])[..., None]                   # [B,H,1]
+    i = jnp.exp(log_i[:, 0])[..., None]
+    C = f[..., None] * cache["C"] + i[..., None] * \
+        jnp.einsum("bhd,bhe->bhde", k, v)
+    n = f * cache["n"] + i * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n))[..., None],
+                        1.0)
+    h = (num / denom).reshape(b, di).astype(x.dtype)
+    return ((h * og) @ p["out_proj"].astype(h.dtype))[:, None], \
+        {"C": C, "n": n}
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+
+def slstm_init(key, d: int, num_heads: int, dtype=jnp.float32):
+    dh = d // num_heads
+    ks = jax.random.split(key, 10)
+    p = {"out_proj": dense_init(ks[8], d, d, dtype),
+         "mlp": {"w_gate": dense_init(ks[9], d, d * 4 // 3, dtype),
+                 "w_up": dense_init(jax.random.fold_in(ks[9], 1), d,
+                                    d * 4 // 3, dtype),
+                 "w_down": dense_init(jax.random.fold_in(ks[9], 2),
+                                      d * 4 // 3, d, dtype)}}
+    for j, g in enumerate(("i", "f", "z", "o")):
+        p[f"w{g}"] = dense_init(ks[j], d, d, dtype)
+        p[f"r{g}"] = (jax.random.normal(ks[4 + j],
+                                        (num_heads, dh, dh), jnp.float32)
+                      / jnp.sqrt(dh)).astype(dtype)
+        p[f"b{g}"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def _slstm_step(p, num_heads, state, xw_t):
+    """state: (c, n, h, m) each [B, D]; xw_t = precomputed input
+    projections (xi, xf, xz, xo), each [B, D].
+
+    §Perf iteration (cell C): the input GEMMs are hoisted out of the time
+    scan — per-step fusions were re-reading all four [D, D] gate matrices
+    (67–134 MB × S steps = 99% of the memory term); only the [H, dh, dh]
+    head-block recurrences (VMEM-resident in a fused TPU kernel —
+    kernel_interior scope) remain sequential.
+    """
+    c, n, h, m = state
+    xi, xf_, xz, xo = xw_t
+    b, d = xi.shape
+    dh = d // num_heads
+
+    with jax.named_scope("kernel_interior"):
+        def rec(h_prev, r):
+            hh = h_prev.reshape(b, num_heads, dh)
+            return jnp.einsum("bhd,hde->bhe", hh, r.astype(jnp.float32)
+                              ).reshape(b, d)
+
+        hi = xi + rec(h, p["ri"]) + p["bi"]
+        hf = xf_ + rec(h, p["rf"]) + p["bf"]
+        hz = xz + rec(h, p["rz"]) + p["bz"]
+        ho = xo + rec(h, p["ro"]) + p["bo"]
+        # stabilized exponential gating (paper eq. 15–17)
+        m_new = jnp.maximum(hf + m, hi)
+        i_g = jnp.exp(hi - m_new)
+        f_g = jnp.exp(hf + m - m_new)
+        z = jnp.tanh(hz)
+        o = jax.nn.sigmoid(ho)
+        c_new = f_g * c + i_g * z
+        n_new = f_g * n + i_g
+        h_new = o * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, h_new, m_new), h_new
+
+
+def _slstm_inputs(x, p):
+    """Batched input projections for all gates: [B, S, D] × 4 (one GEMM
+    each over the whole sequence — time-parallel, MXU-friendly)."""
+    xf32 = x.astype(jnp.float32)
+    return tuple(xf32 @ p[w].astype(jnp.float32)
+                 for w in ("wi", "wf", "wz", "wo"))
+
+
+def slstm_apply(x, p, num_heads: int, *, return_state: bool = False):
+    """x [B, S, D] → [B, S, D] (sequential scan over time)."""
+    b, s, d = x.shape
+    z0 = jnp.zeros((b, d), jnp.float32)
+    state0 = (z0, z0, z0, z0)
+    xw = tuple(jnp.moveaxis(t, 1, 0) for t in _slstm_inputs(x, p))
+    # checkpointed: backward recomputes the per-step gate activations
+    # instead of saving 4 × [B, D] f32 per time step
+    step = jax.checkpoint(lambda st, xt: _slstm_step(p, num_heads, st, xt))
+    stT, hs = jax.lax.scan(step, state0, xw)
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    out = h @ p["out_proj"].astype(h.dtype)
+    mlp = p["mlp"]
+    dt = out.dtype
+    out = out + (silu(out @ mlp["w_gate"].astype(dt))
+                 * (out @ mlp["w_up"].astype(dt))) @ mlp["w_down"].astype(dt)
+    if return_state:
+        return out, {"c": stT[0], "n": stT[1], "h": stT[2], "m": stT[3]}
+    return out
+
+
+def slstm_cache_init(batch: int, d: int):
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z}
+
+
+def slstm_decode(x, p, num_heads: int, cache):
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    xw = tuple(t[:, 0] for t in _slstm_inputs(x, p))
+    state, h = _slstm_step(p, num_heads, state, xw)
+    h = h.astype(x.dtype)
+    out = h @ p["out_proj"].astype(h.dtype)
+    mlp = p["mlp"]
+    dt = out.dtype
+    out = out + (silu(out @ mlp["w_gate"].astype(dt))
+                 * (out @ mlp["w_up"].astype(dt))) @ mlp["w_down"].astype(dt)
+    return out[:, None], {"c": state[0], "n": state[1], "h": state[2],
+                          "m": state[3]}

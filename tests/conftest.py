@@ -1,0 +1,66 @@
+"""Shared fixtures: a small synthetic spatiotemporal world + catalog.
+
+NOTE: no XLA_FLAGS here — tests must see the real single CPU device; only
+launch/dryrun.py forces 512 host devices (see the dry-run contract).
+"""
+import numpy as np
+import pytest
+
+from repro.fdb import (Schema, build_fdb, DOUBLE, INT, STRING, MESSAGE)
+from repro.fdb.schema import Field
+from repro.exec import Catalog, AdHocEngine
+
+
+@pytest.fixture(scope="session")
+def world():
+    """Deterministic mini world: roads + speed observations (paper §6)."""
+    rng = np.random.default_rng(7)
+    roads_schema = Schema("Roads", [
+        Field("id", INT, indexes=("tag",)),
+        Field("city", STRING, indexes=("tag",)),
+        Field("loc", MESSAGE, fields=[Field("lat", DOUBLE),
+                                      Field("lng", DOUBLE)],
+              indexes=("location",)),
+        Field("polyline", MESSAGE, fields=[
+            Field("lat", DOUBLE, repeated=True),
+            Field("lng", DOUBLE, repeated=True)],
+            indexes=("area",), index_params={"level": 6, "width_m": 30.0}),
+        Field("speed_limit", DOUBLE, indexes=("range",)),
+    ])
+    roads = []
+    for i in range(300):
+        lat = 37.70 + rng.uniform(0, 0.12)
+        lng = -122.52 + rng.uniform(0, 0.14)
+        roads.append({
+            "id": i, "city": "SF" if lat < 37.78 else "OAK",
+            "loc": {"lat": lat, "lng": lng},
+            "polyline": {"lat": [lat, lat + 5e-4, lat + 1e-3],
+                         "lng": [lng, lng + 5e-4, lng + 1e-3]},
+            "speed_limit": float(rng.uniform(20, 80))})
+    obs_schema = Schema("Obs", [
+        Field("road_id", INT, indexes=("tag",)),
+        Field("hour", INT, indexes=("range",)),
+        Field("dow", INT, indexes=("range",)),
+        Field("speed", DOUBLE),
+    ])
+    obs = [{"road_id": int(rng.integers(0, 300)),
+            "hour": int(rng.integers(0, 24)),
+            "dow": int(rng.integers(0, 7)),
+            "speed": float(rng.normal(48, 9))} for _ in range(4000)]
+    return {"roads": roads, "obs": obs,
+            "roads_schema": roads_schema, "obs_schema": obs_schema}
+
+
+@pytest.fixture(scope="session")
+def catalog(world):
+    cat = Catalog(server_slots=16)
+    cat.register(build_fdb("Roads", world["roads_schema"], world["roads"],
+                           num_shards=5))
+    cat.register(build_fdb("Obs", world["obs_schema"], world["obs"],
+                           num_shards=5))
+    return cat
+
+
+@pytest.fixture(scope="session")
+def engine(catalog):
+    return AdHocEngine(catalog, num_servers=5)

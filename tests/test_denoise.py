@@ -1,0 +1,65 @@
+"""De-noising (paper §4.1.3): probabilistic geometry + snapping."""
+import numpy as np
+
+from repro.geo import mercator as M
+from repro.geo.denoise import (prob_location, prob_path, snap_path,
+                               snap_points)
+
+
+def test_prob_location_covers_uncertainty_disk():
+    ix, iy = 5_000_000, 6_000_000
+    mpu = 0.05
+    area = prob_location(ix, iy, accuracy_m=30.0, meters_per_unit=mpu)
+    # the true position may be anywhere within the radius: all inside
+    r_units = 30.0 / mpu
+    for ang in np.linspace(0, 2 * np.pi, 8, endpoint=False):
+        px = np.uint64(ix + 0.9 * r_units * np.cos(ang))
+        py = np.uint64(iy + 0.9 * r_units * np.sin(ang))
+        assert area.contains(np.array([M.interleave(px, py)]))[0]
+
+
+def test_prob_path_is_envelope_not_bbox():
+    """Paper: the strip is an envelope around the path, NOT the bbox."""
+    xs = np.array([0.0, 10_000.0]) + 1_000_000
+    ys = np.array([0.0, 10_000.0]) + 1_000_000
+    strip = prob_path(xs, ys, accuracy_m=20.0, meters_per_unit=0.05)
+    # a bbox corner far from the diagonal must NOT be covered
+    corner = M.interleave(np.uint64(1_000_000 + 9_000),
+                          np.uint64(1_000_000 + 1_000))
+    on_path = M.interleave(np.uint64(1_005_000), np.uint64(1_005_000))
+    assert strip.contains(np.array([on_path]))[0]
+    assert not strip.contains(np.array([corner]))[0]
+
+
+def test_snap_points_prefers_near_and_popular():
+    mpu = 0.05
+    # two candidates: near+unpopular vs slightly-farther+popular
+    cand_x = np.array([1000.0, 1400.0])
+    cand_y = np.array([1000.0, 1000.0])
+    pop = np.array([1.0, 1000.0])
+    idx, _ = snap_points([1180.0], [1000.0], cand_x, cand_y, pop, mpu)
+    assert idx[0] == 1                    # popularity breaks the near-tie
+    # far-but-popular loses when the distance gap is decisive (>4σ)
+    cand_x2 = np.array([1000.0, 3000.0])
+    idx2, _ = snap_points([1010.0], [1000.0], cand_x2, cand_y, pop, mpu)
+    assert idx2[0] == 0
+
+
+def test_snap_path_viterbi_follows_route():
+    """Noisy trace along segment A→B→C snaps to the right sequence."""
+    rng = np.random.default_rng(0)
+    mpu = 0.05
+    # three collinear segments of 2000 units each
+    ax = np.array([0.0, 2000.0, 4000.0])
+    ay = np.zeros(3)
+    bx = ax + 2000.0
+    by = np.zeros(3)
+    pop = np.ones(3)
+    # trace traverses them left to right with noise
+    t = np.linspace(0, 6000, 13)
+    px = t + rng.normal(0, 60.0, t.size)
+    py = rng.normal(0, 60.0, t.size)
+    seq = snap_path(px, py, ax, ay, bx, by, pop, mpu)
+    # must be monotone non-decreasing and span all three segments
+    assert (np.diff(seq) >= 0).all()
+    assert seq[0] == 0 and seq[-1] == 2

@@ -1,0 +1,145 @@
+"""FDb: columnar batches, every index kind vs brute force, persistence."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.fdb import (FDb, Schema, StreamingFDb, build_fdb,
+                       bitmap_count, ids_from_bitmap, DOUBLE, INT, STRING,
+                       MESSAGE)
+from repro.fdb.columnar import Column, ColumnBatch
+from repro.fdb.schema import Field
+from repro.geo import AreaTree, mercator as M
+
+
+def test_columnar_roundtrip():
+    schema = Schema.dynamic("t", {
+        "a": INT, "b": DOUBLE, "s": STRING, "v": (DOUBLE, True),
+        "m.x": INT})
+    recs = [{"a": 1, "b": 2.5, "s": "x", "v": [1.0, 2.0], "m": {"x": 7}},
+            {"a": 2, "b": -1.0, "s": "y", "v": [], "m": {"x": 8}},
+            {"a": 3, "b": 0.0, "s": "x", "v": [3.0], "m": {"x": 9}}]
+    cb = ColumnBatch.from_records(schema, recs)
+    assert cb.to_records() == recs
+    # gather preserves ragged structure
+    g = cb.gather(np.array([2, 0]))
+    assert g.to_records() == [recs[2], recs[0]]
+    # concat with distinct vocabs remaps codes
+    c2 = ColumnBatch.concat([cb, g])
+    assert [r["s"] for r in c2.to_records()] == ["x", "y", "x", "x", "x"]
+
+
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=1,
+                max_size=200),
+       st.floats(-50, 50), st.floats(0, 60))
+@settings(max_examples=50, deadline=None)
+def test_range_index_matches_brute_force(vals, lo, width):
+    from repro.fdb.index import RangeIndex
+    hi = lo + width
+    arr = np.asarray(vals)
+    idx = RangeIndex.build(arr, len(vals))
+    got = set(ids_from_bitmap(idx.lookup(lo, hi), len(vals)).tolist())
+    want = set(np.nonzero((arr >= lo) & (arr <= hi))[0].tolist())
+    assert got == want
+
+
+def test_tag_index(world):
+    db = build_fdb("R2", world["roads_schema"], world["roads"],
+                   num_shards=3)
+    for shard in db.shards:
+        decoded = shard.batch["city"].decode()
+        for city in ("SF", "OAK"):
+            ids = ids_from_bitmap(shard.index("city", "tag").lookup(city),
+                                  shard.n)
+            assert set(ids) == {i for i in range(shard.n)
+                                if decoded[i] == city}
+
+
+def test_location_index_exactness(world):
+    db = build_fdb("R3", world["roads_schema"], world["roads"],
+                   num_shards=2)
+    lat0, lat1, lng0, lng1 = 37.72, 37.79, -122.50, -122.42
+    ix, iy = M.latlng_to_xy(np.array([lat0, lat1]),
+                            np.array([lng0, lng1]))
+    region = AreaTree.from_box(int(ix[0]), int(iy[1]), int(ix[1]),
+                               int(iy[0]), max_level=9)
+    for shard in db.shards:
+        got = set(ids_from_bitmap(
+            shard.index("loc", "location").lookup(region), shard.n))
+        lats = shard.batch["loc.lat"].values
+        lngs = shard.batch["loc.lng"].values
+        want = set(np.nonzero((lats >= lat0) & (lats <= lat1)
+                              & (lngs >= lng0) & (lngs <= lng1))[0])
+        # conservative cover may add boundary docs but never drops any
+        assert got >= want
+        assert len(got) <= len(want) + 5
+
+
+def test_area_index_selects_nearby_paths(world):
+    db = build_fdb("R4", world["roads_schema"], world["roads"],
+                   num_shards=1)
+    shard = db.shards[0]
+    # region around one road's polyline must select that road
+    r = world["roads"][0]
+    ix, iy = M.latlng_to_xy(r["polyline"]["lat"][0], r["polyline"]["lng"][0])
+    region = AreaTree.from_circle(int(ix), int(iy), 500.0, max_level=7)
+    bm = shard.index("polyline", "area").lookup_region(region)
+    sel = set(ids_from_bitmap(bm, shard.n))
+    road_row = shard.batch["id"].values.tolist().index(0)
+    assert road_row in sel
+    # points query
+    bm2 = shard.index("polyline", "area").lookup_points(
+        [r["polyline"]["lat"][1]], [r["polyline"]["lng"][1]])
+    assert road_row in set(ids_from_bitmap(bm2, shard.n))
+
+
+def test_virtual_field_index():
+    schema = Schema("V", [
+        Field("speed", DOUBLE),
+        Field("bucket", INT, indexes=("range",),
+              virtual=lambda cols: (cols["speed"].values // 10
+                                    ).astype(np.int64)),
+    ])
+    recs = [{"speed": float(s)} for s in range(0, 100, 7)]
+    db = build_fdb("V", schema, recs, num_shards=1)
+    shard = db.shards[0]
+    ids = ids_from_bitmap(shard.index("bucket", "range").lookup(3, 4),
+                          shard.n)
+    speeds = shard.batch["speed"].values
+    assert set(ids) == set(np.nonzero((speeds >= 30) & (speeds < 50))[0])
+    # virtual fields are never materialized
+    assert "bucket" not in shard.batch.columns
+
+
+def test_save_load_roundtrip(tmp_path, world):
+    db = build_fdb("R5", world["roads_schema"], world["roads"],
+                   num_shards=3)
+    db.save(str(tmp_path))
+    db2 = FDb.load(str(tmp_path))
+    assert db2.num_docs == db.num_docs
+    s, s2 = db.shards[1], db2.shards[1]
+    assert np.array_equal(s2.index("city", "tag").lookup("SF"),
+                          s.index("city", "tag").lookup("SF"))
+    assert np.allclose(s2.batch["speed_limit"].values,
+                       s.batch["speed_limit"].values)
+
+
+def test_minimal_viable_schema(world):
+    schema = world["roads_schema"]
+    mvs = schema.minimal_viable(["loc.lat", "speed_limit"])
+    assert mvs.has("loc.lat") and mvs.has("speed_limit")
+    assert not mvs.has("polyline.lat") and not mvs.has("city")
+    assert mvs.node_count() < schema.node_count()
+
+
+def test_streaming_fdb():
+    schema = Schema("log", [Field("q", STRING, indexes=("tag",)),
+                            Field("ms", DOUBLE)])
+    s = StreamingFDb("log", schema, flush_threshold=8)
+    for i in range(20):
+        s.append({"q": f"q{i % 2}", "ms": float(i)})
+    snap = s.snapshot()
+    assert snap.num_docs == 20
+    assert snap.num_shards == 3          # 2 flushed + memtable
+    total = sum(bitmap_count(sh.index("q", "tag").lookup("q0"))
+                for sh in snap.shards)
+    assert total == 10

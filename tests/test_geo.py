@@ -1,0 +1,122 @@
+"""Geo substrate: mercator projection + area-tree set algebra (property)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.geo import AreaTree, mercator as M
+from repro.geo.geometry import mercator_dist_m, polyline_length_m
+
+
+# ----------------------------------------------------------- mercator
+
+@given(st.floats(-85.0, 85.0), st.floats(-179.99, 179.99))
+@settings(max_examples=200, deadline=None)
+def test_mercator_roundtrip(lat, lng):
+    ix, iy = M.latlng_to_xy(lat, lng)
+    lat2, lng2 = M.xy_to_latlng(ix, iy)
+    # one cell ≈ 3.7cm ≈ 3.4e-7 deg at equator
+    assert abs(float(lat2) - lat) < 1e-5
+    assert abs(float(lng2) - lng) < 1e-5
+
+
+@given(st.integers(0, 2**30 - 1), st.integers(0, 2**30 - 1))
+@settings(max_examples=200, deadline=None)
+def test_morton_roundtrip(ix, iy):
+    k = M.interleave(np.uint64(ix), np.uint64(iy))
+    ix2, iy2 = M.deinterleave(k)
+    assert int(ix2) == ix and int(iy2) == iy
+
+
+def test_morton_prefix_is_cell():
+    k = M.latlng_to_morton(37.77, -122.41)
+    for level in (1, 4, 7, 10):
+        cell = M.cell_of(k, level)
+        lo, hi = M.cell_range(cell, level)
+        assert lo <= k < hi
+
+
+def test_known_distance():
+    a = M.latlng_to_xy(37.7749, -122.4194)   # SF
+    b = M.latlng_to_xy(37.8044, -122.2711)   # Oakland
+    d = float(mercator_dist_m(a[0], a[1], b[0], b[1]))
+    assert 12_000 < d < 15_000               # ~13.4 km
+
+
+# ----------------------------------------------------------- area trees
+
+def _rand_box(rng, span=1 << 22):
+    x0 = int(rng.integers(1 << 24, (1 << 24) + span))
+    y0 = int(rng.integers(1 << 24, (1 << 24) + span))
+    return AreaTree.from_box(x0, y0, x0 + int(rng.integers(1, span)),
+                             y0 + int(rng.integers(1, span)), max_level=7)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_set_algebra_inclusion_exclusion(seed):
+    rng = np.random.default_rng(seed)
+    a, b = _rand_box(rng), _rand_box(rng)
+    u, i = a | b, a & b
+    assert u.num_keys() == a.num_keys() + b.num_keys() - i.num_keys()
+    d = a - b
+    assert d.num_keys() == a.num_keys() - i.num_keys()
+    # difference disjoint from b; union superset of both
+    assert (d & b).is_empty
+    assert (u & a) == a and (u & b) == b
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=50, deadline=None)
+def test_box_cover_contains_interior(seed):
+    rng = np.random.default_rng(seed)
+    x0, y0 = 5_000_000, 6_000_000
+    x1, y1 = x0 + 3000, y0 + 2000
+    area = AreaTree.from_box(x0, y0, x1, y1, max_level=8)
+    xs = rng.integers(x0, x1 + 1, 100).astype(np.uint64)
+    ys = rng.integers(y0, y1 + 1, 100).astype(np.uint64)
+    assert area.contains(M.interleave(xs, ys)).all()
+
+
+def test_cells_roundtrip_and_node_masks():
+    a = AreaTree.from_box(1_000_000, 2_000_000, 1_003_000, 2_002_000,
+                          max_level=8)
+    cells, levels = a.to_cells()
+    assert AreaTree.from_cells(cells, levels) == a
+    masks = a.node_masks(8)
+    # total child bits == number of level-8 cells covered
+    shift = 6 * (M.MAX_LEVEL - 8)
+    n_cells = sum(int(hi - lo) >> shift for lo, hi in zip(a.lo, a.hi))
+    assert sum(bin(int(m)).count("1") for m in masks.values()) == n_cells
+
+
+def test_circle_and_path_covers():
+    c = AreaTree.from_circle(500_000, 500_000, 2000.0, max_level=8)
+    k = M.interleave(np.uint64(500_000), np.uint64(500_000))
+    assert c.contains(np.array([k]))[0]
+    far = M.interleave(np.uint64(600_000), np.uint64(600_000))
+    assert not c.contains(np.array([far]))[0]
+    # strip cover contains waypoints; preserves area ≥ circle of same width
+    xs = np.array([100_000.0, 101_000.0, 102_000.0])
+    ys = np.array([100_000.0, 100_500.0, 101_500.0])
+    strip = AreaTree.from_path(xs, ys, 300.0, max_level=8)
+    keys = M.interleave(xs.astype(np.uint64), ys.astype(np.uint64))
+    assert strip.contains(keys).all()
+
+
+def test_polygon_cover():
+    # triangle
+    xs = np.array([1_000_000.0, 1_010_000.0, 1_000_000.0])
+    ys = np.array([1_000_000.0, 1_000_000.0, 1_010_000.0])
+    tri = AreaTree.from_polygon(xs, ys, max_level=7)
+    inside = M.interleave(np.uint64(1_002_000), np.uint64(1_002_000))
+    outside = M.interleave(np.uint64(1_009_000), np.uint64(1_009_000))
+    assert tri.contains(np.array([inside]))[0]
+    assert not tri.contains(np.array([outside]))[0]
+
+
+def test_polyline_length():
+    # 1km east along equator ≈ 1000m
+    ix0, iy0 = M.latlng_to_xy(0.0, 0.0)
+    ix1, iy1 = M.latlng_to_xy(0.0, 0.008983)   # ~1km of longitude
+    L = polyline_length_m(np.array([float(ix0), float(ix1)]),
+                          np.array([float(iy0), float(iy1)]))
+    assert abs(L - 1000) < 10

@@ -1,0 +1,89 @@
+"""HLO analyzer: trip counts, dot FLOPs, DUS/slice accounting, collectives.
+
+These parse a hand-written HLO module (the format of
+``compiled.as_text()``) so the roofline terms' arithmetic is pinned down
+independently of XLA's output drift.
+"""
+from repro.launch.hlo_analysis import analyze_hlo, _parse_instr_line
+
+HLO = """
+HloModule jit_step, entry_computation_layout={()->f32[8,16]{1,0}}
+
+%cond.1 (p.0: (s32[], f32[8,16])) -> pred[] {
+  %p.0 = (s32[], f32[8,16]{1,0}) parameter(0)
+  %gte.0 = s32[] get-tuple-element(%p.0), index=0
+  %constant.5 = s32[] constant(12)
+  ROOT %cmp = pred[] compare(%gte.0, %constant.5), direction=LT
+}
+
+%body.1 (p.1: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p.1 = (s32[], f32[8,16]{1,0}) parameter(0)
+  %gte.1 = s32[] get-tuple-element(%p.1), index=0
+  %c1 = s32[] constant(1)
+  %add.0 = s32[] add(%gte.1, %c1)
+  %gte.2 = f32[8,16]{1,0} get-tuple-element(%p.1), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %dot.0 = f32[8,16]{1,0} dot(%gte.2, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar.0 = f32[8,16]{1,0} all-reduce(%dot.0), replica_groups={}, to_apply=%sum.0
+  ROOT %tup = (s32[], f32[8,16]{1,0}) tuple(%add.0, %ar.0)
+}
+
+%sum.0 (a.0: f32[], b.0: f32[]) -> f32[] {
+  %a.0 = f32[] parameter(0)
+  %b.0 = f32[] parameter(1)
+  ROOT %s.0 = f32[] add(%a.0, %b.0)
+}
+
+ENTRY %main (arg.0: f32[8,16]) -> f32[8,16] {
+  %arg.0 = f32[8,16]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,16]{1,0}) tuple(%zero, %arg.0)
+  %while.0 = (s32[], f32[8,16]{1,0}) while(%init), condition=%cond.1, body=%body.1
+  %gte.3 = f32[8,16]{1,0} get-tuple-element(%while.0), index=1
+  %big = f32[1024,8,16]{2,1,0} constant({...})
+  %upd = f32[1,8,16]{2,1,0} reshape(%gte.3)
+  %dus.0 = f32[1024,8,16]{2,1,0} dynamic-update-slice(%big, %upd, %zero, %zero, %zero)
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%while.0), index=1
+}
+"""
+
+
+def test_instr_parser_handles_tuple_types_and_comments():
+    line = ("  %while.1 = (s32[], f32[16,512]{1,0}, /*index=2*/f32[4]{0}) "
+            "while(%t), condition=%c, body=%b")
+    name, typ, op, rest = _parse_instr_line(line)
+    assert name == "while.1" and op == "while"
+    assert "condition=%c" in rest
+
+
+def test_trip_count_multiplies_loop_body():
+    res = analyze_hlo(HLO)
+    # dot: 2·(8·16)·16 = 4096 flops, ×12 trips
+    assert res["flops_per_device"] == 12 * 2 * 8 * 16 * 16
+    # all-reduce operand: 8·16·4 B, ×12 trips
+    ar = res["per_kind"]["all-reduce"]
+    assert ar["bytes"] == 12 * 8 * 16 * 4
+    assert ar["count"] == 12
+    assert not res["warnings"]
+
+
+def test_dus_charged_at_slice_size():
+    res = analyze_hlo(HLO)
+    # the DUS writes a [1,8,16] slice into a [1024,8,16] buffer: the
+    # bytes model must charge 2×slice (512·2 B), never the 1024× buffer
+    dus_charge = 2 * 1 * 8 * 16 * 4
+    full_buffer = 1024 * 8 * 16 * 4
+    assert res["bytes_per_device"] < full_buffer
+    # total = while(12×(dot read/write)) + dus_charge; dot charge per trip:
+    # out 512B + operands (8·16 + 16·16)·4B
+    per_trip = (8 * 16) * 4 * 2 + (16 * 16) * 4 + (8 * 16) * 4 * 2
+    assert res["bytes_per_device"] == 12 * per_trip + dus_charge
+
+
+def test_unresolved_loops_warn_not_crash():
+    broken = HLO.replace("constant(12)", "parameter(1)").replace(
+        "(p.0: (s32[], f32[8,16])) -> pred[]",
+        "(p.0: (s32[], f32[8,16]), q.0: s32[]) -> pred[]")
+    res = analyze_hlo(broken)
+    assert res["warnings"]          # trip count unresolvable → warned
+    assert res["flops_per_device"] == 2 * 8 * 16 * 16   # counted once

@@ -1,0 +1,158 @@
+"""Pallas kernels: interpret-mode vs pure-jnp oracle, shape/dtype sweeps."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+
+RNG = np.random.default_rng(0)
+
+
+# ------------------------------------------------------------- bitset
+
+@pytest.mark.parametrize("w", [1, 31, 32, 100, 4096, 4097, 20_000])
+@pytest.mark.parametrize("op", ["and", "or", "andnot"])
+def test_bitset_binary(w, op):
+    a = jnp.asarray(RNG.integers(0, 2**32, w, dtype=np.uint32))
+    b = jnp.asarray(RNG.integers(0, 2**32, w, dtype=np.uint32))
+    got = ops.bitmap_binary(a, b, op, impl="interpret")
+    want = ops.bitmap_binary(a, b, op, impl="reference")
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+@pytest.mark.parametrize("k,w", [(1, 64), (3, 1000), (5, 8192)])
+def test_bitmap_intersect(k, w):
+    stack = jnp.asarray(RNG.integers(0, 2**32, (k, w), dtype=np.uint32))
+    bm, cnt = ops.bitmap_intersect(stack, impl="interpret")
+    bm_r, cnt_r = ops.bitmap_intersect(stack, impl="reference")
+    assert (np.asarray(bm) == np.asarray(bm_r)).all()
+    assert int(cnt) == int(cnt_r)
+
+
+# ------------------------------------------------------------ compact
+
+@pytest.mark.parametrize("n", [8, 100, 4096, 9_999])
+@pytest.mark.parametrize("density", [0.0, 0.3, 1.0])
+def test_compact(n, density):
+    m = jnp.asarray(RNG.random(n) < density)
+    gi, gc = ops.compact(m, impl="interpret")
+    ri, rc = ops.compact(m, impl="reference")
+    assert int(gc) == int(rc) == int(np.asarray(m).sum())
+    k = int(gc)
+    assert (np.asarray(gi)[:k] == np.asarray(ri)[:k]).all()
+    assert (np.asarray(gi)[k:] == -1).all()
+
+
+@given(st.integers(1, 2000), st.integers(0, 2**31))
+@settings(max_examples=30, deadline=None)
+def test_compact_property(n, seed):
+    rng = np.random.default_rng(seed)
+    m = rng.random(n) < rng.random()
+    idx, cnt = ops.compact(jnp.asarray(m), impl="interpret")
+    idx = np.asarray(idx)
+    # indices are exactly the set positions, ascending
+    assert (idx[:int(cnt)] == np.nonzero(m)[0]).all()
+
+
+# --------------------------------------------------------- segment_agg
+
+@pytest.mark.parametrize("n,g", [(64, 3), (1000, 130), (5000, 257)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_segment_agg(n, g, dtype):
+    gid = jnp.asarray(RNG.integers(-1, g, n, dtype=np.int32))
+    v = jnp.asarray(RNG.normal(size=n).astype(dtype))
+    got = ops.segment_agg(gid, v, g, impl="interpret")
+    want = ops.segment_agg(gid, v, g, impl="reference")
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_segment_agg_vs_host_groupby(world):
+    speeds = np.array([o["speed"] for o in world["obs"]], np.float32)
+    roads = np.array([o["road_id"] for o in world["obs"]], np.int32)
+    cnt, s, s2 = ops.segment_agg(jnp.asarray(roads), jnp.asarray(speeds),
+                                 300, impl="interpret")
+    for rid in (0, 7, 123):
+        sel = speeds[roads == rid]
+        assert int(np.asarray(cnt)[rid]) == sel.size
+        np.testing.assert_allclose(np.asarray(s)[rid], sel.sum(),
+                                   rtol=1e-4)
+
+
+# ------------------------------------------------------ flash attention
+
+def _fa_case(b, hq, hkv, sq, skv, d, dtype=np.float32, **kw):
+    q = jnp.asarray(RNG.normal(size=(b, hq, sq, d)).astype(dtype))
+    k = jnp.asarray(RNG.normal(size=(b, hkv, skv, d)).astype(dtype))
+    v = jnp.asarray(RNG.normal(size=(b, hkv, skv, d)).astype(dtype))
+    got = ops.flash_attention(q, k, v, impl="interpret", block_q=64,
+                              block_k=128, **kw)
+    want = ops.flash_attention(q, k, v, impl="reference", **kw)
+    tol = 2e-2 if dtype == np.dtype(np.float16) else 3e-3
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("shape", [
+    (2, 4, 2, 128, 128, 64),      # GQA causal
+    (1, 2, 1, 256, 256, 64),
+    (1, 8, 8, 64, 64, 128),       # MHA
+    (1, 2, 1, 100, 200, 64),      # ragged + decode offset
+    (1, 4, 2, 1, 384, 64),        # single-token decode
+])
+def test_flash_attention_shapes(shape):
+    _fa_case(*shape)
+
+
+def test_flash_attention_window_softcap():
+    _fa_case(1, 2, 1, 256, 256, 64, window=64)
+    _fa_case(1, 2, 2, 128, 128, 64, softcap=30.0)
+    _fa_case(1, 2, 1, 192, 192, 64, window=50, softcap=20.0)
+
+
+def test_flash_attention_bf16():
+    q = jnp.asarray(RNG.normal(size=(1, 2, 128, 64))).astype(jnp.bfloat16)
+    k = jnp.asarray(RNG.normal(size=(1, 1, 128, 64))).astype(jnp.bfloat16)
+    v = jnp.asarray(RNG.normal(size=(1, 1, 128, 64))).astype(jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, impl="interpret", block_q=64,
+                              block_k=64)
+    want = ops.flash_attention(q, k, v, impl="reference")
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+# ------------------------------------------------------------ ssm scan
+
+@pytest.mark.parametrize("b,l,d", [(2, 64, 32), (1, 500, 130),
+                                   (3, 1024, 16), (1, 7, 260)])
+def test_ssm_scan(b, l, d):
+    a = jnp.asarray(RNG.uniform(0.5, 1.0, (b, l, d)).astype(np.float32))
+    bx = jnp.asarray(RNG.normal(size=(b, l, d)).astype(np.float32))
+    hg, hTg = ops.ssm_scan(a, bx, impl="interpret", chunk=128)
+    hr, hTr = ops.ssm_scan(a, bx, impl="reference")
+    np.testing.assert_allclose(np.asarray(hg), np.asarray(hr), rtol=3e-4,
+                               atol=3e-4)
+    np.testing.assert_allclose(np.asarray(hTg), np.asarray(hTr),
+                               rtol=3e-4, atol=3e-4)
+
+
+@given(st.integers(1, 40), st.integers(1, 6), st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_ssm_scan_property(l, b, seed):
+    """h_t = a_t h_{t-1} + bx_t against a python loop."""
+    rng = np.random.default_rng(seed)
+    d = 8
+    a = rng.uniform(0.2, 1.0, (b, l, d)).astype(np.float32)
+    bx = rng.normal(size=(b, l, d)).astype(np.float32)
+    hg, hT = ops.ssm_scan(jnp.asarray(a), jnp.asarray(bx),
+                          impl="interpret", chunk=16)
+    h = np.zeros((b, d), np.float32)
+    for t in range(l):
+        h = a[:, t] * h + bx[:, t]
+        np.testing.assert_allclose(np.asarray(hg)[:, t], h, rtol=2e-3,
+                                   atol=2e-3)
+    np.testing.assert_allclose(np.asarray(hT), h, rtol=2e-3, atol=2e-3)

@@ -1,0 +1,168 @@
+"""Per-arch smoke tests (deliverable f): reduced configs, one forward +
+one train step on CPU, shape/NaN asserts; prefill↔decode consistency."""
+from dataclasses import replace
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs, SHAPES, shape_cells
+from repro.ml.transformer import LM
+from repro.ml.model import ModelBundle, TrainConfig, input_specs
+
+ARCHS = list_archs()
+
+
+def _reduced(arch):
+    cfg = get_config(arch).reduced()
+    if cfg.moe_experts:          # dropless for exact decode consistency
+        cfg = replace(cfg, moe_capacity_factor=float(cfg.moe_experts))
+    return cfg
+
+
+def _inputs(cfg, B, S, seed=0):
+    # per-call deterministic rng: outcomes must not depend on test order
+    # or on the process (hash() is PYTHONHASHSEED-randomized!)
+    import zlib
+    rng = np.random.default_rng(zlib.crc32(cfg.name.encode()) ^ seed)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                         jnp.int32)
+    kw = {}
+    if cfg.frontend == "audio_stub":
+        kw["frames"] = jnp.asarray(
+            rng.normal(size=(B, S, cfg.d_model)).astype(np.float32),
+            jnp.bfloat16)
+    return tokens, kw
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_no_nans(arch):
+    cfg = _reduced(arch)
+    lm = LM(cfg, impl="reference")
+    params = lm.init(jax.random.key(0))
+    B, S = 2, 32
+    tokens, kw = _inputs(cfg, B, S)
+    logits, aux = lm.apply(params, tokens, **kw)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step(arch):
+    """One optimizer step must run and produce finite loss + updates."""
+    cfg = _reduced(arch)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    mb = ModelBundle(cfg, mesh,
+                     train_cfg=TrainConfig(loss_chunk=16, remat="none"))
+    params = mb.lm.init(jax.random.key(0))
+    opt = mb.init_opt_state(params)
+    B, S = 2, 16
+    tokens, kw = _inputs(cfg, B, S)
+    batch = {"tokens": tokens, "labels": tokens, **kw}
+    step = jax.jit(mb.make_train_step())
+    new_params, new_opt, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(new_opt["adam"]["step"]) == 1
+    # params actually moved
+    delta = sum(float(jnp.abs(a - b).sum()) for a, b in zip(
+        jax.tree_util.tree_leaves(params),
+        jax.tree_util.tree_leaves(new_params)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch):
+    # f32 activations: tests cache/state SEMANTICS exactly (xlstm measures
+    # 0.0 here); bf16 drift through exponential gating is a separate
+    # concern covered by test_multi_step_decode
+    cfg = replace(_reduced(arch), act_dtype="float32")
+    lm = LM(cfg, impl="reference")
+    params = lm.init(jax.random.key(0))
+    B, S = 2, 24
+    tokens, kw = _inputs(cfg, B, S)
+    logits_full, _ = lm.apply(params, tokens, **kw)
+    want = np.asarray(logits_full[:, -1, :], np.float32)
+    _, caches = lm.prefill(params, tokens[:, :S - 1],
+                           frames=kw.get("frames"))
+    logits_dec, _ = lm.decode_step(params, tokens[:, S - 1:S], caches,
+                                   S - 1)
+    got = np.asarray(logits_dec[:, -1, :], np.float32)
+    err = np.abs(got - want).max() / (np.abs(want).max() + 1e-6)
+    # tiny residual tolerance: MoE capacity bookkeeping + reduction-order
+    # differences between chunked and stepwise paths
+    assert err < 0.02, f"{arch}: prefill/decode mismatch {err:.4f}"
+    assert (got.argmax(-1) == want.argmax(-1)).all()
+
+
+@pytest.mark.parametrize("arch", ["qwen1_5_0_5b", "mixtral_8x7b",
+                                  "xlstm_1_3b", "jamba_v0_1_52b"])
+def test_multi_step_decode(arch):
+    """Greedy decode runs several steps with stable caches."""
+    cfg = _reduced(arch)
+    lm = LM(cfg, impl="reference")
+    params = lm.init(jax.random.key(0))
+    B, S = 1, 8
+    tokens, kw = _inputs(cfg, B, S)
+    logits, caches = lm.prefill(params, tokens, frames=kw.get("frames"))
+    cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    for t in range(4):
+        logits, caches = lm.decode_step(params, cur, caches, S + t)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+        cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def test_shape_cells_gating():
+    """long_500k only for sub-quadratic archs (DESIGN §arch-applicability)."""
+    eligible = {a for a in ARCHS
+                if get_config(a).sub_quadratic}
+    assert eligible == {"gemma3_12b", "mixtral_8x7b", "xlstm_1_3b",
+                        "jamba_v0_1_52b"}
+    for a in ARCHS:
+        cells = {s.name for s in shape_cells(get_config(a))}
+        if a in eligible:
+            assert "long_500k" in cells
+        else:
+            assert "long_500k" not in cells
+        assert {"train_4k", "prefill_32k", "decode_32k"} <= cells
+    total = sum(len(shape_cells(get_config(a))) for a in ARCHS)
+    assert total == 34        # 10×4 − 6 skips, as documented
+
+
+def test_input_specs_complete():
+    for a in ARCHS:
+        cfg = get_config(a)
+        for s in shape_cells(cfg):
+            specs = input_specs(cfg, s)
+            assert "tokens" in specs
+            if s.kind == "train":
+                assert "labels" in specs
+                assert specs["tokens"].shape == (s.global_batch, s.seq_len)
+            if s.kind == "decode":
+                assert specs["tokens"].shape == (s.global_batch, 1)
+            if cfg.frontend == "audio_stub" and s.kind != "decode":
+                assert "frames" in specs
+
+
+def test_params_count_sane():
+    """Full-config parameter counts are in the advertised ballpark."""
+    approx = {
+        "qwen1_5_0_5b": (0.3e9, 0.8e9),
+        "gemma3_12b": (9e9, 16e9),
+        "smollm_360m": (0.25e9, 0.5e9),
+        "command_r_35b": (30e9, 42e9),
+        "mixtral_8x7b": (40e9, 52e9),
+        # ~2.0B with pf=2 ups + head-wise qkv + sLSTM pf-4/3 MLPs; the
+        # advertised 1.3B presumably trims projections we keep faithful
+        # to the paper's block diagrams.
+        "xlstm_1_3b": (0.9e9, 2.2e9),
+        "jamba_v0_1_52b": (45e9, 60e9),
+        "qwen2_vl_7b": (6e9, 9e9),
+    }
+    for a, (lo, hi) in approx.items():
+        n = get_config(a).params_count()
+        assert lo < n < hi, f"{a}: {n/1e9:.2f}B outside [{lo/1e9}, {hi/1e9}]"
+    # MoE active < total
+    for a in ("mixtral_8x7b", "llama4_scout_17b_a16e", "jamba_v0_1_52b"):
+        cfg = get_config(a)
+        assert cfg.active_params_count() < cfg.params_count()
