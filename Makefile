@@ -1,0 +1,18 @@
+# Convenience entry points. PYTHONPATH=src matches the tier-1 command in
+# ROADMAP.md.
+PY ?= python
+export PYTHONPATH := src:$(PYTHONPATH)
+
+.PHONY: test test-fast bench bench-backends
+
+test:                 ## tier-1 verify
+	$(PY) -m pytest -x -q
+
+test-fast:            ## skip @slow end-to-end tests
+	$(PY) -m pytest -x -q -m "not slow"
+
+bench:                ## full benchmark harness
+	$(PY) -m benchmarks.run
+
+bench-backends:       ## numpy-vs-jax backend timing + parity report
+	$(PY) -m benchmarks.run --only backends

@@ -1,0 +1,118 @@
+"""End-to-end execution-backend comparison: numpy oracle vs jax kernels.
+
+Extends the per-kernel microbenchmarks (bench_kernels) to the full query
+path: every Q1–Q5 benchmark query runs under both registered backends and
+the report shows per-query wall time, speedup, and a byte-level parity
+verdict — the contract every future lowering (GPU, sharded meshes) must
+keep.
+
+On CPU the jax backend resolves to the ``reference`` kernel impl, so the
+timing column measures dispatch overhead, not TPU speedup; run with
+``REPRO_KERNEL_IMPL=pallas`` on a TPU host for the hardware numbers.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.exec import AdHocEngine, get_backend
+from repro.fdb.index import bitmap_from_ids, bitmap_full
+
+from .queries import QUERIES, build_catalog, q_variability
+
+__all__ = ["run", "batches_identical"]
+
+
+def batches_identical(a, b) -> bool:
+    if a.n != b.n or a.paths() != b.paths():
+        return False
+    for p in a.paths():
+        ca, cb = a[p], b[p]
+        if ca.values.dtype != cb.values.dtype:
+            return False
+        if not np.array_equal(ca.values, cb.values):
+            return False
+        if (ca.row_splits is None) != (cb.row_splits is None):
+            return False
+        if ca.row_splits is not None and \
+                not np.array_equal(ca.row_splits, cb.row_splits):
+            return False
+        if ca.vocab != cb.vocab:
+            return False
+    return True
+
+
+def _time(fn, repeats=3):
+    fn()                                     # warm (jit compile etc.)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return out, best * 1e3                   # ms
+
+
+def _bench_primitives(rows, print_fn):
+    """Backend primitive microbenches: the three hot-path ops, both ways."""
+    rng = np.random.default_rng(0)
+    n = 1 << 20
+    full = bitmap_full(n)
+    probes = [bitmap_from_ids(rng.choice(n, n // 3, replace=False), n)
+              for _ in range(4)]
+    mask = rng.random(n) < 0.3
+    codes = rng.integers(0, 1024, n)
+    vals = rng.normal(48.0, 9.0, n)
+    for bname in ("numpy", "jax"):
+        be = get_backend(bname)
+        for op_name, fn in [
+                ("intersect_4x1M", lambda: be.intersect_bitmaps(full, probes)),
+                ("select_ids_1M", lambda: be.select_ids(full, n)),
+                ("compact_1M", lambda: be.compact_mask(mask)),
+                ("segment_agg_1M_1024g",
+                 lambda: be.segment_aggregate(codes, vals, 1024))]:
+            _, ms = _time(fn)
+            rows.append({"name": f"backend_{bname}_{op_name}",
+                         "us_per_call": round(ms * 1e3, 1),
+                         "derived": f"{n / (ms * 1e3):.1f} Melem/s"})
+            print_fn(f"  {rows[-1]['name']:44s} "
+                     f"{rows[-1]['us_per_call']:10.1f} µs  "
+                     f"{rows[-1]['derived']}")
+
+
+def run(scale: float = 0.5, print_fn=print):
+    rows: list = []
+    _bench_primitives(rows, print_fn)
+
+    cat = build_catalog(scale=scale)
+    engines = {b: AdHocEngine(cat, backend=b) for b in ("numpy", "jax")}
+    all_parity = True
+    for qname, (cities, months) in QUERIES.items():
+        flow = q_variability(cities, months)
+        results, times = {}, {}
+        for bname, eng in engines.items():
+            res, ms = _time(lambda e=eng: e.collect(flow), repeats=2)
+            results[bname], times[bname] = res, ms
+        parity = batches_identical(results["numpy"].batch,
+                                   results["jax"].batch) \
+            and results["numpy"].profile.rows_selected \
+            == results["jax"].profile.rows_selected
+        all_parity &= parity
+        speedup = times["numpy"] / max(times["jax"], 1e-9)
+        rows.append({
+            "name": f"backend_e2e_{qname}",
+            "us_per_call": round(times["jax"] * 1e3, 1),
+            "derived": (f"numpy={times['numpy']:.1f}ms "
+                        f"jax={times['jax']:.1f}ms "
+                        f"speedup={speedup:.2f}x "
+                        f"rows={results['numpy'].batch.n} "
+                        f"parity={'OK' if parity else 'MISMATCH'}")})
+        print_fn(f"  {qname}: {rows[-1]['derived']}")
+    rows.append({"name": "backend_parity_all",
+                 "us_per_call": "",
+                 "derived": "OK" if all_parity else "MISMATCH"})
+    print_fn(f"  parity across all queries: "
+             f"{'OK' if all_parity else 'MISMATCH'}")
+    if not all_parity:
+        raise AssertionError("backend parity violated — see report rows")
+    return rows

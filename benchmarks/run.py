@@ -14,11 +14,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=0.5)
     ap.add_argument("--only", default=None,
-                    help="table2|fig11|fig12|flume|kernels|roofline")
+                    help="table2|fig11|fig12|flume|kernels|backends|roofline")
     args = ap.parse_args()
 
-    from . import (bench_fig11, bench_fig12, bench_flume_overhead,
-                   bench_kernels, bench_table2, roofline)
+    from . import (bench_backends, bench_fig11, bench_fig12,
+                   bench_flume_overhead, bench_kernels, bench_table2,
+                   roofline)
 
     benches = {
         "table2": lambda: bench_table2.run(scale=args.scale),
@@ -26,6 +27,7 @@ def main() -> None:
         "fig12": lambda: bench_fig12.run(scale=args.scale),
         "flume": lambda: bench_flume_overhead.run(scale=args.scale),
         "kernels": lambda: bench_kernels.run(),
+        "backends": lambda: bench_backends.run(scale=args.scale),
         "roofline": lambda: roofline.run(),
     }
     all_rows = []

@@ -18,7 +18,6 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..fdb.fdb import FDb, Shard
-from ..fdb.index import bitmap_full
 from ..fdb.schema import Schema
 from .exprs import (Between, BinOp, Expr, FieldRef, InRegion, InSet, Lit,
                     MakeProto, required_paths)
@@ -137,12 +136,17 @@ def split_find_pred(pred: Expr, schema: Schema
     return probes, res
 
 
-def probe_shard(shard: Shard, probes: Sequence[IndexProbe]) -> np.ndarray:
-    """Intersect all probe bitmaps (device-side analog: kernels bitset)."""
-    bm = shard.all_bitmap()
-    for p in probes:
-        bm = bm & p.run(shard)
-    return bm
+def probe_shard(shard: Shard, probes: Sequence[IndexProbe],
+                backend=None) -> np.ndarray:
+    """Intersect all probe bitmaps through the execution backend.
+
+    The numpy backend folds word-wise AND on the host; the jax backend
+    stacks the probe postings into one [K, W] word buffer and AND-reduces
+    them with the ``bitset`` kernel (``kernels.ops.bitmap_intersect``).
+    """
+    from ..exec.backend import as_backend   # lazy: exec imports this module
+    return as_backend(backend).intersect_bitmaps(
+        shard.all_bitmap(), [p.run(shard) for p in probes])
 
 
 # --------------------------------------------------------------------------
@@ -223,11 +227,12 @@ def plan_flow(flow: Flow, catalog) -> Plan:
 
     # -- minimal viable schema: source columns any server-side expression or
     #    raw-collect touches (paper §4.3.3)
-    cur_schema = schema
     needed: set = set()
     saw_map = False
-    for op in ([FindOp(residual)] if residual is not None else []) \
-            + [FindOp(p_expr) for p_expr in []] + server_ops + mixer_ops:
+    residual_ops = [FindOp(residual)] if residual is not None else []
+    for op in residual_ops + server_ops + mixer_ops:
+        if saw_map:
+            break           # later ops see the derived schema, not source
         exprs: List[Expr] = []
         if isinstance(op, FindOp) and op.pred is not None:
             exprs = [op.pred]
@@ -249,11 +254,9 @@ def plan_flow(flow: Flow, catalog) -> Plan:
         elif isinstance(op, ModelApplyOp):
             exprs = [e for _, e in op.inputs]
         for e in exprs:
-            if saw_map:
-                break
             needed.update(required_paths(e, schema))
         if isinstance(op, (MapOp, AggregateOp)):
-            saw_map = True      # later ops see the derived schema
+            saw_map = True
     for p in probes:
         # probes run on indices; location residual verification may still
         # need the columns — include them (cheap) for exactness checks

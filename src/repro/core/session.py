@@ -25,10 +25,16 @@ __all__ = ["Session"]
 
 
 class Session:
-    def __init__(self, engine=None, catalog=None):
+    def __init__(self, engine=None, catalog=None, backend=None):
+        """``backend`` selects the execution backend ("numpy", "jax", or an
+        ExecBackend instance) when no explicit engine is supplied."""
         if engine is None:
-            from ..exec.adhoc import default_engine
-            engine = default_engine()
+            if backend is not None:
+                from ..exec.adhoc import AdHocEngine
+                engine = AdHocEngine(catalog=catalog, backend=backend)
+            else:
+                from ..exec.adhoc import default_engine
+                engine = default_engine()
         self.engine = engine
         self.catalog = catalog or engine.catalog
         self.vars: Dict[str, Any] = {}

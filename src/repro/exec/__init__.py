@@ -1,4 +1,11 @@
-"""Execution engines: Warp:AdHoc (interactive) and Warp:Flume (batch)."""
+"""Execution engines: Warp:AdHoc (interactive) and Warp:Flume (batch).
+
+Both engines run the same logical plan through a pluggable
+:class:`ExecBackend` (``numpy`` host oracle, ``jax`` kernel dispatch) —
+see :mod:`repro.exec.backend`.
+"""
+from .backend import (ExecBackend, JaxBackend, NumpyBackend, as_backend,
+                      backend_names, get_backend, register_backend)
 from .catalog import Catalog, StructureManager, ResourceManager, default_catalog
 from .adhoc import AdHocEngine, QueryResult, default_engine
 from .flume import FlumeEngine
@@ -6,4 +13,6 @@ from .failures import FaultPlan, TaskFailure
 
 __all__ = ["Catalog", "StructureManager", "ResourceManager",
            "default_catalog", "AdHocEngine", "QueryResult", "default_engine",
-           "FlumeEngine", "FaultPlan", "TaskFailure"]
+           "FlumeEngine", "FaultPlan", "TaskFailure",
+           "ExecBackend", "NumpyBackend", "JaxBackend", "get_backend",
+           "as_backend", "register_backend", "backend_names"]

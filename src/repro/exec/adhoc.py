@@ -28,6 +28,7 @@ from ..fdb.columnar import ColumnBatch
 from ..fdb.fdb import FDb, Shard, _build_shard_indexes
 from ..fdb.index import bitmap_count, ids_from_bitmap
 from ..fdb.schema import DOUBLE, INT, STRING, Schema
+from .backend import as_backend
 from .catalog import Catalog, default_catalog
 from .failures import FaultPlan, TaskFailure
 from .processors import (AggPartial, aggregate_consume, aggregate_produce,
@@ -89,9 +90,12 @@ class AdHocEngine:
 
     def __init__(self, catalog: Optional[Catalog] = None,
                  num_servers: int = 8,
-                 profile_log=None):
+                 profile_log=None, backend=None):
         self.catalog = catalog or default_catalog()
         self.num_servers = num_servers
+        # execution backend: None → $REPRO_EXEC_BACKEND or "numpy";
+        # accepts a registered name or an ExecBackend instance
+        self.backend = as_backend(backend)
         if profile_log is None:
             from ..fdb.streaming import StreamingFDb
             profile_log = StreamingFDb("warpflow.query_log",
@@ -160,7 +164,8 @@ class AdHocEngine:
         partials: List[_ShardPartial] = []
         with ThreadPoolExecutor(max_workers=grant) as pool:
             futs = {pool.submit(run_shard_task, db, plan, sid, tables,
-                                self.catalog, fault_plan): sid
+                                self.catalog, fault_plan,
+                                backend=self.backend): sid
                     for sid in plan.shard_ids}
             retry: List[int] = []
             for f in as_completed(futs):
@@ -175,7 +180,8 @@ class AdHocEngine:
                 profile.retries += 1
                 try:
                     partials.append(run_shard_task(
-                        db, plan, sid, tables, self.catalog, fault_plan))
+                        db, plan, sid, tables, self.catalog, fault_plan,
+                        backend=self.backend))
                     profile.shards_done += 1
                 except TaskFailure:
                     profile.dropped_shards.append(sid)
@@ -213,10 +219,11 @@ class AdHocEngine:
             elif isinstance(op, DistinctOp):
                 batch = apply_distinct(batch, op.expr)
             elif isinstance(op, AggregateOp):
-                part = aggregate_produce(batch, op.spec)
+                part = aggregate_produce(batch, op.spec, self.backend)
                 batch = aggregate_consume(part, op.spec)
             else:
-                batch = run_record_ops(batch, [op], self.catalog, None)
+                batch = run_record_ops(batch, [op], self.catalog, None,
+                                       backend=self.backend)
         return batch
 
 

@@ -1,0 +1,216 @@
+"""Pluggable execution backends for the query hot path.
+
+The paper's time-to-first-result hinges on three per-shard primitives:
+
+  * **bitmap intersection** — AND-reduce the index-probe postings
+    (``probe_shard``),
+  * **mask compaction** — positions of selected rows after the residual
+    filter (``apply_filter``),
+  * **group-by partial aggregation** — (count, sum, sumsq) per group code
+    (``aggregate_produce``),
+
+An :class:`ExecBackend` supplies all three behind one seam so the logical
+plan stays engine- and backend-agnostic:
+
+  * ``numpy``  — the host reference (current behavior, the parity oracle),
+  * ``jax``    — dispatches through :mod:`repro.kernels.ops`, which selects
+    the Pallas kernels on TPU (``pallas``), the interpreted kernel bodies
+    (``interpret``), or the pure-jnp oracle (``reference``) via
+    ``REPRO_KERNEL_IMPL``.
+
+Select a backend per engine (``AdHocEngine(backend="jax")``), per session
+(``Session(backend="jax")``), or globally with ``REPRO_EXEC_BACKEND``.
+Bit/integer primitives are exact, so selection is byte-identical across
+backends; the jax ``reference`` aggregation path runs the segment kernel
+math at float64 (``enable_x64``) and accumulates in row order — bit-equal
+to the numpy oracle's ``bincount`` — while ``pallas``/``interpret`` keep
+the MXU's float32, the TPU deployment precision.
+
+Future scaling PRs (sharded device meshes, async prefetch, GPU lowering)
+plug in here: ``register_backend`` a new implementation and every engine
+picks it up.
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from ..fdb.index import (bitmap_stack, ids_from_bitmap, mask_from_bitmap)
+
+__all__ = ["ExecBackend", "NumpyBackend", "JaxBackend", "register_backend",
+           "backend_names", "get_backend", "as_backend"]
+
+
+class ExecBackend:
+    """Interface every execution backend implements.
+
+    All methods take and return **host** numpy arrays; a device-resident
+    backend owns its own transfers (and may cache device buffers keyed by
+    array identity).  Contracts:
+
+      * ``intersect_bitmaps(full, bitmaps)`` → uint32 word bitmap: AND of
+        ``full`` (the shard's valid-doc mask) and every probe bitmap.
+      * ``select_ids(bitmap, n)`` → ascending int64 doc ids of set bits.
+      * ``compact_mask(mask)`` → ascending int64 positions of True entries.
+      * ``segment_aggregate(codes, values, num_groups)`` →
+        ``(count[G] int64, sum[G] float64, sumsq[G] float64)`` with rows
+        whose code is negative ignored.
+    """
+
+    name: str = "abstract"
+
+    def intersect_bitmaps(self, full: np.ndarray,
+                          bitmaps: Sequence[np.ndarray]) -> np.ndarray:
+        raise NotImplementedError
+
+    def select_ids(self, bitmap: np.ndarray, n: int) -> np.ndarray:
+        raise NotImplementedError
+
+    def compact_mask(self, mask: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+    def segment_aggregate(self, codes: np.ndarray, values: np.ndarray,
+                          num_groups: int
+                          ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        raise NotImplementedError
+
+    def __repr__(self):
+        return f"<ExecBackend {self.name}>"
+
+
+# --------------------------------------------------------------------------
+# numpy — host reference implementation (the oracle)
+# --------------------------------------------------------------------------
+
+class NumpyBackend(ExecBackend):
+    name = "numpy"
+
+    def intersect_bitmaps(self, full, bitmaps):
+        bm = full
+        for b in bitmaps:
+            bm = bm & b
+        return bm
+
+    def select_ids(self, bitmap, n):
+        return ids_from_bitmap(bitmap, n)
+
+    def compact_mask(self, mask):
+        return np.nonzero(mask)[0].astype(np.int64)
+
+    def segment_aggregate(self, codes, values, num_groups):
+        codes = np.asarray(codes, dtype=np.int64)
+        keep = codes >= 0
+        if not keep.all():
+            codes, values = codes[keep], np.asarray(values)[keep]
+        v = np.asarray(values, dtype=np.float64)
+        cnt = np.bincount(codes, minlength=num_groups)[:num_groups]
+        s = np.bincount(codes, weights=v, minlength=num_groups)[:num_groups]
+        s2 = np.bincount(codes, weights=v * v,
+                         minlength=num_groups)[:num_groups]
+        return cnt.astype(np.int64), s, s2
+
+
+# --------------------------------------------------------------------------
+# jax — kernels.ops dispatch (pallas on TPU, interpret/reference elsewhere)
+# --------------------------------------------------------------------------
+
+class JaxBackend(ExecBackend):
+    """Routes the hot loop through :mod:`repro.kernels.ops`.
+
+    ``impl`` pins the kernel implementation (``pallas`` / ``interpret`` /
+    ``reference``); default defers to ``ops.default_impl()`` per call, so
+    ``REPRO_KERNEL_IMPL`` keeps working.
+    """
+
+    name = "jax"
+
+    def __init__(self, impl: Optional[str] = None):
+        import jax  # container ships the jax_pallas toolchain
+        import jax.numpy as jnp
+        from ..kernels import ops
+        self._jax, self._jnp, self._ops = jax, jnp, ops
+        self.impl = impl
+
+    def _impl(self) -> str:
+        return self.impl or self._ops.default_impl()
+
+    def intersect_bitmaps(self, full, bitmaps):
+        if not bitmaps:
+            return full
+        stack = bitmap_stack([full, *bitmaps])
+        bm, _count = self._ops.bitmap_intersect(self._jnp.asarray(stack),
+                                                impl=self._impl())
+        return np.asarray(bm, dtype=np.uint32)
+
+    def select_ids(self, bitmap, n):
+        return self.compact_mask(mask_from_bitmap(bitmap, n))
+
+    def compact_mask(self, mask):
+        mask = np.asarray(mask, dtype=bool)
+        idx, count = self._ops.compact(self._jnp.asarray(mask),
+                                       impl=self._impl())
+        return np.asarray(idx[: int(count)], dtype=np.int64)
+
+    def segment_aggregate(self, codes, values, num_groups):
+        impl = self._impl()
+        codes32 = np.ascontiguousarray(codes, dtype=np.int32)
+        if impl == "reference":
+            # float64 + row-order accumulation: bit-equal to the numpy
+            # oracle, and the same segment math the kernel implements.
+            with self._jax.experimental.enable_x64():
+                cnt, s, s2 = self._ops.segment_agg(
+                    self._jnp.asarray(codes32),
+                    self._jnp.asarray(np.asarray(values, dtype=np.float64)),
+                    num_groups, impl=impl)
+                cnt, s, s2 = (np.asarray(cnt), np.asarray(s, np.float64),
+                              np.asarray(s2, np.float64))
+        else:
+            cnt, s, s2 = self._ops.segment_agg(
+                self._jnp.asarray(codes32),
+                self._jnp.asarray(np.asarray(values, dtype=np.float32)),
+                num_groups, impl=impl)
+            cnt, s, s2 = (np.asarray(cnt), np.asarray(s, np.float64),
+                          np.asarray(s2, np.float64))
+        return np.rint(cnt).astype(np.int64), s, s2
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+
+_FACTORIES: Dict[str, Callable[[], ExecBackend]] = {}
+_INSTANCES: Dict[str, ExecBackend] = {}
+
+
+def register_backend(name: str, factory: Callable[[], ExecBackend]) -> None:
+    """Register (or replace) a backend under ``name``."""
+    _FACTORIES[name] = factory
+    _INSTANCES.pop(name, None)
+
+
+def backend_names() -> List[str]:
+    return sorted(_FACTORIES)
+
+
+register_backend("numpy", NumpyBackend)
+register_backend("jax", JaxBackend)
+
+
+def get_backend(spec: Optional[str] = None) -> ExecBackend:
+    """Resolve a backend name (default: ``$REPRO_EXEC_BACKEND`` or numpy)."""
+    name = spec or os.environ.get("REPRO_EXEC_BACKEND") or "numpy"
+    if name not in _FACTORIES:
+        raise ValueError(f"unknown exec backend {name!r}; "
+                         f"registered: {backend_names()}")
+    if name not in _INSTANCES:
+        _INSTANCES[name] = _FACTORIES[name]()
+    return _INSTANCES[name]
+
+
+def as_backend(spec: Union[None, str, ExecBackend]) -> ExecBackend:
+    """Accept None (env default), a registered name, or an instance."""
+    if isinstance(spec, ExecBackend):
+        return spec
+    return get_backend(spec)

@@ -35,6 +35,7 @@ from ..core.planner import Plan, plan_flow
 from ..fdb.columnar import ColumnBatch
 from ..fdb.schema import Schema
 from .adhoc import QueryProfile, QueryResult
+from .backend import as_backend
 from .catalog import Catalog, default_catalog
 from .failures import FaultPlan, TaskFailure
 from .processors import (aggregate_consume, aggregate_produce,
@@ -51,8 +52,10 @@ class FlumeEngine:
                  max_workers: int = 8,
                  max_attempts: int = 4,
                  speculation: bool = True,
-                 speculation_factor: float = 4.0):
+                 speculation_factor: float = 4.0,
+                 backend=None):
         self.catalog = catalog or default_catalog()
+        self.backend = as_backend(backend)
         self.ckpt_dir = ckpt_dir or os.path.join(tempfile.gettempdir(),
                                                  "warpflume")
         self.max_workers = max_workers
@@ -91,7 +94,8 @@ class FlumeEngine:
             stage="server", job_dir=job_dir, task_ids=plan.shard_ids,
             fn=lambda sid: run_shard_task(db, plan, sid, tables,
                                           self.catalog, fault_plan,
-                                          stage="server"),
+                                          stage="server",
+                                          backend=self.backend),
             workers=workers, profile=profile)
 
         # Stage 2 (Mixer): merge + finish — itself checkpointed.
@@ -223,10 +227,11 @@ class FlumeEngine:
             elif isinstance(op, DistinctOp):
                 batch = apply_distinct(batch, op.expr)
             elif isinstance(op, AggregateOp):
-                batch = aggregate_consume(aggregate_produce(batch, op.spec),
-                                          op.spec)
+                batch = aggregate_consume(
+                    aggregate_produce(batch, op.spec, self.backend), op.spec)
             else:
-                batch = run_record_ops(batch, [op], self.catalog, None)
+                batch = run_record_ops(batch, [op], self.catalog, None,
+                                       backend=self.backend)
         return batch
 
     # ------------------------------------------------------------- helpers

@@ -25,6 +25,7 @@ from ..fdb.columnar import Column, ColumnBatch
 from ..fdb.fdb import FDb
 from ..fdb.index import ids_from_bitmap
 from ..fdb.schema import BOOL, DOUBLE, INT, STRING, Schema
+from .backend import as_backend
 
 __all__ = ["val_to_column", "apply_map", "apply_filter", "apply_flatten",
            "apply_sort", "apply_limit", "apply_distinct", "apply_model",
@@ -77,7 +78,8 @@ def apply_map(batch: ColumnBatch, make: MakeProto) -> ColumnBatch:
                        batch.n)
 
 
-def apply_filter(batch: ColumnBatch, pred: Expr) -> ColumnBatch:
+def apply_filter(batch: ColumnBatch, pred: Expr,
+                 backend=None) -> ColumnBatch:
     v = eval_expr(pred, EvalContext(batch))
     if v.is_repeated:
         raise TypeError("filter() predicate must be singular "
@@ -85,7 +87,7 @@ def apply_filter(batch: ColumnBatch, pred: Expr) -> ColumnBatch:
     mask = np.asarray(v.values, dtype=bool)
     if mask.ndim == 0:
         mask = np.broadcast_to(mask, (batch.n,))
-    return batch.gather(np.nonzero(mask)[0])
+    return batch.gather(as_backend(backend).compact_mask(mask))
 
 
 def apply_flatten(batch: ColumnBatch, path: str) -> ColumnBatch:
@@ -247,71 +249,120 @@ class AggPartial:
     groups: Dict[tuple, List[Any]] = dc_field(default_factory=dict)
 
 
-def _key_tuples(batch: ColumnBatch, spec: AggSpec) -> List[tuple]:
+def _group_codes(key_arrays: List[np.ndarray], n: int
+                 ) -> Tuple[np.ndarray, List[tuple]]:
+    """Factorize per-row key tuples → (codes [n] int64, unique key tuples).
+
+    The integer codes are what the segment-aggregation backends consume
+    (the Pallas kernel's one-hot formulation runs over group codes).
+    """
+    if not key_arrays:
+        if n == 0:
+            return np.zeros(0, dtype=np.int64), []
+        return np.zeros(n, dtype=np.int64), [()]
+    # integer-like keys only: np.unique would collapse float NaN keys into
+    # one group, unlike dict identity (NaN != NaN → one group per row)
+    if len(key_arrays) == 1 and key_arrays[0].dtype.kind in "biu":
+        uniq, inv = np.unique(key_arrays[0], return_inverse=True)
+        return (inv.reshape(-1).astype(np.int64),
+                [(v,) for v in uniq.tolist()])
+    mapping: Dict[tuple, int] = {}
+    codes = np.empty(n, dtype=np.int64)
+    for i, k in enumerate(zip(*(a.tolist() for a in key_arrays))):
+        codes[i] = mapping.setdefault(k, len(mapping))
+    return codes, list(mapping)
+
+
+def aggregate_produce(batch: ColumnBatch, spec: AggSpec,
+                      backend=None) -> AggPartial:
+    backend = as_backend(backend)
     ctx = EvalContext(batch)
-    key_arrays = []
+    key_arrays: List[np.ndarray] = []
     for _, e in spec.keys:
         v = eval_expr(e, ctx)
         if v.is_repeated:
             raise TypeError("group key must be singular")
         vals = np.asarray(v.values)
         if v.vocab is not None:
-            vv = np.asarray(v.vocab, dtype=object)
-            vals = vv[vals]
+            vals = np.asarray(v.vocab, dtype=object)[vals]
         key_arrays.append(vals)
-    if not key_arrays:
-        return [()] * batch.n
-    return list(zip(*(a.tolist() for a in key_arrays)))
+    codes, uniq_keys = _group_codes(key_arrays, batch.n)
+    n_groups = len(uniq_keys)
+    part = AggPartial()
+    if n_groups == 0:
+        return part
+    counts = np.bincount(codes, minlength=n_groups)
 
-
-def aggregate_produce(batch: ColumnBatch, spec: AggSpec) -> AggPartial:
-    ctx = EvalContext(batch)
-    keys = _key_tuples(batch, spec)
-    vals: List[Optional[np.ndarray]] = []
+    vals_list: List[Optional[np.ndarray]] = []
     vocabs: List[Optional[list]] = []
+    eval_cache: Dict[str, Tuple[np.ndarray, Optional[list]]] = {}
     for kind, name, e in spec.aggs:
         if e is None:
-            vals.append(None)
+            vals_list.append(None)
             vocabs.append(None)
-        else:
+            continue
+        ekey = repr(e)     # avg+std_dev over the same expr share one eval
+        if ekey not in eval_cache:
             v = eval_expr(e, ctx)
             if v.is_repeated:
                 raise TypeError(f"aggregate input {name!r} must be singular")
             arr = np.asarray(v.values)
             if arr.ndim == 0:
                 arr = np.broadcast_to(arr, (batch.n,))
-            vals.append(arr)
-            vocabs.append(v.vocab)
+            eval_cache[ekey] = (arr, v.vocab)
+        arr, voc = eval_cache[ekey]
+        vals_list.append(arr)
+        vocabs.append(voc)
 
-    # Group rows by key (host groupby; the device path uses the
-    # segment_agg kernel over integer key codes — see kernels/segment_agg).
-    order: Dict[tuple, List[int]] = {}
-    for i, k in enumerate(keys):
-        order.setdefault(k, []).append(i)
+    # count/sum/sumsq route through the backend's segment aggregation
+    # (numpy bincount, or the segment_agg kernel via kernels.ops); order
+    # statistics and sketches need per-group row sets and stay on host.
+    rows_by_group: Optional[List[np.ndarray]] = None
+    seg_cache: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
 
-    part = AggPartial()
-    for k, rows in order.items():
-        rows_a = np.asarray(rows)
-        accs: List[Any] = []
-        for (kind, name, e), arr, voc in zip(spec.aggs, vals, vocabs):
-            if kind == "count":
-                accs.append(len(rows))
-            elif kind == "sum":
-                accs.append(float(arr[rows_a].sum()))
+    def _segment(arr: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        # one backend dispatch per distinct value column, not per agg
+        if id(arr) not in seg_cache:
+            _, s, s2 = backend.segment_aggregate(codes, arr, n_groups)
+            seg_cache[id(arr)] = (s, s2)
+        return seg_cache[id(arr)]
+
+    def _rows() -> List[np.ndarray]:
+        nonlocal rows_by_group
+        if rows_by_group is None:
+            order = np.argsort(codes, kind="stable")
+            bounds = np.zeros(n_groups + 1, dtype=np.int64)
+            np.cumsum(counts, out=bounds[1:])
+            rows_by_group = [order[bounds[g]:bounds[g + 1]]
+                             for g in range(n_groups)]
+        return rows_by_group
+
+    per_agg: List[List[Any]] = []
+    for (kind, name, e), arr, voc in zip(spec.aggs, vals_list, vocabs):
+        if kind == "count":
+            per_agg.append([int(c) for c in counts])
+        elif kind in ("sum", "avg", "std_dev"):
+            s, s2 = _segment(arr)
+            if kind == "sum":
+                per_agg.append([float(x) for x in s])
             elif kind == "avg":
-                accs.append((float(arr[rows_a].sum()), len(rows)))
-            elif kind == "std_dev":
-                x = arr[rows_a].astype(np.float64)
-                accs.append((float(x.sum()), float((x * x).sum()), len(rows)))
-            elif kind == "min":
-                accs.append(float(arr[rows_a].min()))
-            elif kind == "max":
-                accs.append(float(arr[rows_a].max()))
-            elif kind == "approx_distinct":
-                accs.append(HyperLogLog().add(arr[rows_a], voc))
+                per_agg.append([(float(x), int(c))
+                                for x, c in zip(s, counts)])
             else:
-                raise ValueError(kind)
-        part.groups[k] = accs
+                per_agg.append([(float(x), float(y), int(c))
+                                for x, y, c in zip(s, s2, counts)])
+        elif kind == "min":
+            per_agg.append([float(arr[r].min()) for r in _rows()])
+        elif kind == "max":
+            per_agg.append([float(arr[r].max()) for r in _rows()])
+        elif kind == "approx_distinct":
+            per_agg.append([HyperLogLog().add(arr[r], voc)
+                            for r in _rows()])
+        else:
+            raise ValueError(kind)
+
+    for g, k in enumerate(uniq_keys):
+        part.groups[k] = [col[g] for col in per_agg]
     return part
 
 
@@ -383,14 +434,14 @@ def aggregate_consume(part: AggPartial, spec: AggSpec) -> ColumnBatch:
 # --------------------------------------------------------------------------
 
 def run_record_ops(batch: ColumnBatch, ops: Sequence[Op], catalog,
-                   collected_cache: Optional[Dict[int, CollectedTable]] = None
-                   ) -> ColumnBatch:
+                   collected_cache: Optional[Dict[int, CollectedTable]] = None,
+                   backend=None) -> ColumnBatch:
     """Run record-parallel ops on one shard's (already index-selected) batch."""
     for op in ops:
         if isinstance(op, MapOp):
             batch = apply_map(batch, op.make)
         elif isinstance(op, FilterOp):
-            batch = apply_filter(batch, op.pred)
+            batch = apply_filter(batch, op.pred, backend)
         elif isinstance(op, FlattenOp):
             batch = apply_flatten(batch, op.path)
         elif isinstance(op, ModelApplyOp):

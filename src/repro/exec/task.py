@@ -18,7 +18,7 @@ from ..core.flow import AggregateOp, LimitOp, SortOp
 from ..core.planner import Plan, probe_shard
 from ..fdb.columnar import ColumnBatch
 from ..fdb.fdb import FDb
-from ..fdb.index import ids_from_bitmap
+from .backend import as_backend
 from .failures import FaultPlan
 from .processors import (AggPartial, aggregate_produce, apply_filter,
                          apply_limit, apply_sort, run_record_ops)
@@ -41,13 +41,14 @@ class ShardPartial:
 def run_shard_task(db: FDb, plan: Plan, shard_id: int,
                    tables: Optional[Dict[int, CollectedTable]],
                    catalog, fault_plan: Optional[FaultPlan] = None,
-                   stage: str = "server") -> ShardPartial:
+                   stage: str = "server", backend=None) -> ShardPartial:
     if fault_plan is not None:
         fault_plan.check(stage, shard_id)
+    backend = as_backend(backend)
     t0 = time.perf_counter()
     shard = db.shards[shard_id]
-    bm = probe_shard(shard, plan.probes)
-    ids = ids_from_bitmap(bm, shard.n)
+    bm = probe_shard(shard, plan.probes, backend)
+    ids = backend.select_ids(bm, shard.n)
     t1 = time.perf_counter()
     paths = [p for p in plan.source_paths if p in shard.batch.columns]
     if not paths:
@@ -58,10 +59,11 @@ def run_shard_task(db: FDb, plan: Plan, shard_id: int,
                        rows_selected=len(ids), bytes_read=batch.nbytes(),
                        io_ms=(t2 - t1) * 1e3)
     if plan.residual is not None:
-        batch = apply_filter(batch, plan.residual)
-    batch = run_record_ops(batch, plan.server_ops, catalog, tables)
+        batch = apply_filter(batch, plan.residual, backend)
+    batch = run_record_ops(batch, plan.server_ops, catalog, tables,
+                           backend=backend)
     if plan.mixer_ops and isinstance(plan.mixer_ops[0], AggregateOp):
-        out.agg = aggregate_produce(batch, plan.mixer_ops[0].spec)
+        out.agg = aggregate_produce(batch, plan.mixer_ops[0].spec, backend)
     else:
         pre = batch
         if (len(plan.mixer_ops) >= 2

@@ -27,6 +27,7 @@ from ..geo.areatree import AreaTree
 
 __all__ = [
     "bitmap_zeros", "bitmap_full", "bitmap_from_ids", "ids_from_bitmap",
+    "mask_from_bitmap", "bitmap_stack", "popcount_words",
     "bitmap_and", "bitmap_or", "bitmap_andnot", "bitmap_not", "bitmap_count",
     "TagIndex", "RangeIndex", "LocationIndex", "AreaIndex",
 ]
@@ -61,9 +62,23 @@ def bitmap_from_ids(ids: np.ndarray, n: int) -> np.ndarray:
     return bm
 
 
+def mask_from_bitmap(bm: np.ndarray, n: int) -> np.ndarray:
+    """Word bitmap → per-doc bool mask [n] (compaction-kernel input)."""
+    return np.unpackbits(bm.view(np.uint8), bitorder="little")[:n] \
+        .view(np.bool_)
+
+
 def ids_from_bitmap(bm: np.ndarray, n: int) -> np.ndarray:
-    bits = np.unpackbits(bm.view(np.uint8), bitorder="little")[:n]
-    return np.nonzero(bits)[0].astype(np.int64)
+    return np.nonzero(mask_from_bitmap(bm, n))[0].astype(np.int64)
+
+
+def bitmap_stack(bitmaps: Sequence[np.ndarray]) -> np.ndarray:
+    """Stack K same-length bitmaps into one C-contiguous [K, W] uint32
+    buffer — the exact word-level layout ``kernels.ops.bitmap_intersect``
+    consumes, so device dispatch needs no per-bit expansion or re-copy."""
+    if not bitmaps:
+        raise ValueError("bitmap_stack of zero bitmaps")
+    return np.stack(bitmaps).astype(np.uint32, copy=False)
 
 
 def bitmap_and(a, b):
@@ -82,8 +97,16 @@ def bitmap_not(a, n: int):
     return bitmap_full(n) & ~a
 
 
+_POP8 = np.array([bin(i).count("1") for i in range(256)], dtype=np.uint8)
+
+
+def popcount_words(bm: np.ndarray) -> int:
+    """Set bits of a uint32 word array, without per-bit expansion."""
+    return int(_POP8[bm.view(np.uint8)].sum())
+
+
 def bitmap_count(bm: np.ndarray) -> int:
-    return int(np.unpackbits(bm.view(np.uint8)).sum())
+    return popcount_words(bm)
 
 
 # --------------------------------------------------------------------------

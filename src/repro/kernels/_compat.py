@@ -1,0 +1,12 @@
+"""jax-version compatibility shims for the Pallas TPU kernels.
+
+Newer jax exposes ``pltpu.CompilerParams``; older releases (≤0.4.x) call
+the same dataclass ``pltpu.TPUCompilerParams``.  Resolve once here so every
+kernel imports a single name that works under either.
+"""
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams", None) \
+    or getattr(_pltpu, "TPUCompilerParams")
+
+__all__ = ["CompilerParams"]

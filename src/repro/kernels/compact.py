@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 __all__ = ["mask_prefix_sum", "compact"]
 
 DEFAULT_BLOCK = 8 * 512
@@ -64,7 +66,7 @@ def mask_prefix_sum(mask: jnp.ndarray, block: int = DEFAULT_BLOCK,
             jax.ShapeDtypeStruct((nblk, 1), jnp.int32),
         ],
         scratch_shapes=[pltpu.SMEM((1, 1), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(m2)

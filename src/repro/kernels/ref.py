@@ -75,8 +75,11 @@ def segment_agg_ref(group_ids: jnp.ndarray, values: jnp.ndarray,
     """
     valid = group_ids >= 0
     gid = jnp.where(valid, group_ids, 0)
-    v = jnp.where(valid, values.astype(jnp.float32), 0.0)
-    ones = valid.astype(jnp.float32)
+    vals = jnp.asarray(values)
+    if not jnp.issubdtype(vals.dtype, jnp.floating):
+        vals = vals.astype(jnp.float32)
+    v = jnp.where(valid, vals, 0)
+    ones = valid.astype(v.dtype)
     count = jax.ops.segment_sum(ones, gid, num_segments=num_groups)
     s = jax.ops.segment_sum(v, gid, num_segments=num_groups)
     s2 = jax.ops.segment_sum(v * v, gid, num_segments=num_groups)

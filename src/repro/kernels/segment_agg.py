@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 __all__ = ["segment_agg"]
 
 DEFAULT_ROW_BLOCK = 512
@@ -86,7 +88,7 @@ def segment_agg(group_ids: jnp.ndarray, values: jnp.ndarray,
             jax.ShapeDtypeStruct((1, padded_g), jnp.float32),
             jax.ShapeDtypeStruct((1, padded_g), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(gid2, val2)

@@ -1,0 +1,113 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The tier-1 suite uses a small slice of the hypothesis API (``given`` /
+``settings`` / ``strategies`` with integers, floats, lists, sets, tuples).
+This shim keeps those property tests runnable without the dependency: each
+strategy draws from a per-test deterministically-seeded RNG, the first
+example pins every strategy at its boundary minimum, and ``max_examples``
+is honored.  No shrinking, no database — install ``hypothesis`` (see
+requirements-optional.txt) for the real engine; test modules import it
+first and only fall back here.
+"""
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+__all__ = ["given", "settings", "st"]
+
+
+class _Strategy:
+    def __init__(self, boundary_fn, draw_fn):
+        self._boundary = boundary_fn
+        self._draw = draw_fn
+
+    def boundary(self):
+        return self._boundary()
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+class st:
+    """Shim for ``hypothesis.strategies``."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(
+            lambda: min_value,
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float,
+               allow_nan: bool = False) -> _Strategy:
+        return _Strategy(
+            lambda: float(min_value),
+            lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            size = int(rng.integers(min_size, max_size + 1))
+            return [elements.draw(rng) for _ in range(size)]
+        return _Strategy(
+            lambda: [elements.boundary() for _ in range(min_size)], draw)
+
+    @staticmethod
+    def sets(elements: _Strategy, min_size: int = 0,
+             max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            size = int(rng.integers(min_size, max_size + 1))
+            out = {elements.draw(rng) for _ in range(size)}
+            while len(out) < min_size:
+                out.add(elements.draw(rng))
+            return out
+        def boundary():
+            out = set()
+            rng = np.random.default_rng(0)
+            out.add(elements.boundary())
+            while len(out) < min_size:
+                out.add(elements.draw(rng))
+            return out
+        return _Strategy(boundary, draw)
+
+    @staticmethod
+    def tuples(*elements: _Strategy) -> _Strategy:
+        return _Strategy(
+            lambda: tuple(e.boundary() for e in elements),
+            lambda rng: tuple(e.draw(rng) for e in elements))
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies: _Strategy):
+    def deco(fn):
+        max_examples = getattr(fn, "_shim_max_examples", 20)
+        seed = zlib.crc32(fn.__name__.encode())
+
+        def wrapper():
+            rng = np.random.default_rng(seed)
+            for i in range(max_examples):
+                drawn = tuple(s.boundary() if i == 0 else s.draw(rng)
+                              for s in strategies)
+                try:
+                    fn(*drawn)
+                except Exception:
+                    print(f"\n{fn.__name__}: falsifying example "
+                          f"(shim, i={i}): {drawn!r}")
+                    raise
+
+        # plain attribute copy — functools.wraps would expose the wrapped
+        # signature and pytest would mistake strategy params for fixtures
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco

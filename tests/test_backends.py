@@ -1,0 +1,177 @@
+"""ExecBackend parity: the jax (kernels.ops) backend must be byte-identical
+to the numpy oracle across the query surface, including the benchmark
+query suite in benchmarks/queries.py."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import BETWEEN, IN, P, group, fdb, proto
+from repro.core.session import Session
+from repro.exec import (AdHocEngine, FlumeEngine, JaxBackend, NumpyBackend,
+                        as_backend, backend_names, get_backend)
+from repro.exec.backend import ExecBackend
+from repro.fdb.index import bitmap_from_ids, bitmap_full, ids_from_bitmap
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir,
+                                "benchmarks"))
+
+RNG = np.random.default_rng(42)
+
+
+def assert_identical(a, b):
+    """Byte-identical ColumnBatch comparison (values, splits, vocab)."""
+    assert a.n == b.n
+    assert a.paths() == b.paths()
+    for p in a.paths():
+        ca, cb = a[p], b[p]
+        assert ca.values.dtype == cb.values.dtype, p
+        assert np.array_equal(ca.values, cb.values), p
+        if ca.row_splits is None:
+            assert cb.row_splits is None, p
+        else:
+            assert np.array_equal(ca.row_splits, cb.row_splits), p
+        assert ca.vocab == cb.vocab, p
+
+
+def collect_pair(catalog, flow, **kw):
+    rn = AdHocEngine(catalog, num_servers=4, backend="numpy").collect(flow, **kw)
+    rj = AdHocEngine(catalog, num_servers=4, backend="jax").collect(flow, **kw)
+    assert_identical(rn.batch, rj.batch)
+    assert rn.profile.rows_scanned == rj.profile.rows_scanned
+    assert rn.profile.rows_selected == rj.profile.rows_selected
+    assert rn.profile.shards_done == rj.profile.shards_done
+    return rn, rj
+
+
+# ------------------------------------------------------------ primitives
+
+@pytest.mark.parametrize("n", [1, 31, 64, 1000, 9999])
+@pytest.mark.parametrize("k", [0, 1, 4])
+def test_intersect_and_select_parity(n, k):
+    npb, jxb = get_backend("numpy"), get_backend("jax")
+    full = bitmap_full(n)
+    probes = [bitmap_from_ids(
+        RNG.choice(n, size=max(1, n // 2), replace=False), n)
+        for _ in range(k)]
+    bn = npb.intersect_bitmaps(full, probes)
+    bj = jxb.intersect_bitmaps(full, probes)
+    assert np.array_equal(bn, bj)
+    assert np.array_equal(npb.select_ids(bn, n), jxb.select_ids(bj, n))
+
+
+@pytest.mark.parametrize("n,density", [(1, 0.0), (100, 0.5), (5000, 0.9)])
+def test_compact_mask_parity(n, density):
+    mask = RNG.random(n) < density
+    got = get_backend("jax").compact_mask(mask)
+    want = get_backend("numpy").compact_mask(mask)
+    assert got.dtype == want.dtype == np.int64
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("n,g", [(1, 1), (1000, 7), (20000, 300)])
+def test_segment_aggregate_parity(n, g):
+    codes = RNG.integers(0, g, n)
+    vals = RNG.normal(50.0, 9.0, n)
+    cn, sn, s2n = get_backend("numpy").segment_aggregate(codes, vals, g)
+    cj, sj, s2j = get_backend("jax").segment_aggregate(codes, vals, g)
+    assert np.array_equal(cn, cj)
+    # float64 row-order accumulation on both sides → bit-equal
+    assert np.array_equal(sn, sj)
+    assert np.array_equal(s2n, s2j)
+
+
+# --------------------------------------------------------------- queries
+
+def test_find_aggregate_parity(catalog):
+    q = (fdb("Obs").find(BETWEEN(P.hour, 8, 9) & BETWEEN(P.dow, 0, 4))
+         .aggregate(group(P.road_id).avg(m=P.speed).std_dev(s=P.speed)
+                    .count("n"))
+         .map(lambda p: proto(road_id=p.road_id, n=p.n, cov=p.s / p.m)))
+    rn, _ = collect_pair(catalog, q)
+    assert rn.batch.n > 0
+
+
+def test_residual_filter_sort_limit_parity(catalog):
+    q = (fdb("Obs").find(BETWEEN(P.hour, 6, 20))
+         .filter(P.speed > 40.0)
+         .sort_desc(P.speed).limit(25))
+    rn, _ = collect_pair(catalog, q)
+    assert rn.batch.n == 25
+
+
+def test_global_aggs_parity(catalog):
+    q = fdb("Obs").aggregate(group().min(lo=P.speed).max(hi=P.speed)
+                             .sum(tot=P.speed).approx_distinct(d=P.road_id))
+    collect_pair(catalog, q)
+
+
+def test_string_group_distinct_parity(catalog):
+    q = fdb("Roads").aggregate(group(P.city).count("n"))
+    collect_pair(catalog, q)
+    collect_pair(catalog, fdb("Roads").distinct(P.city))
+
+
+def test_flume_jax_matches_adhoc_numpy(catalog, tmp_path):
+    q = (fdb("Obs").find(BETWEEN(P.hour, 8, 9))
+         .aggregate(group(P.road_id).avg(m=P.speed).count("n")))
+    ref = AdHocEngine(catalog, num_servers=4, backend="numpy").collect(q)
+    fl = FlumeEngine(catalog, ckpt_dir=str(tmp_path), max_workers=4,
+                     backend="jax").collect(q)
+    assert_identical(ref.batch, fl.batch)
+
+
+def test_benchmark_suite_parity():
+    """Q1–Q5 of benchmarks/queries.py: numpy ≡ jax, all selection modes."""
+    import queries as Q
+    cat = Q.build_catalog(scale=0.05, num_shards=8, seed=1)
+    for name, (cities, months) in Q.QUERIES.items():
+        for mode in ("multi_index", "geo_index", "full_scan"):
+            flow = Q.q_variability(cities, months, mode=mode)
+            collect_pair(cat, flow)
+
+
+# ---------------------------------------------------------- configuration
+
+def test_backend_registry_and_env(monkeypatch):
+    assert {"numpy", "jax"} <= set(backend_names())
+    assert isinstance(get_backend("numpy"), NumpyBackend)
+    assert isinstance(get_backend("jax"), JaxBackend)
+    with pytest.raises(ValueError):
+        get_backend("cuda-someday")
+    monkeypatch.setenv("REPRO_EXEC_BACKEND", "jax")
+    assert isinstance(get_backend(), JaxBackend)
+    assert isinstance(as_backend(None), JaxBackend)
+    eng = AdHocEngine(num_servers=1)
+    assert eng.backend.name == "jax"
+    monkeypatch.delenv("REPRO_EXEC_BACKEND")
+    assert isinstance(get_backend(), NumpyBackend)
+    inst = NumpyBackend()
+    assert as_backend(inst) is inst
+
+
+def test_session_backend_option(catalog):
+    s = Session(backend="jax", catalog=catalog)
+    assert isinstance(s.engine.backend, JaxBackend)
+    res = s.run(s.fdb("Obs").aggregate(group().count("n")), name="tot")
+    assert s["tot"] is res
+    want = AdHocEngine(catalog, backend="numpy").collect(
+        fdb("Obs").aggregate(group().count("n")))
+    assert_identical(res.batch, want.batch)
+
+
+def test_custom_backend_registration():
+    from repro.exec import register_backend
+
+    class Flaky(NumpyBackend):
+        name = "flaky"
+
+    register_backend("flaky", Flaky)
+    try:
+        assert isinstance(get_backend("flaky"), Flaky)
+        assert "flaky" in backend_names()
+    finally:
+        from repro.exec import backend as B
+        B._FACTORIES.pop("flaky", None)
+        B._INSTANCES.pop("flaky", None)

@@ -1,7 +1,10 @@
 """FDb: columnar batches, every index kind vs brute force, persistence."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # optional dep: fall back to shim
+    from _hypothesis_shim import given, settings, st
 
 from repro.fdb import (FDb, Schema, StreamingFDb, build_fdb,
                        bitmap_count, ids_from_bitmap, DOUBLE, INT, STRING,

@@ -1,7 +1,10 @@
 """Geo substrate: mercator projection + area-tree set algebra (property)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # optional dep: fall back to shim
+    from _hypothesis_shim import given, settings, st
 
 from repro.geo import AreaTree, mercator as M
 from repro.geo.geometry import mercator_dist_m, polyline_length_m

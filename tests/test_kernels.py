@@ -2,7 +2,10 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # optional dep: fall back to shim
+    from _hypothesis_shim import given, settings, st
 
 from repro.kernels import ops
 

@@ -1,7 +1,10 @@
 """HLL / Bloom / interval sketches: accuracy + mergeability properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # optional dep: fall back to shim
+    from _hypothesis_shim import given, settings, st
 
 from repro.core.sketches import BloomFilter, HyperLogLog, IntervalSet
 
