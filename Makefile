@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test test-fast bench bench-backends
+.PHONY: test test-fast test-tesseract bench bench-backends bench-tesseract
 
 test:                 ## tier-1 verify
 	$(PY) -m pytest -x -q
@@ -11,8 +11,14 @@ test:                 ## tier-1 verify
 test-fast:            ## skip @slow end-to-end tests
 	$(PY) -m pytest -x -q -m "not slow"
 
+test-tesseract:       ## trip-query subsystem tests only
+	$(PY) -m pytest -x -q -m tesseract
+
 bench:                ## full benchmark harness
 	$(PY) -m benchmarks.run
 
 bench-backends:       ## numpy-vs-jax backend timing + parity report
 	$(PY) -m benchmarks.run --only backends
+
+bench-tesseract:      ## Q6/Q7 trip queries: pruning ratio + backend parity
+	$(PY) -m benchmarks.run --only tesseract --json

@@ -1,0 +1,90 @@
+"""Tesseract trip-query benchmark (Q6–Q7): pruning ratio + backend parity.
+
+For each trip query the report shows
+
+  * wall time per backend (numpy oracle vs jax kernel dispatch),
+  * **index-probe candidate counts vs. exact-refine counts** — how many
+    trips the per-shard ``spacetime`` postings admit at (cell × bucket)
+    granularity vs. how many survive the exact point-in-cover ×
+    time-window pass — and the resulting pruning ratio,
+  * a byte-level parity verdict between the backends' trip-id sets.
+
+The pruning ratio is the subsystem's reason to exist: for selective
+regions the index must prune ≥ 90 % of trips before the exact pass.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.data.synthetic import generate_world
+from repro.exec import AdHocEngine, Catalog
+from repro.fdb import build_fdb
+from repro.tess import tesseract_stats
+
+from .queries import TRIP_QUERIES, q_tesseract, tesseract_for
+
+__all__ = ["run"]
+
+
+def _time(fn, repeats=3):
+    fn()                                     # warm (jit compile etc.)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return out, best * 1e3                   # ms
+
+
+def run(scale: float = 0.5, print_fn=print):
+    rows: list = []
+    # trips-only catalog: skip the (dominant) ingest/index cost of the
+    # road/observation datasets the trip queries never touch
+    world = generate_world(scale=scale)
+    cat = Catalog(server_slots=64)
+    cat.register(build_fdb("Trips", world["trips_schema"], world["trips"],
+                           num_shards=10))
+    db = cat.get("Trips")
+    engines = {b: AdHocEngine(cat, backend=b) for b in ("numpy", "jax")}
+    all_parity = True
+    for qname, legs in TRIP_QUERIES.items():
+        flow = q_tesseract(legs)
+        results, times = {}, {}
+        for bname, eng in engines.items():
+            res, ms = _time(lambda e=eng: e.collect(flow), repeats=2)
+            results[bname], times[bname] = res, ms
+        ids = {b: np.sort(r.batch["id"].values)
+               for b, r in results.items()}
+        parity = bool(np.array_equal(ids["numpy"], ids["jax"])) \
+            and results["numpy"].profile.rows_selected \
+            == results["jax"].profile.rows_selected
+        all_parity &= parity
+        stats = tesseract_stats(db, tesseract_for(legs))
+        speedup = times["numpy"] / max(times["jax"], 1e-9)
+        rows.append({
+            "name": f"tesseract_{qname}",
+            "us_per_call": round(times["jax"] * 1e3, 1),
+            "parity": 1 if parity else 0,
+            "derived": (f"numpy={times['numpy']:.1f}ms "
+                        f"jax={times['jax']:.1f}ms "
+                        f"speedup={speedup:.2f}x "
+                        f"docs={stats['docs']} "
+                        f"candidates={stats['candidates']} "
+                        f"refined={stats['refined']} "
+                        f"pruning={stats['pruning']:.3f} "
+                        f"parity={'OK' if parity else 'MISMATCH'}")})
+        print_fn(f"  {qname}: {rows[-1]['derived']}")
+        if stats["pruning"] < 0.9:
+            print_fn(f"  WARNING: {qname} pruning "
+                     f"{stats['pruning']:.3f} < 0.90")
+    rows.append({"name": "tesseract_parity_all",
+                 "us_per_call": "",
+                 "parity": 1 if all_parity else 0,
+                 "derived": "OK" if all_parity else "MISMATCH"})
+    print_fn(f"  parity across trip queries: "
+             f"{'OK' if all_parity else 'MISMATCH'}")
+    if not all_parity:
+        raise AssertionError("tesseract backend parity violated")
+    return rows

@@ -1,22 +1,28 @@
 """Shared query library for the paper-table benchmarks.
 
-Builds the §6 world (roads + speed observations) and the Q1–Q5 traffic
-speed-variability queries: "accumulate all the speed observations per road
-segment during the morning rush hours (8−9 am on weekdays), and compute
-the standard deviation of the speeds, normalized with respect to its mean
-— the *coefficient of variation*."
+Builds the §6 world (roads + speed observations + trips) and two query
+families:
+
+  * Q1–Q5 — traffic speed variability: "accumulate all the speed
+    observations per road segment during the morning rush hours (8−9 am on
+    weekdays), and compute the standard deviation of the speeds, normalized
+    with respect to its mean — the *coefficient of variation*",
+  * Q6–Q7 — Tesseract trip queries (§2): "all trips passing through region
+    A during time window T1 and region B during T2", served by the
+    per-shard ``spacetime`` index (:mod:`repro.tess`).
 """
 from __future__ import annotations
 
-import numpy as np
-
 from repro.core import P, proto, IN, BETWEEN, group, fdb
-from repro.data.synthetic import CITIES, BAY_AREA, generate_world
+from repro.data.synthetic import (CITIES, BAY_AREA, city_region,
+                                  generate_world)
 from repro.exec import AdHocEngine, Catalog
 from repro.fdb import build_fdb
-from repro.geo import AreaTree, mercator as M
+from repro.geo import AreaTree
+from repro.tess import Tesseract
 
-__all__ = ["build_catalog", "region_for", "q_variability", "QUERIES"]
+__all__ = ["build_catalog", "region_for", "q_variability", "QUERIES",
+           "tesseract_for", "q_tesseract", "TRIP_QUERIES", "TRIP_DAY"]
 
 
 def build_catalog(scale: float = 1.0, num_shards: int = 20,
@@ -32,22 +38,14 @@ def build_catalog(scale: float = 1.0, num_shards: int = 20,
                            world["route_requests_schema"],
                            world["route_requests"],
                            num_shards=max(4, num_shards // 4)))
+    cat.register(build_fdb("Trips", world["trips_schema"], world["trips"],
+                           num_shards=max(10, num_shards // 2)))
     return cat
 
 
 def region_for(cities) -> AreaTree:
     """Union of city bounding boxes → selection region."""
-    area = AreaTree.empty()
-    for c in cities:
-        lat0, lng0, dlat, dlng = CITIES[c]
-        ix, iy = M.latlng_to_xy(np.array([lat0, lat0 + dlat]),
-                                np.array([lng0, lng0 + dlng]))
-        # level 6 ≈ 150 m cells: city-scale selection with ~100× fewer
-        # Morton ranges than level 7 (probe cost ∝ ranges)
-        area = area | AreaTree.from_box(int(ix[0]), int(iy[1]),
-                                        int(ix[1]), int(iy[0]),
-                                        max_level=6)
-    return area
+    return city_region(*cities)
 
 
 def q_variability(cities, months: int, *, mode: str = "multi_index",
@@ -102,4 +100,40 @@ QUERIES = {
     "Q3": (BAY_AREA, 1),
     "Q4": (BAY_AREA, 6),
     "Q5": (tuple(CITIES), 1),       # "California" = every city
+}
+
+
+# --------------------------------------------------------------------------
+# Tesseract trip queries (Q6–Q7)
+# --------------------------------------------------------------------------
+
+#: synthetic-week day the trip queries pin their windows to (0=Mon … 6=Sun)
+TRIP_DAY = 2
+
+
+def tesseract_for(legs, day: int = TRIP_DAY) -> Tesseract:
+    """``legs``: sequence of ``(cities, hour0, hour1)`` constraints — the
+    trip must pass through ``region_for(cities)`` during ``[hour0, hour1]``
+    of ``day`` (track ``t`` is seconds since the week's epoch)."""
+    tess = None
+    for cities, h0, h1 in legs:
+        region = region_for(cities)
+        t0 = day * 86400.0 + h0 * 3600.0
+        t1 = day * 86400.0 + h1 * 3600.0
+        tess = Tesseract(region, t0, t1) if tess is None \
+            else tess.also(region, t0, t1)
+    return tess
+
+
+def q_tesseract(legs, day: int = TRIP_DAY):
+    """Trip ids + durations matching a multi-constraint Tesseract query."""
+    return (fdb("Trips").tesseract(tesseract_for(legs, day))
+            .map(lambda p: proto(id=p.id, day=p.day,
+                                 duration_s=p.duration_s)))
+
+
+#: Q6: morning SF → Berkeley commute; Q7: Bay Area → LA long-haul
+TRIP_QUERIES = {
+    "Q6": ((("SF",), 6, 12), (("Berkeley",), 6, 14)),
+    "Q7": ((BAY_AREA, 6, 12), (("LA",), 6, 18)),
 }

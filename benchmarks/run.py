@@ -3,23 +3,58 @@
 Prints ``name,us_per_call,derived`` CSV rows (plus per-bench extra
 columns) and a human-readable transcript.  ``--scale`` grows the synthetic
 world; default sizes finish on a laptop CPU in a few minutes.
+
+``--json`` additionally writes one machine-readable ``BENCH_<suite>.json``
+per suite (per-query wall time + parity bit where the suite checks
+parity), so the perf trajectory can be tracked across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
+
+
+def _write_json(suite: str, rows: list, scale: float, out_dir: str) -> str:
+    """One BENCH_<suite>.json: rows with wall time + parity bit."""
+    payload = {
+        "suite": suite,
+        "scale": scale,
+        "rows": [
+            {"name": r.get("name"),
+             "us_per_call": r.get("us_per_call",
+                                  r.get("exec_ms", r.get("compute_ms"))),
+             **({"parity": r["parity"]} if "parity" in r else {}),
+             **({"error": r["error"]} if "error" in r else {}),
+             "derived": r.get("derived") or ",".join(
+                 f"{k}={v}" for k, v in r.items()
+                 if k not in ("name", "us_per_call", "derived"))}
+            for r in rows
+        ],
+    }
+    path = os.path.join(out_dir, f"BENCH_{suite}.json")
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=1)
+    return path
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=0.5)
     ap.add_argument("--only", default=None,
-                    help="table2|fig11|fig12|flume|kernels|backends|roofline")
+                    help="table2|fig11|fig12|flume|kernels|backends|"
+                         "tesseract|roofline")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_<suite>.json per suite "
+                         "(wall time + parity bit)")
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for --json output files")
     args = ap.parse_args()
 
     from . import (bench_backends, bench_fig11, bench_fig12,
                    bench_flume_overhead, bench_kernels, bench_table2,
-                   roofline)
+                   bench_tesseract, roofline)
 
     benches = {
         "table2": lambda: bench_table2.run(scale=args.scale),
@@ -28,6 +63,7 @@ def main() -> None:
         "flume": lambda: bench_flume_overhead.run(scale=args.scale),
         "kernels": lambda: bench_kernels.run(),
         "backends": lambda: bench_backends.run(scale=args.scale),
+        "tesseract": lambda: bench_tesseract.run(scale=args.scale),
         "roofline": lambda: roofline.run(),
     }
     all_rows = []
@@ -36,10 +72,14 @@ def main() -> None:
             continue
         print(f"== {name} ==", flush=True)
         try:
-            all_rows.extend(fn() or [])
+            suite_rows = fn() or []
         except Exception as e:  # keep the harness going; report at end
             print(f"  BENCH FAILED: {name}: {e!r}", file=sys.stderr)
-            all_rows.append({"name": f"{name}_FAILED", "error": repr(e)})
+            suite_rows = [{"name": f"{name}_FAILED", "error": repr(e)}]
+        all_rows.extend(suite_rows)
+        if args.json:
+            path = _write_json(name, suite_rows, args.scale, args.json_dir)
+            print(f"  wrote {path}")
 
     print("\nname,us_per_call,derived")
     for r in all_rows:

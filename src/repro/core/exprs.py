@@ -31,7 +31,8 @@ from .sketches import BloomFilter, IntervalSet
 
 __all__ = [
     "Expr", "FieldRef", "Lit", "External", "BinOp", "UnOp", "Between",
-    "InRegion", "InSet", "Reduce", "GetField", "TableLookup", "Func",
+    "InRegion", "InSet", "InSpaceTime", "Reduce", "GetField", "TableLookup",
+    "Func",
     "MakeProto", "ModelApply", "P", "proto", "IN", "BETWEEN",
     "vsum", "vmin", "vmax", "vcount", "vmean", "where",
     "CollectedTable", "Val", "EvalContext", "eval_expr", "required_paths",
@@ -109,6 +110,20 @@ class InSet(Expr):
 
     def children(self):
         return (self.a,)
+
+
+@dataclass(frozen=True)
+class InSpaceTime(Expr):
+    """One Tesseract constraint: the track passes through ``region`` during
+    ``[t0, t1]`` — true iff *some* track point is inside the region's cover
+    and time window.  Singular (any-reduced) over the repeated track."""
+    field: Expr            # FieldRef to a track (repeated lat/lng/t leaves)
+    region: Any = dc_field(hash=False)            # AreaTree
+    t0: float = 0.0
+    t1: float = 0.0
+
+    def children(self):
+        return (self.field,)
 
 
 @dataclass(frozen=True)
@@ -481,6 +496,21 @@ def eval_expr(expr: Expr, ctx: EvalContext) -> Val:
         lng = ctx.batch[expr.field.path + ".lng"]
         keys = Mc.latlng_to_morton(lat.values, lng.values)
         return Val(expr.region.contains(keys), lat.row_splits)
+    if isinstance(expr, InSpaceTime):
+        # exact Tesseract constraint: any track point in-cover AND in-window
+        lat = ctx.batch[expr.field.path + ".lat"]
+        lng = ctx.batch[expr.field.path + ".lng"]
+        tt = ctx.batch[expr.field.path + ".t"]
+        keys = Mc.latlng_to_morton(lat.values, lng.values)
+        hit = expr.region.contains(keys) \
+            & (tt.values >= expr.t0) & (tt.values <= expr.t1)
+        if lat.row_splits is None:
+            return Val(np.asarray(hit, dtype=bool))
+        out = np.zeros(n, dtype=bool)
+        if hit.size:
+            row_of = np.repeat(np.arange(n), np.diff(lat.row_splits))
+            np.logical_or.at(out, row_of, hit)
+        return Val(out)
     if isinstance(expr, Reduce):
         a = eval_expr(expr.a, ctx)
         if not a.is_repeated:
@@ -617,6 +647,11 @@ def required_paths(expr: Expr, schema: Schema) -> List[str]:
             out.add(e.field.path + ".lat")
             out.add(e.field.path + ".lng")
             return
+        if isinstance(e, InSpaceTime):
+            out.add(e.field.path + ".lat")
+            out.add(e.field.path + ".lng")
+            out.add(e.field.path + ".t")
+            return
         if isinstance(e, Func) and e.name == "distance":
             f = e.args[0]
             out.add(f.path + ".lat")
@@ -664,6 +699,8 @@ def infer_spec(expr: Expr, schema: Optional[Schema]) -> Tuple[str, bool]:
         t, r = infer_spec(expr.a, schema)
         return (BOOL, r) if expr.op == "not" else (t if expr.op in
                                                    ("neg", "abs") else DOUBLE, r)
+    if isinstance(expr, InSpaceTime):
+        return BOOL, False            # any-reduced over the track
     if isinstance(expr, (Between, InSet, InRegion)):
         _, r = infer_spec(expr.children()[0], schema)
         return BOOL, r

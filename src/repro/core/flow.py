@@ -173,6 +173,17 @@ class Flow:
         return self._push(SubFlowOp(right_fdb, _trace(key), index_path,
                                     alias))
 
+    def tesseract(self, tess, field: str = None) -> "Flow":
+        """Space-time trip selection (paper §2 Tesseract queries).
+
+        ``tess`` is a :class:`repro.tess.Tesseract`; its constraints become
+        ``InSpaceTime`` conjuncts of a leading ``find()``, which the planner
+        compiles to stacked ``spacetime``-index bitmap probes plus the exact
+        point-in-cover × time-window refine.  Compose with other predicates
+        via ``find(tess.expr() & ...)`` instead when needed.
+        """
+        return self._push(FindOp(_trace(tess.expr(field))))
+
     def sample(self, fraction: float) -> "Flow":
         if not 0.0 < fraction <= 1.0:
             raise ValueError("sample fraction in (0, 1]")

@@ -19,8 +19,8 @@ import numpy as np
 
 from ..fdb.fdb import FDb, Shard
 from ..fdb.schema import Schema
-from .exprs import (Between, BinOp, Expr, FieldRef, InRegion, InSet, Lit,
-                    MakeProto, required_paths)
+from .exprs import (Between, BinOp, Expr, FieldRef, InRegion, InSet,
+                    InSpaceTime, Lit, MakeProto, required_paths)
 from .flow import (AggregateOp, DistinctOp, FilterOp, FindOp, Flow,
                    FlattenOp, JoinOp, LimitOp, MapOp, ModelApplyOp, Op,
                    SampleOp, SortOp, SubFlowOp)
@@ -36,8 +36,16 @@ __all__ = ["IndexProbe", "Plan", "plan_flow", "split_find_pred",
 @dataclass
 class IndexProbe:
     path: str
-    kind: str               # tag | range | location | area
+    kind: str               # tag | range | location | area | spacetime
     args: tuple             # lookup arguments
+
+    #: kinds whose postings are a *superset* of the predicate (cell/bucket
+    #: granularity) — the conjunct stays in the residual for exact refine
+    REFINE_KINDS = ("spacetime",)
+
+    @property
+    def needs_refine(self) -> bool:
+        return self.kind in self.REFINE_KINDS
 
     def run(self, shard: Shard) -> np.ndarray:
         idx = shard.index(self.path, self.kind)
@@ -54,6 +62,9 @@ class IndexProbe:
             return idx.lookup(self.args[0])
         if self.kind == "area":
             return idx.lookup_region(self.args[0])
+        if self.kind == "spacetime":
+            region, t0, t1 = self.args
+            return idx.lookup(region, t0, t1)
         raise ValueError(self.kind)
 
 
@@ -99,7 +110,62 @@ def _indexable(e: Expr, schema: Schema) -> Optional[IndexProbe]:
         if schema.has(e.a.path) and "tag" in schema.field(e.a.path).indexes:
             return IndexProbe(e.a.path, "tag", (tuple(e.values),))
         return None
+    if isinstance(e, InSpaceTime) and isinstance(e.field, FieldRef):
+        f = e.field
+        if schema.has(f.path) and \
+                "spacetime" in schema.field(f.path).indexes:
+            return IndexProbe(f.path, "spacetime", (e.region, e.t0, e.t1))
+        return None
     return None
+
+
+def _or_leaf_values(e: Expr) -> Optional[Tuple[str, tuple]]:
+    """Tag-lookup leaf of a disjunction → (field path, values) or None."""
+    if isinstance(e, InSet) and isinstance(e.a, FieldRef):
+        return e.a.path, tuple(e.values)
+    if isinstance(e, BinOp) and e.op == "eq":
+        if isinstance(e.a, FieldRef) and isinstance(e.b, Lit):
+            return e.a.path, (e.b.value,)
+        if isinstance(e.b, FieldRef) and isinstance(e.a, Lit):
+            return e.b.path, (e.a.value,)
+    return None
+
+
+def _indexable_or(e: Expr, schema: Schema) -> Optional[IndexProbe]:
+    """Disjunction of tag lookups on one field → ``lookup_any`` bitmap OR.
+
+    ``(p.city == 'SF') | IN(p.city, ['OAK', 'SJ'])`` compiles to one tag
+    probe over the union of values — exact (tag postings are exact), so
+    nothing is left for the residual filter.
+    """
+    if not (isinstance(e, BinOp) and e.op == "or"):
+        return None
+    leaves: List[Expr] = []
+
+    def walk(x: Expr):
+        if isinstance(x, BinOp) and x.op == "or":
+            walk(x.a)
+            walk(x.b)
+        else:
+            leaves.append(x)
+
+    walk(e)
+    path: Optional[str] = None
+    values: List[Any] = []
+    for leaf in leaves:
+        got = _or_leaf_values(leaf)
+        if got is None:
+            return None
+        p, vs = got
+        if path is None:
+            path = p
+        elif path != p:
+            return None               # mixed fields: not one bitmap OR
+        values.extend(vs)
+    if path is None or not schema.has(path) \
+            or "tag" not in schema.field(path).indexes:
+        return None
+    return IndexProbe(path, "tag", (tuple(values),))
 
 
 def split_find_pred(pred: Expr, schema: Schema
@@ -107,10 +173,15 @@ def split_find_pred(pred: Expr, schema: Schema
     """AND-split a find() predicate into index probes + residual filter.
 
     Conjuncts that match an index become probes (bitmap AND); everything
-    else is evaluated as a post-read filter.  A fully-indexable OR of two
-    indexable subtrees could be supported with bitmap OR; we conservatively
-    treat OR as residual (matching the paper's "index-based selections" for
-    conjunctive Tesseract queries).
+    else is evaluated as a post-read filter.  Two refinements:
+
+      * a disjunction of tag lookups on one field (``IN``/``==``) compiles
+        to a single ``TagIndex.lookup_any`` bitmap-OR probe instead of
+        falling back to residual filtering,
+      * ``spacetime`` probes (Tesseract constraints) are *conservative* —
+        postings live at (cell × time-bucket) granularity — so the conjunct
+        additionally stays in the residual for the exact point-in-cover ×
+        time-window refine.
     """
     conjuncts: List[Expr] = []
 
@@ -125,9 +196,11 @@ def split_find_pred(pred: Expr, schema: Schema
     probes: List[IndexProbe] = []
     residual: List[Expr] = []
     for c in conjuncts:
-        p = _indexable(c, schema)
+        p = _indexable(c, schema) or _indexable_or(c, schema)
         if p is not None:
             probes.append(p)
+            if p.needs_refine:
+                residual.append(c)
         else:
             residual.append(c)
     res: Optional[Expr] = None

@@ -1,8 +1,9 @@
 """Data substrate: synthetic world generator + training pipelines."""
 from .synthetic import (generate_world, roads_schema, observations_schema,
-                        route_requests_schema, CITIES, BAY_AREA)
+                        route_requests_schema, trips_schema, city_region,
+                        CITIES, BAY_AREA)
 from .pipeline import TokenPipeline, WflBatcher
 
 __all__ = ["generate_world", "roads_schema", "observations_schema",
-           "route_requests_schema", "CITIES", "BAY_AREA",
-           "TokenPipeline", "WflBatcher"]
+           "route_requests_schema", "trips_schema", "city_region",
+           "CITIES", "BAY_AREA", "TokenPipeline", "WflBatcher"]

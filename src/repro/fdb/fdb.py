@@ -9,7 +9,10 @@ schema.  Index construction honours the paper's machinery:
     are indexed but never materialized as data,
   * ``location`` indices read companion lat/lng leaves; ``area`` indices
     expand each doc's polyline into a strip (width_m) or point into a circle
-    (radius_m) and post into level-``level`` area-tree cells.
+    (radius_m) and post into level-``level`` area-tree cells,
+  * ``spacetime`` indices post every track point (lat/lng/t leaves) into
+    (area-tree cell × time bucket) keys — the Tesseract trip index
+    (:mod:`repro.tess.index`).
 
 Storage is a directory of ``.npz`` shard files + a JSON manifest — the
 "simple key-value storage abstraction" of the paper (SSTable/LevelDb there,
@@ -107,6 +110,18 @@ def _build_shard_indexes(schema: Schema, batch: ColumnBatch
                             iy[s:e].astype(np.float64),
                             width_m / mpu, max_level=level))
                 out[(path, kind)] = AreaIndex.build(areas, level)
+            elif kind == "spacetime":
+                # (cell × time-bucket) postings over a repeated track —
+                # lazy import: tess sits above fdb in the layer order
+                from ..tess.index import SpaceTimeIndex
+                lat = batch[p.get("lat", path + ".lat")]
+                lng = batch[p.get("lng", path + ".lng")]
+                tt = batch[p.get("t", path + ".t")]
+                out[(path, kind)] = SpaceTimeIndex.build(
+                    lat.values, lng.values, tt.values, n, lat.row_splits,
+                    level=int(p.get("level", 6)),
+                    bucket_s=float(p.get("bucket_s", 900.0)),
+                    epoch=float(p.get("epoch", 0.0)))
             else:  # pragma: no cover
                 raise ValueError(f"unknown index kind {kind!r}")
     return out

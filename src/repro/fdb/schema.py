@@ -9,9 +9,9 @@ We reproduce the descriptor layer: a :class:`Schema` is a tree of
 :class:`Field` descriptors with types ``{bool,int,uint,float,double,string,
 message}`` × cardinality ``{singular,repeated}`` plus options:
 
-  * ``index=`` one of ``tag | range | location | area`` (and a field may
-    carry several indices — "a single field can have multiple indices of
-    different types"),
+  * ``index=`` one of ``tag | range | location | area | spacetime`` (and a
+    field may carry several indices — "a single field can have multiple
+    indices of different types"),
   * ``column_set=`` the column family the field is stored with,
   * ``virtual=`` an expression evaluated at ingest to produce index-only
     values that are never materialized as data columns.
@@ -26,7 +26,7 @@ from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 BOOL, INT, UINT, FLOAT, DOUBLE, STRING, MESSAGE = (
     "bool", "int", "uint", "float", "double", "string", "message")
 SCALAR_TYPES = (BOOL, INT, UINT, FLOAT, DOUBLE, STRING)
-INDEX_KINDS = ("tag", "range", "location", "area")
+INDEX_KINDS = ("tag", "range", "location", "area", "spacetime")
 
 __all__ = ["Field", "Schema", "BOOL", "INT", "UINT", "FLOAT", "DOUBLE",
            "STRING", "MESSAGE", "SCALAR_TYPES", "INDEX_KINDS"]

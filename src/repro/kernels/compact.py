@@ -49,6 +49,8 @@ def mask_prefix_sum(mask: jnp.ndarray, block: int = DEFAULT_BLOCK,
                     interpret: bool = False):
     """mask [N] bool → (exclusive prefix sum [N] int32, count int32)."""
     n = mask.shape[0]
+    if n == 0:    # zero-size grid: nothing to scan (empty candidate sets)
+        return jnp.zeros((0,), jnp.int32), jnp.int32(0)
     padded = pl.cdiv(n, block) * block
     m_p = jnp.zeros((padded,), jnp.bool_).at[:n].set(mask)
     m2 = m_p.reshape(-1, 8, block // 8)

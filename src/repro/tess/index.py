@@ -1,0 +1,158 @@
+"""Space-time postings index for trip tracks (paper §2, §6: Tesseract).
+
+The paper's headline workload asks for "all trips passing through region A
+during time window T1 *and* region B during T2" over petabyte-scale track
+data.  Per shard we build one :class:`SpaceTimeIndex` per indexed track
+field: every track point posts into a **(area-tree cell × time bucket)**
+key, and postings are surfaced as the same uint32-word bitmaps the rest of
+the query hot loop uses — so a Tesseract constraint probe is a bitmap OR
+over matching keys, and a multi-constraint query is a stacked bitmap AND
+handled by the ``bitset`` kernel through the ``ExecBackend`` seam.
+
+Key layout: ``(cell_index << TIME_BITS) | bucket`` with the cell index the
+6·level-bit Morton prefix of the point (the same level-``level`` cells the
+``area`` index and :func:`repro.geo.areatree.cover` produce) and the bucket
+``floor((t - epoch) / bucket_s)``.  Keys of one cell are contiguous, so a
+region cover (disjoint Morton ranges) translates into a few ``searchsorted``
+spans with a post-filter on the bucket field — no per-cell probing.
+
+The index also keeps each doc's ``[t_min, t_max]`` track span and prunes
+docs whose span misses the query window with the same offset-overlap test
+:class:`repro.core.sketches.IntervalSet` uses (overlap ⇔ ``t_min ≤ q_hi``
+and ``t_max ≥ q_lo``) — cheap, and it removes the cell-granularity false
+positives of trips that pass the region at a different time of day.
+
+Probes are **conservative**: a returned doc's track touches a covered cell
+during an overlapping bucket, which is a superset of exactly passing through
+the region during the window.  The planner therefore keeps the constraint in
+the residual filter; the exact point-in-cover × time-window pass runs behind
+the backend's ``compact_mask`` (see ``repro.core.planner``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+from ..fdb.index import bitmap_from_ids, bitmap_zeros
+from ..geo import mercator as M
+from ..geo.areatree import AreaTree
+
+__all__ = ["SpaceTimeIndex", "TIME_BITS", "MAX_BUCKET"]
+
+TIME_BITS = 20                        # buckets per key: 2^20 ≈ 18 years @ 15 min
+MAX_BUCKET = (1 << TIME_BITS) - 1
+_TB = np.uint64(TIME_BITS)
+_BMASK = np.uint64(MAX_BUCKET)
+_ONE = np.uint64(1)
+
+
+@dataclass
+class SpaceTimeIndex:
+    """(cell × time-bucket) → docs postings over one repeated track field."""
+
+    level: int                 # area-tree cell level of the spatial key part
+    bucket_s: float            # time bucket width, seconds
+    epoch: float               # t of bucket 0
+    keys: np.ndarray           # sorted unique uint64 (cell << TIME_BITS) | bucket
+    splits: np.ndarray         # int64 [K+1] CSR into doc_ids
+    doc_ids: np.ndarray        # int64 [total]
+    t_min: np.ndarray          # float64 [n_docs]; +inf for empty tracks
+    t_max: np.ndarray          # float64 [n_docs]; -inf for empty tracks
+    n_docs: int
+
+    # ------------------------------------------------------------------ build
+    @staticmethod
+    def build(lat: np.ndarray, lng: np.ndarray, t: np.ndarray, n_docs: int,
+              row_splits: Optional[np.ndarray] = None, *,
+              level: int = 6, bucket_s: float = 900.0,
+              epoch: float = 0.0) -> "SpaceTimeIndex":
+        if not 0 < level <= (64 - TIME_BITS) // 6:
+            # the packed key is (6·level cell bits) << TIME_BITS | bucket;
+            # beyond level 7 it would overflow uint64 and silently corrupt
+            # lookups, so reject at build time
+            raise ValueError(f"spacetime index level must be in "
+                             f"[1, {(64 - TIME_BITS) // 6}], got {level}")
+        if bucket_s <= 0:
+            raise ValueError("bucket_s must be positive")
+        lat = np.asarray(lat, dtype=np.float64)
+        lng = np.asarray(lng, dtype=np.float64)
+        t = np.asarray(t, dtype=np.float64)
+        if row_splits is not None:
+            docs = np.repeat(np.arange(n_docs, dtype=np.int64),
+                             np.diff(row_splits))
+        else:
+            docs = np.arange(n_docs, dtype=np.int64)[: lat.size]
+        t_min = np.full(n_docs, np.inf)
+        t_max = np.full(n_docs, -np.inf)
+        if t.size:
+            np.minimum.at(t_min, docs, t)
+            np.maximum.at(t_max, docs, t)
+        if lat.size == 0:
+            return SpaceTimeIndex(level, bucket_s, epoch,
+                                  np.zeros(0, dtype=np.uint64),
+                                  np.zeros(1, dtype=np.int64),
+                                  np.zeros(0, dtype=np.int64),
+                                  t_min, t_max, n_docs)
+        shift = np.uint64(6 * (M.MAX_LEVEL - level))
+        cell = M.latlng_to_morton(lat, lng) >> shift
+        bucket = np.clip(np.floor((t - epoch) / bucket_s),
+                         0, MAX_BUCKET).astype(np.uint64)
+        ck = (cell << _TB) | bucket
+        order = np.lexsort((docs, ck))
+        ck_s, docs_s = ck[order], docs[order]
+        # dedupe (key, doc) pairs — a track may linger in one cell+bucket
+        keep = np.ones(ck_s.size, dtype=bool)
+        keep[1:] = (ck_s[1:] != ck_s[:-1]) | (docs_s[1:] != docs_s[:-1])
+        ck_s, docs_s = ck_s[keep], docs_s[keep]
+        uniq, starts = np.unique(ck_s, return_index=True)
+        splits = np.concatenate([starts, [ck_s.size]]).astype(np.int64)
+        return SpaceTimeIndex(level, bucket_s, epoch, uniq, splits, docs_s,
+                              t_min, t_max, n_docs)
+
+    # ----------------------------------------------------------------- lookup
+    def _bucket_range(self, t0: float, t1: float) -> Tuple[int, int]:
+        b0 = int(np.clip(np.floor((t0 - self.epoch) / self.bucket_s),
+                         0, MAX_BUCKET))
+        b1 = int(np.clip(np.floor((t1 - self.epoch) / self.bucket_s),
+                         0, MAX_BUCKET))
+        return b0, b1
+
+    def lookup(self, region: AreaTree, t0: float, t1: float) -> np.ndarray:
+        """Candidate docs with a track point in a cell covering ``region``
+        during a bucket overlapping ``[t0, t1]`` (superset of exact)."""
+        if region.is_empty or t1 < t0 or self.keys.size == 0:
+            return bitmap_zeros(self.n_docs)
+        shift = np.uint64(6 * (M.MAX_LEVEL - self.level))
+        c0 = region.lo >> shift
+        c1 = (region.hi - _ONE) >> shift          # inclusive cell ranges
+        b0, b1 = self._bucket_range(t0, t1)
+        parts = []
+        for lo, hi in zip(c0, c1):
+            a = int(np.searchsorted(self.keys, (lo << _TB) | np.uint64(b0),
+                                    side="left"))
+            b = int(np.searchsorted(self.keys, (hi << _TB) | np.uint64(b1),
+                                    side="right"))
+            if b <= a:
+                continue
+            span = self.keys[a:b]
+            bk = span & _BMASK
+            for i in np.nonzero((bk >= b0) & (bk <= b1))[0] + a:
+                parts.append(self.doc_ids[self.splits[i]:self.splits[i + 1]])
+        if not parts:
+            return bitmap_zeros(self.n_docs)
+        bm = bitmap_from_ids(np.concatenate(parts), self.n_docs)
+        # IntervalSet-style span prune: drop docs whose whole track misses
+        # the window (kills same-place-different-time false positives).
+        overlap = (self.t_min <= t1) & (self.t_max >= t0)
+        return bm & bitmap_from_ids(
+            np.nonzero(overlap)[0].astype(np.int64), self.n_docs)
+
+    def num_keys(self) -> int:
+        return int(self.keys.size)
+
+    def __repr__(self):
+        return (f"SpaceTimeIndex(level={self.level}, "
+                f"bucket_s={self.bucket_s}, keys={self.keys.size}, "
+                f"docs={self.n_docs})")

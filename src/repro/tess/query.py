@@ -1,0 +1,108 @@
+"""Tesseract queries: multi-constraint space-time trip selection (paper §2).
+
+The paper's motivating workload: *"all trips passing through region A during
+time window T1 and region B during T2"*.  A :class:`Tesseract` is the
+constraint builder —
+
+    tess = Tesseract(region_a, t0, t1).also(region_b, t2, t3)
+    trips = fdb("Trips").tesseract(tess).collect()
+
+Each constraint becomes one :class:`~repro.core.exprs.InSpaceTime` conjunct.
+The planner compiles every conjunct into a ``spacetime`` index probe *and*
+keeps it in the residual filter: per shard, all constraint postings bitmaps
+are stacked into **one** batched ``bitset`` kernel launch through the
+``ExecBackend`` seam (``probe_shard`` → ``intersect_bitmaps``), and the
+surviving candidates are refined exactly (point-in-cover × time-window)
+behind the backend's ``compact_mask``.
+
+:func:`tesseract_stats` mirrors that hot path outside an engine, reporting
+index-probe candidate counts vs. exact-refine counts per shard — the
+pruning-ratio evidence the benchmarks track.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.exprs import (EvalContext, Expr, ExprProxy, FieldRef,
+                          InSpaceTime, eval_expr)
+from ..geo.areatree import AreaTree
+
+__all__ = ["Tesseract", "tesseract_stats"]
+
+
+class Tesseract:
+    """Immutable builder of space-time constraints (AND semantics)."""
+
+    def __init__(self, region: AreaTree, t0: float, t1: float,
+                 field: str = "track"):
+        if t1 < t0:
+            raise ValueError("Tesseract window with t1 < t0")
+        self.field = field
+        self.constraints: Tuple[Tuple[AreaTree, float, float], ...] = (
+            (region, float(t0), float(t1)),)
+
+    def also(self, region: AreaTree, t0: float, t1: float) -> "Tesseract":
+        """Add another constraint: ... AND through ``region`` during
+        ``[t0, t1]``."""
+        if t1 < t0:
+            raise ValueError("Tesseract window with t1 < t0")
+        out = Tesseract.__new__(Tesseract)
+        out.field = self.field
+        out.constraints = self.constraints + ((region, float(t0),
+                                               float(t1)),)
+        return out
+
+    def expr(self, field: Optional[str] = None) -> ExprProxy:
+        """The WFL predicate: AND of per-constraint ``InSpaceTime`` nodes —
+        usable directly in ``find()`` and composable with other conjuncts."""
+        fr = FieldRef(field or self.field)
+        out: Optional[ExprProxy] = None
+        for region, t0, t1 in self.constraints:
+            e = ExprProxy(InSpaceTime(fr, region, t0, t1))
+            out = e if out is None else (out & e)
+        return out
+
+    def __repr__(self):
+        return (f"Tesseract({self.field!r}, "
+                f"{len(self.constraints)} constraints)")
+
+
+def tesseract_stats(db, tess: Tesseract, backend=None) -> Dict[str, Any]:
+    """Per-shard index-probe candidates vs. exact-refine survivors.
+
+    Runs the same per-shard hot loop the engines run — one stacked
+    ``intersect_bitmaps`` over all constraint postings, then the exact
+    refine behind ``compact_mask`` — and reports the pruning ratio
+    (fraction of docs the index never touched).
+    """
+    from ..exec.backend import as_backend     # lazy: exec imports core
+    be = as_backend(backend)
+    pred: Expr = tess.expr()._expr
+    per_shard: List[Dict[str, int]] = []
+    docs = candidates = refined = 0
+    for sid, shard in enumerate(db.shards):
+        idx = shard.index(tess.field, "spacetime")
+        if idx is None:
+            raise RuntimeError(f"{db.name}.{tess.field} has no spacetime "
+                               f"index")
+        bms = [idx.lookup(region, t0, t1)
+               for region, t0, t1 in tess.constraints]
+        bm = be.intersect_bitmaps(shard.all_bitmap(), bms)
+        ids = be.select_ids(bm, shard.n)
+        sub = shard.batch.gather(ids)
+        v = eval_expr(pred, EvalContext(sub))
+        mask = np.asarray(v.values, dtype=bool)
+        if mask.ndim == 0:
+            mask = np.broadcast_to(mask, (sub.n,))
+        keep = be.compact_mask(mask)
+        per_shard.append({"shard": sid, "docs": shard.n,
+                          "candidates": int(ids.size),
+                          "refined": int(keep.size)})
+        docs += shard.n
+        candidates += int(ids.size)
+        refined += int(keep.size)
+    return {"docs": docs, "candidates": candidates, "refined": refined,
+            "pruning": 1.0 - (candidates / docs if docs else 0.0),
+            "per_shard": per_shard}

@@ -47,6 +47,15 @@ def test_compact(n, density):
     assert (np.asarray(gi)[k:] == -1).all()
 
 
+@pytest.mark.parametrize("impl", ["interpret", "reference"])
+def test_compact_empty_mask(impl):
+    # zero-size masks happen per shard whenever an index probe admits no
+    # candidates (common for selective Tesseract queries)
+    idx, cnt = ops.compact(jnp.zeros((0,), jnp.bool_), impl=impl)
+    assert int(cnt) == 0
+    assert np.asarray(idx).shape == (0,)
+
+
 @given(st.integers(1, 2000), st.integers(0, 2**31))
 @settings(max_examples=30, deadline=None)
 def test_compact_property(n, seed):

@@ -1,0 +1,220 @@
+"""Tesseract subsystem: space-time index correctness, engine wiring,
+backend parity, and pruning power (ISSUE-2 acceptance criteria)."""
+import numpy as np
+import pytest
+
+from repro.core import P, fdb, proto
+from repro.core.exprs import EvalContext, InSpaceTime, FieldRef, eval_expr
+from repro.core.planner import plan_flow
+from repro.data.synthetic import CITIES, city_region, generate_world
+from repro.exec import AdHocEngine, Catalog, FlumeEngine
+from repro.fdb import FDb, build_fdb
+from repro.fdb.index import ids_from_bitmap
+from repro.geo import AreaTree, mercator as M
+from repro.tess import SpaceTimeIndex, Tesseract, tesseract_stats
+
+pytestmark = pytest.mark.tesseract
+
+DAY = 2
+NUM_SHARDS = 12          # acceptance: ≥ 10 shards
+
+
+def window(h0, h1, day=DAY):
+    return day * 86400.0 + h0 * 3600.0, day * 86400.0 + h1 * 3600.0
+
+
+@pytest.fixture(scope="module")
+def trips_world():
+    return generate_world(scale=0.2, seed=0)
+
+
+@pytest.fixture(scope="module")
+def trips_catalog(trips_world):
+    cat = Catalog(server_slots=32)
+    cat.register(build_fdb("Trips", trips_world["trips_schema"],
+                           trips_world["trips"], num_shards=NUM_SHARDS))
+    return cat
+
+
+@pytest.fixture(scope="module")
+def two_leg_tess():
+    """The §2 query: through SF during T1 AND through Berkeley during T2."""
+    sf_t = window(6, 12)
+    bk_t = window(6, 14)
+    return (Tesseract(city_region("SF"), *sf_t)
+            .also(city_region("Berkeley"), *bk_t))
+
+
+def brute_force_ids(trips, tess):
+    """Reference semantics straight off the record dicts."""
+    out = []
+    for tr in trips:
+        keys = M.latlng_to_morton(np.asarray(tr["track"]["lat"]),
+                                  np.asarray(tr["track"]["lng"]))
+        ts = np.asarray(tr["track"]["t"])
+        ok = True
+        for region, t0, t1 in tess.constraints:
+            if not np.any(region.contains(keys) & (ts >= t0) & (ts <= t1)):
+                ok = False
+                break
+        if ok:
+            out.append(tr["id"])
+    return sorted(out)
+
+
+# ------------------------------------------------------------------ index
+
+def test_spacetime_index_is_conservative(trips_world):
+    """Index candidates are always a superset of the exact matches."""
+    trips = trips_world["trips"]
+    db = build_fdb("T", trips_world["trips_schema"], trips, num_shards=4)
+    rng = np.random.default_rng(0)
+    regions = [city_region(c) for c in CITIES]
+    for _ in range(20):
+        region = regions[int(rng.integers(0, len(regions)))]
+        day = int(rng.integers(0, 7))
+        h0 = float(rng.uniform(0, 20))
+        t0, t1 = window(h0, h0 + float(rng.uniform(0.5, 6.0)), day)
+        pred = InSpaceTime(FieldRef("track"), region, t0, t1)
+        for shard in db.shards:
+            idx = shard.index("track", "spacetime")
+            cand = set(ids_from_bitmap(idx.lookup(region, t0, t1),
+                                       shard.n).tolist())
+            v = eval_expr(pred, EvalContext(shard.batch))
+            exact = set(np.nonzero(np.asarray(v.values,
+                                              dtype=bool))[0].tolist())
+            assert exact <= cand
+
+
+def test_spacetime_index_empty_cases(trips_world):
+    trips = trips_world["trips"]
+    db = build_fdb("T", trips_world["trips_schema"], trips, num_shards=2)
+    idx = db.shards[0].index("track", "spacetime")
+    assert isinstance(idx, SpaceTimeIndex)
+    n = db.shards[0].n
+    # empty region / inverted window → zero candidates
+    assert ids_from_bitmap(idx.lookup(AreaTree.empty(), 0.0, 1e9),
+                           n).size == 0
+    assert ids_from_bitmap(idx.lookup(city_region("SF"), 100.0, 50.0),
+                           n).size == 0
+    # window outside the whole week → span prune clears everything
+    assert ids_from_bitmap(idx.lookup(city_region("SF"), 2e7, 3e7),
+                           n).size == 0
+
+
+def test_spacetime_index_time_discrimination(trips_world):
+    """Same region, disjoint window → candidates don't leak across time."""
+    trips = trips_world["trips"]
+    db = build_fdb("T", trips_world["trips_schema"], trips, num_shards=1)
+    idx = db.shards[0].index("track", "spacetime")
+    region = city_region("SF")
+    week = ids_from_bitmap(idx.lookup(region, 0.0, 7 * 86400.0),
+                           db.shards[0].n)
+    one_hour = ids_from_bitmap(idx.lookup(region, *window(3, 4, day=6)),
+                               db.shards[0].n)
+    assert set(one_hour.tolist()) <= set(week.tolist())
+    assert one_hour.size < week.size
+
+
+# ---------------------------------------------------------------- planner
+
+def test_planner_compiles_probes_plus_refine(trips_catalog, two_leg_tess):
+    plan = plan_flow(fdb("Trips").tesseract(two_leg_tess), trips_catalog)
+    assert [p.kind for p in plan.probes] == ["spacetime", "spacetime"]
+    # conservative probes keep the exact constraint in the residual
+    assert plan.residual is not None
+    assert {"track.lat", "track.lng", "track.t"} <= set(plan.source_paths)
+
+
+def test_tesseract_composes_with_other_conjuncts(trips_catalog,
+                                                 two_leg_tess):
+    flow = fdb("Trips").find(two_leg_tess.expr() & (P.day == DAY))
+    plan = plan_flow(flow, trips_catalog)
+    kinds = sorted(p.kind for p in plan.probes)
+    assert kinds == ["range", "spacetime", "spacetime"]   # day eq → range
+    eng = AdHocEngine(trips_catalog, num_servers=4)
+    res = eng.collect(flow)
+    days = res.batch["day"].values
+    assert np.all(days == DAY)
+
+
+def test_tesseract_window_validation():
+    with pytest.raises(ValueError):
+        Tesseract(AreaTree.everything(), 10.0, 5.0)
+    with pytest.raises(ValueError):
+        Tesseract(AreaTree.everything(), 0.0, 1.0).also(
+            AreaTree.everything(), 10.0, 5.0)
+
+
+def test_spacetime_index_rejects_overflowing_level():
+    # (6·level + TIME_BITS) bits must fit a uint64 packed key; level 8+
+    # would silently wrap and drop matches, so build refuses it
+    z = np.zeros(0)
+    for level in (8, 9, 10, 0):
+        with pytest.raises(ValueError):
+            SpaceTimeIndex.build(z, z, z, 0, None, level=level)
+    with pytest.raises(ValueError):
+        SpaceTimeIndex.build(z, z, z, 0, None, bucket_s=0.0)
+    SpaceTimeIndex.build(z, z, z, 0, None, level=7)   # max legal level
+
+
+# ------------------------------------------------------- engines + parity
+
+def test_two_constraint_parity_numpy_vs_jax(trips_world, trips_catalog,
+                                            two_leg_tess):
+    """Acceptance: identical trip-id sets across backends over ≥10 shards."""
+    db = trips_catalog.get("Trips")
+    assert db.num_shards >= 10
+    flow = (fdb("Trips").tesseract(two_leg_tess)
+            .map(lambda p: proto(id=p.id, duration_s=p.duration_s)))
+    ids = {}
+    for b in ("numpy", "jax"):
+        res = AdHocEngine(trips_catalog, num_servers=4,
+                          backend=b).collect(flow)
+        ids[b] = sorted(res.batch["id"].values.tolist())
+    assert ids["numpy"] == ids["jax"]
+    # ...and both match brute-force reference semantics
+    assert ids["numpy"] == brute_force_ids(trips_world["trips"],
+                                           two_leg_tess)
+    assert len(ids["numpy"]) > 0
+
+
+def test_flume_engine_matches_adhoc(trips_catalog, two_leg_tess, tmp_path):
+    flow = (fdb("Trips").tesseract(two_leg_tess)
+            .map(lambda p: proto(id=p.id)))
+    ref = AdHocEngine(trips_catalog, num_servers=4,
+                      backend="numpy").collect(flow)
+    fl = FlumeEngine(trips_catalog, ckpt_dir=str(tmp_path), max_workers=4,
+                     backend="jax").collect(flow)
+    assert sorted(ref.batch["id"].values.tolist()) \
+        == sorted(fl.batch["id"].values.tolist())
+
+
+def test_pruning_ratio_selective_region(trips_catalog, two_leg_tess):
+    """Acceptance: the index prunes ≥ 90 % of trips for selective regions."""
+    db = trips_catalog.get("Trips")
+    stats = tesseract_stats(db, two_leg_tess)
+    assert stats["docs"] == db.num_docs
+    assert stats["refined"] <= stats["candidates"]
+    assert stats["pruning"] >= 0.9
+    # stats' exact pass agrees with the engine result
+    res = AdHocEngine(trips_catalog, num_servers=4).collect(
+        fdb("Trips").tesseract(two_leg_tess))
+    assert res.batch.n == stats["refined"]
+    # profile's candidate accounting matches the stats probe
+    assert res.profile.rows_selected == stats["candidates"]
+
+
+def test_save_load_roundtrip_preserves_spacetime_index(trips_world,
+                                                       two_leg_tess,
+                                                       tmp_path):
+    db = build_fdb("Trips", trips_world["trips_schema"],
+                   trips_world["trips"], num_shards=NUM_SHARDS)
+    db.save(str(tmp_path))
+    db2 = FDb.load(str(tmp_path))
+    cat = Catalog()
+    cat.register(db2)
+    res = AdHocEngine(cat, num_servers=4).collect(
+        fdb("Trips").tesseract(two_leg_tess))
+    assert sorted(res.batch["id"].values.tolist()) \
+        == brute_force_ids(trips_world["trips"], two_leg_tess)

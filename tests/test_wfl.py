@@ -89,6 +89,39 @@ def test_planner_minimal_read_set(catalog):
     assert plan_flow(q2, catalog).source_paths == ["city", "speed_limit"]
 
 
+def test_or_pushdown_tag_lookup_any(catalog, engine):
+    """Disjunctions of tag lookups on one field → bitmap OR, no residual."""
+    pred = (P.city == "SF") | IN(P.city, ["OAK"])
+    probes, residual = split_find_pred(pred._expr,
+                                       catalog.schema_of("Roads"))
+    assert [p.kind for p in probes] == ["tag"]
+    assert probes[0].args == (("SF", "OAK"),)
+    assert residual is None
+    # engine result identical to the residual-only evaluation
+    got = engine.collect(fdb("Roads").find(pred))
+    want = engine.collect(fdb("Roads").filter(pred))
+    assert sorted(got.batch["id"].values.tolist()) \
+        == sorted(want.batch["id"].values.tolist())
+    assert got.batch.n > 0
+
+
+def test_or_pushdown_rejects_mixed_or_unindexed(catalog):
+    schema = catalog.schema_of("Roads")
+    # mixed fields: stays residual
+    probes, residual = split_find_pred(
+        ((P.city == "SF") | (P.id == 3))._expr, schema)
+    assert probes == [] and residual is not None
+    # non-tag field (speed_limit is range-indexed only): stays residual
+    probes, residual = split_find_pred(
+        ((P.speed_limit == 30.0) | (P.speed_limit == 50.0))._expr, schema)
+    assert all(p.kind != "tag" for p in probes)
+    assert residual is not None
+    # OR with a non-leaf disjunct: stays residual
+    probes, residual = split_find_pred(
+        ((P.city == "SF") | (P.speed_limit * 2.0 > 80.0))._expr, schema)
+    assert probes == [] and residual is not None
+
+
 def test_aggregate_matches_brute_force(world, engine):
     q = (fdb("Obs").find(BETWEEN(P.hour, 8, 9))
          .aggregate(group(P.road_id).count("n").avg(m=P.speed)
