@@ -1,9 +1,15 @@
 # Convenience entry points. PYTHONPATH=src matches the tier-1 command in
-# ROADMAP.md.
+# ROADMAP.md.  `make help` lists everything; the `ci*` targets are what
+# .github/workflows/ci.yml runs (badge in ROADMAP.md).
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test test-fast test-tesseract bench bench-backends bench-tesseract
+.PHONY: help test test-fast test-tesseract bench bench-backends \
+        bench-tesseract ci ci-kernels ci-bench bench-regression
+
+help:                 ## list targets (CI runs: ci, ci-kernels, ci-bench)
+	@grep -E '^[a-z][a-zA-Z_-]*:.*##' $(MAKEFILE_LIST) | \
+	  awk -F':.*## ' '{printf "  make %-18s %s\n", $$1, $$2}'
 
 test:                 ## tier-1 verify
 	$(PY) -m pytest -x -q
@@ -13,6 +19,19 @@ test-fast:            ## skip @slow end-to-end tests
 
 test-tesseract:       ## trip-query subsystem tests only
 	$(PY) -m pytest -x -q -m tesseract
+
+ci:                   ## CI leg: tier-1 under $REPRO_EXEC_BACKEND (numpy|jax)
+	$(PY) -m pytest -x -q
+
+ci-kernels:           ## CI extra: interpret-vs-reference kernel-body sweeps
+	$(PY) -m pytest -x -q tests/test_kernels.py
+
+ci-bench:             ## CI smoke: tiny backends suite, exits non-zero on parity fail
+	$(PY) -m benchmarks.run --only backends --json --scale 0.05
+
+bench-regression:     ## compare fresh BENCH_backends.json vs committed baseline
+	$(PY) benchmarks/check_regression.py --current BENCH_backends.json \
+	  --baseline benchmarks/baselines/BENCH_backends.json
 
 bench:                ## full benchmark harness
 	$(PY) -m benchmarks.run

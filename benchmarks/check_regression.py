@@ -1,0 +1,83 @@
+#!/usr/bin/env python
+"""Compare a fresh ``BENCH_<suite>.json`` against a committed baseline.
+
+Fails (exit 1) when any query's wall time regressed by more than
+``--threshold`` (default 1.5×) versus the baseline.  Rows are matched by
+name; rows missing from either side, non-numeric rows (parity summaries),
+and rows faster than ``--min-us`` (dispatch noise on shared CI runners)
+are reported but never fail the check.
+
+CI wires this as a *non-blocking* report step to start (the baselines are
+laptop-class numbers; absolute CI-runner variance is still being learned)
+— flip ``continue-on-error`` off in ``.github/workflows/ci.yml`` once the
+numbers settle.  Runs on stdlib only, no repo imports:
+
+    python benchmarks/check_regression.py \
+        --current BENCH_backends.json \
+        --baseline benchmarks/baselines/BENCH_backends.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _rows_by_name(path: str) -> dict:
+    with open(path) as fh:
+        payload = json.load(fh)
+    out = {}
+    for row in payload.get("rows", []):
+        us = row.get("us_per_call")
+        if isinstance(us, (int, float)) and row.get("name"):
+            out[row["name"]] = float(us)
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--current", required=True,
+                    help="fresh BENCH_<suite>.json")
+    ap.add_argument("--baseline", required=True,
+                    help="committed baseline BENCH_<suite>.json")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="fail when current > threshold × baseline")
+    ap.add_argument("--min-us", type=float, default=500.0,
+                    help="ignore rows faster than this (dispatch noise)")
+    args = ap.parse_args()
+
+    cur = _rows_by_name(args.current)
+    base = _rows_by_name(args.baseline)
+    regressions, skipped = [], []
+    print(f"{'query':44s} {'baseline':>12s} {'current':>12s} {'ratio':>7s}")
+    for name in sorted(base):
+        if name not in cur:
+            skipped.append(f"{name} (missing from current)")
+            continue
+        b, c = base[name], cur[name]
+        ratio = c / b if b > 0 else float("inf")
+        flag = ""
+        if max(b, c) < args.min_us:
+            flag = "  (below --min-us, informational)"
+        elif ratio > args.threshold:
+            flag = "  REGRESSION"
+            regressions.append((name, b, c, ratio))
+        print(f"{name:44s} {b:10.1f}µs {c:10.1f}µs {ratio:6.2f}x{flag}")
+    for name in sorted(set(cur) - set(base)):
+        skipped.append(f"{name} (new, no baseline)")
+    for s in skipped:
+        print(f"  note: {s}")
+    if regressions:
+        print(f"\n{len(regressions)} regression(s) past "
+              f"{args.threshold:.2f}x:", file=sys.stderr)
+        for name, b, c, ratio in regressions:
+            print(f"  {name}: {b:.1f}µs → {c:.1f}µs ({ratio:.2f}x)",
+                  file=sys.stderr)
+        return 1
+    print("\nno wall-time regressions past "
+          f"{args.threshold:.2f}x ({len(base)} baseline rows)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

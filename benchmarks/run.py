@@ -6,7 +6,14 @@ world; default sizes finish on a laptop CPU in a few minutes.
 
 ``--json`` additionally writes one machine-readable ``BENCH_<suite>.json``
 per suite (per-query wall time + parity bit where the suite checks
-parity), so the perf trajectory can be tracked across PRs.
+parity), so the perf trajectory can be tracked across PRs
+(``benchmarks/check_regression.py`` compares against a committed
+baseline).
+
+Exit status is the CI contract: **non-zero whenever any suite reports a
+false parity bit** (numpy oracle ≠ jax batched path), and — under
+``--json`` — whenever a suite errored outright, so the bench smoke job
+cannot go green on broken output.
 """
 from __future__ import annotations
 
@@ -62,8 +69,11 @@ def main() -> None:
         "fig12": lambda: bench_fig12.run(scale=args.scale),
         "flume": lambda: bench_flume_overhead.run(scale=args.scale),
         "kernels": lambda: bench_kernels.run(),
-        "backends": lambda: bench_backends.run(scale=args.scale),
-        "tesseract": lambda: bench_tesseract.run(scale=args.scale),
+        # parity verdicts flow into rows; this harness owns the exit code
+        "backends": lambda: bench_backends.run(scale=args.scale,
+                                               raise_on_mismatch=False),
+        "tesseract": lambda: bench_tesseract.run(scale=args.scale,
+                                                 raise_on_mismatch=False),
         "roofline": lambda: roofline.run(),
     }
     all_rows = []
@@ -88,6 +98,16 @@ def main() -> None:
             f"{k}={v}" for k, v in r.items()
             if k not in ("name", "us_per_call", "derived"))
         print(f"{r['name']},{us},\"{derived}\"")
+
+    parity_bad = [r["name"] for r in all_rows
+                  if "parity" in r and not r["parity"]]
+    errors = [r["name"] for r in all_rows if "error" in r]
+    if parity_bad:
+        print(f"\nPARITY FAILURE: {parity_bad}", file=sys.stderr)
+        sys.exit(1)
+    if errors and args.json:
+        print(f"\nSUITE ERRORS: {errors}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -6,8 +6,11 @@ see :mod:`repro.exec.backend`.
 """
 from .backend import (ExecBackend, JaxBackend, NumpyBackend, as_backend,
                       backend_names, get_backend, register_backend)
+from .batched import (DEFAULT_WAVE, partition_waves, run_wave_task,
+                      wave_size)
 from .catalog import Catalog, StructureManager, ResourceManager, default_catalog
 from .adhoc import AdHocEngine, QueryResult, default_engine
+from .device_cache import DeviceCache
 from .flume import FlumeEngine
 from .failures import FaultPlan, TaskFailure
 
@@ -15,4 +18,6 @@ __all__ = ["Catalog", "StructureManager", "ResourceManager",
            "default_catalog", "AdHocEngine", "QueryResult", "default_engine",
            "FlumeEngine", "FaultPlan", "TaskFailure",
            "ExecBackend", "NumpyBackend", "JaxBackend", "get_backend",
-           "as_backend", "register_backend", "backend_names"]
+           "as_backend", "register_backend", "backend_names",
+           "DEFAULT_WAVE", "wave_size", "partition_waves", "run_wave_task",
+           "DeviceCache"]

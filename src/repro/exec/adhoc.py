@@ -23,12 +23,12 @@ import numpy as np
 from ..core.exprs import CollectedTable, FieldRef
 from ..core.flow import (AggregateOp, DistinctOp, Flow, JoinOp, LimitOp,
                          SortOp)
-from ..core.planner import Plan, plan_flow, probe_shard
+from ..core.planner import Plan, plan_flow
 from ..fdb.columnar import ColumnBatch
 from ..fdb.fdb import FDb, Shard, _build_shard_indexes
-from ..fdb.index import bitmap_count, ids_from_bitmap
 from ..fdb.schema import DOUBLE, INT, STRING, Schema
 from .backend import as_backend
+from .batched import partition_waves, run_wave_task, wave_size
 from .catalog import Catalog, default_catalog
 from .failures import FaultPlan, TaskFailure
 from .processors import (AggPartial, aggregate_consume, aggregate_produce,
@@ -90,12 +90,16 @@ class AdHocEngine:
 
     def __init__(self, catalog: Optional[Catalog] = None,
                  num_servers: int = 8,
-                 profile_log=None, backend=None):
+                 profile_log=None, backend=None,
+                 wave: Optional[int] = None):
         self.catalog = catalog or default_catalog()
         self.num_servers = num_servers
         # execution backend: None → $REPRO_EXEC_BACKEND or "numpy";
         # accepts a registered name or an ExecBackend instance
         self.backend = as_backend(backend)
+        # shards per batched dispatch wave:
+        # arg > $REPRO_EXEC_WAVE > backend default (8 batched / 1 host)
+        self.wave = wave_size(wave, self.backend)
         if profile_log is None:
             from ..fdb.streaming import StreamingFDb
             profile_log = StreamingFDb("warpflow.query_log",
@@ -109,6 +113,9 @@ class AdHocEngine:
         t0 = time.perf_counter()
         plan = plan_flow(flow, self.catalog)
         db = self.catalog.get(plan.source)
+        # device-resident columns: one-time put per FDb (no-op on host
+        # backends), so filter→compact→gather reuses resident buffers
+        self.backend.prime_fdb(db)
 
         # Broadcast side of hash joins: run the right flow first (recursive
         # query), index it by the right key — the paper's broadcast join.
@@ -161,22 +168,23 @@ class AdHocEngine:
     # ------------------------------------------------------------ servers
     def _run_servers(self, db, plan, tables, grant, profile,
                      fault_plan) -> List[_ShardPartial]:
+        """Waves of shards through the batched backend seam; shards whose
+        fault check trips at wave start fall back to the per-shard
+        retry/drop path (best-effort contract unchanged)."""
         partials: List[_ShardPartial] = []
+        retry: List[int] = []
         with ThreadPoolExecutor(max_workers=grant) as pool:
-            futs = {pool.submit(run_shard_task, db, plan, sid, tables,
+            futs = [pool.submit(run_wave_task, db, plan, wave, tables,
                                 self.catalog, fault_plan,
-                                backend=self.backend): sid
-                    for sid in plan.shard_ids}
-            retry: List[int] = []
+                                backend=self.backend)
+                    for wave in partition_waves(plan.shard_ids, self.wave)]
             for f in as_completed(futs):
-                sid = futs[f]
-                try:
-                    partials.append(f.result())
-                    profile.shards_done += 1
-                except TaskFailure:
-                    retry.append(sid)
+                done, failed = f.result()
+                partials.extend(done)
+                profile.shards_done += len(done)
+                retry.extend(failed)
             # best-effort: one retry round, then drop (client may re-issue)
-            for sid in retry:
+            for sid in sorted(retry):
                 profile.retries += 1
                 try:
                     partials.append(run_shard_task(

@@ -26,6 +26,21 @@ math at float64 (``enable_x64``) and accumulates in row order — bit-equal
 to the numpy oracle's ``bincount`` — while ``pallas``/``interpret`` keep
 the MXU's float32, the TPU deployment precision.
 
+**Batched multi-shard ops.**  The engines dispatch *waves* of shards
+(``repro.exec.batched``) through ``probe_shards`` / ``compact_masks`` /
+``segment_aggregate_batched``: the jax backend pads the wave's ragged
+per-shard shapes into one stacked buffer and runs **one** kernel launch
+per wave (``bitmap_intersect_batched`` / ``compact_batched`` / offset
+group codes into one ``segment_agg``), while the numpy base-class
+implementations loop shard-by-shard over the single-shard primitives —
+the loop-over-shards oracle the batched path must match byte-for-byte.
+
+The jax backend additionally keeps stable per-FDb buffers (column values,
+valid-doc bitmaps, spacetime postings) device-resident across queries —
+``prime_fdb`` / :mod:`repro.exec.device_cache` — so the selective column
+read (``gather_columns``) pulls from resident buffers instead of
+re-uploading columns per query.
+
 Future scaling PRs (sharded device meshes, async prefetch, GPU lowering)
 plug in here: ``register_backend`` a new implementation and every engine
 picks it up.
@@ -33,6 +48,7 @@ picks it up.
 from __future__ import annotations
 
 import os
+import weakref
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -60,6 +76,11 @@ class ExecBackend:
     """
 
     name: str = "abstract"
+    #: True when the batched ops amortize real kernel launches; engines
+    #: then default to multi-shard waves.  Loop-over-shards backends keep
+    #: a default wave of 1 so per-shard thread parallelism is preserved
+    #: (an explicit wave=/$REPRO_EXEC_WAVE still forces wider waves).
+    batched_dispatch: bool = False
 
     def intersect_bitmaps(self, full: np.ndarray,
                           bitmaps: Sequence[np.ndarray]) -> np.ndarray:
@@ -75,6 +96,39 @@ class ExecBackend:
                           num_groups: int
                           ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         raise NotImplementedError
+
+    # -------------------------------------------------- batched (per wave)
+    # Base-class implementations loop shard-by-shard over the single-shard
+    # primitives: that *is* the oracle the batched overrides must match
+    # byte-for-byte (ragged shard sizes, empty shards included).
+
+    def probe_shards(self, fulls: Sequence[np.ndarray],
+                     probes: Sequence[Sequence[np.ndarray]]
+                     ) -> List[np.ndarray]:
+        """Per-shard AND of valid-doc bitmap and probe bitmaps, one wave."""
+        return [self.intersect_bitmaps(f, ps)
+                for f, ps in zip(fulls, probes)]
+
+    def compact_masks(self, masks: Sequence[np.ndarray]) -> List[np.ndarray]:
+        """Per-shard positions of True entries, one wave."""
+        return [self.compact_mask(m) for m in masks]
+
+    def segment_aggregate_batched(
+            self, codes: Sequence[np.ndarray], values: Sequence[np.ndarray],
+            num_groups: Sequence[int]
+            ) -> List[Tuple[np.ndarray, np.ndarray, np.ndarray]]:
+        """Per-shard (count, sum, sumsq) over shard-local group codes."""
+        return [self.segment_aggregate(c, v, g)
+                for c, v, g in zip(codes, values, num_groups)]
+
+    def gather_columns(self, batch, paths: Sequence[str],
+                       ids: np.ndarray):
+        """Selective column read of ``ids`` rows (host reference)."""
+        return batch.select_paths(list(paths)).gather(ids)
+
+    def prime_fdb(self, db) -> int:
+        """Make ``db``'s stable buffers backend-resident (no-op on host)."""
+        return 0
 
     def __repr__(self):
         return f"<ExecBackend {self.name}>"
@@ -125,13 +179,23 @@ class JaxBackend(ExecBackend):
     """
 
     name = "jax"
+    batched_dispatch = True
 
     def __init__(self, impl: Optional[str] = None):
         import jax  # container ships the jax_pallas toolchain
         import jax.numpy as jnp
         from ..kernels import ops
+        from .device_cache import DeviceCache
         self._jax, self._jnp, self._ops = jax, jnp, ops
         self.impl = impl
+        self.device_cache = DeviceCache(jax)
+        # weak: a collected FDb drops out, so a new FDb reusing the same
+        # address still primes, and a finalizer evicts its buffers.
+        # Buffers are refcounted across FDbs — StreamingFDb snapshots
+        # share flushed Shards (hence arrays), so an id is only evicted
+        # once every FDb that primed it is gone.
+        self._primed_fdbs: weakref.WeakSet = weakref.WeakSet()
+        self._primed_refs: Dict[int, int] = {}
 
     def _impl(self) -> str:
         return self.impl or self._ops.default_impl()
@@ -153,9 +217,10 @@ class JaxBackend(ExecBackend):
                                        impl=self._impl())
         return np.asarray(idx[: int(count)], dtype=np.int64)
 
-    def segment_aggregate(self, codes, values, num_groups):
+    def _segment_dispatch(self, codes32: np.ndarray, values: np.ndarray,
+                          num_groups: int):
+        """One segment_agg launch → host (count int64, sum f64, sumsq f64)."""
         impl = self._impl()
-        codes32 = np.ascontiguousarray(codes, dtype=np.int32)
         if impl == "reference":
             # float64 + row-order accumulation: bit-equal to the numpy
             # oracle, and the same segment math the kernel implements.
@@ -174,6 +239,152 @@ class JaxBackend(ExecBackend):
             cnt, s, s2 = (np.asarray(cnt), np.asarray(s, np.float64),
                           np.asarray(s2, np.float64))
         return np.rint(cnt).astype(np.int64), s, s2
+
+    def segment_aggregate(self, codes, values, num_groups):
+        codes32 = np.ascontiguousarray(codes, dtype=np.int32)
+        return self._segment_dispatch(codes32, values, num_groups)
+
+    # ------------------------------------------------------------- batched
+    def probe_shards(self, fulls, probes):
+        """One ``bitmap_intersect_batched`` launch for the whole wave.
+
+        Ragged per-shard word counts are zero-padded to the wave max —
+        sound because row 0 of every stack is the shard's valid-doc mask,
+        which is zero in the pad region.  Shards with fewer probes than
+        the wave max are padded with copies of their valid-doc mask (an
+        AND no-op).
+        """
+        fulls = list(fulls)
+        probes = [list(ps) for ps in probes]
+        n_shards = len(fulls)
+        if n_shards == 0:
+            return []
+        w = max(f.size for f in fulls)
+        if w == 0:                       # a wave of entirely empty shards
+            return [f.copy() for f in fulls]
+        k = 1 + max(len(ps) for ps in probes)
+        stack = np.zeros((n_shards, k, w), dtype=np.uint32)
+        for i, (f, ps) in enumerate(zip(fulls, probes)):
+            stack[i, 0, :f.size] = f
+            for j, b in enumerate(ps):
+                stack[i, j + 1, :b.size] = b
+            for j in range(len(ps) + 1, k):
+                stack[i, j, :f.size] = f
+        bms, _counts = self._ops.bitmap_intersect_batched(
+            self._jnp.asarray(stack), impl=self._impl())
+        bms = np.asarray(bms, dtype=np.uint32)
+        return [bms[i, :fulls[i].size].copy() for i in range(n_shards)]
+
+    def compact_masks(self, masks):
+        """One ``compact_batched`` launch for the whole wave (False-pad)."""
+        masks = [np.asarray(m, dtype=bool) for m in masks]
+        n_shards = len(masks)
+        if n_shards == 0:
+            return []
+        n = max(m.size for m in masks)
+        if n == 0:
+            return [np.zeros(0, dtype=np.int64) for _ in masks]
+        stack = np.zeros((n_shards, n), dtype=bool)
+        for i, m in enumerate(masks):
+            stack[i, :m.size] = m
+        idx, counts = self._ops.compact_batched(self._jnp.asarray(stack),
+                                                impl=self._impl())
+        idx = np.asarray(idx)
+        counts = np.asarray(counts)
+        return [idx[i, :int(counts[i])].astype(np.int64)
+                for i in range(n_shards)]
+
+    def segment_aggregate_batched(self, codes, values, num_groups):
+        """One segment launch per wave: shard-local group codes are offset
+        into a disjoint global code space, aggregated together, and split
+        back per shard.  Groups stay disjoint and rows keep their order,
+        so every per-group accumulation sums the same values in the same
+        order as the loop-over-shards oracle — bit-equal results.
+        """
+        num_groups = [int(g) for g in num_groups]
+        total_groups = sum(num_groups)
+        if total_groups == 0 or not codes:
+            return [(np.zeros(0, np.int64), np.zeros(0), np.zeros(0))
+                    for _ in codes]
+        offsets = np.concatenate([[0], np.cumsum(num_groups)])
+        shifted = []
+        for c, off in zip(codes, offsets[:-1]):
+            c32 = np.ascontiguousarray(c, dtype=np.int32)
+            shifted.append(np.where(c32 >= 0, c32 + np.int32(off),
+                                    np.int32(-1)).astype(np.int32))
+        codes_cat = np.concatenate(shifted) if shifted else \
+            np.zeros(0, np.int32)
+        vals_cat = np.concatenate([np.asarray(v) for v in values]) if values \
+            else np.zeros(0)
+        cnt, s, s2 = self._segment_dispatch(codes_cat, vals_cat,
+                                            total_groups)
+        out = []
+        for g, off in zip(num_groups, offsets[:-1]):
+            off = int(off)
+            out.append((cnt[off:off + g], s[off:off + g], s2[off:off + g]))
+        return out
+
+    # ---------------------------------------------------- device residence
+    def _release_primed(self, keys) -> None:
+        """Finalizer: drop a dead FDb's buffer refs; evict at zero."""
+        for key in keys:
+            n = self._primed_refs.get(key, 0) - 1
+            if n <= 0:
+                self._primed_refs.pop(key, None)
+                self.device_cache.drop((key,))
+            else:
+                self._primed_refs[key] = n
+
+    def prime_fdb(self, db) -> int:
+        """Put ``db``'s stable buffers on device once (idempotent per FDb):
+        column values/row_splits, valid-doc bitmaps, spacetime postings.
+        A finalizer releases the buffers when the FDb is collected; shared
+        buffers (snapshots sharing Shards) survive until their last FDb."""
+        if db in self._primed_fdbs:
+            return 0
+        before = len(self.device_cache)
+        primed: List[np.ndarray] = []
+        for shard in db.shards:
+            primed.append(shard.all_bitmap())
+            for col in shard.batch.columns.values():
+                primed.append(col.values)
+                if col.row_splits is not None:
+                    primed.append(col.row_splits)
+            for (_, kind), idx in shard.indexes.items():
+                if kind == "spacetime":
+                    primed.extend((idx.keys, idx.splits, idx.doc_ids,
+                                   idx.t_min, idx.t_max))
+        keys = set()
+        for arr in primed:
+            self.device_cache.put(arr)
+            keys.add(id(arr))
+        for key in keys:
+            self._primed_refs[key] = self._primed_refs.get(key, 0) + 1
+        self._primed_fdbs.add(db)
+        weakref.finalize(db, self._release_primed, tuple(keys))
+        return len(self.device_cache) - before
+
+    def gather_columns(self, batch, paths, ids):
+        """Selective read: dense columns gather from device-resident
+        buffers when primed (repeated/unprimed columns fall back to the
+        host gather — identical values either way)."""
+        from ..fdb.columnar import Column, ColumnBatch
+        sub = batch.select_paths(list(paths))
+        ids = np.asarray(ids, dtype=np.int64)
+        cols = {}
+        dev_ids = None
+        for p, c in sub.columns.items():
+            dev = None if c.row_splits is not None \
+                else self.device_cache.get(c.values)
+            if dev is None:
+                cols[p] = c.gather(ids)
+                continue
+            with self._jax.experimental.enable_x64():
+                if dev_ids is None:
+                    dev_ids = self._jnp.asarray(ids)
+                vals = np.asarray(dev[dev_ids])
+            cols[p] = Column(vals, None, c.vocab)
+        return ColumnBatch(sub.schema, cols, ids.size)
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,150 @@
+"""Batched multi-shard wave execution (the stacked-shard hot path).
+
+Per-shard dispatch pays one kernel launch per shard per primitive — the
+dominant scaling cliff once shard counts reach the hundreds the paper runs
+(§4–5).  This module groups a plan's shards into **waves** and drives each
+wave through the backend's batched ops, so a wave costs:
+
+  * one ``probe_shards`` launch       (stacked bitmap AND + popcount),
+  * one ``compact_masks`` launch      (stacked selection → doc ids),
+  * one ``compact_masks`` launch      for the residual refine (if any),
+  * one ``segment_aggregate_batched`` launch per aggregated value column,
+
+instead of the same set *per shard* — ⌈shards/wave⌉ launches per primitive
+per query (asserted by ``tests/test_batched.py`` via the kernel launch
+counter).  The numpy backend's batched ops loop shard-by-shard, so the
+wave runner is byte-identical to the per-shard path on both backends.
+
+Engines schedule waves onto their worker pools; shards whose fault check
+trips at wave start are returned to the caller for the engine's per-shard
+retry/recovery machinery (``run_shard_task``), which keeps the failure
+unit a single shard.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.exprs import CollectedTable
+from ..core.flow import AggregateOp, LimitOp, SortOp
+from ..core.planner import Plan
+from ..fdb.fdb import FDb
+from ..fdb.index import mask_from_bitmap
+from .backend import as_backend
+from .failures import FaultPlan, TaskFailure
+from .processors import (aggregate_produce_batched, apply_limit, apply_sort,
+                         predicate_mask, run_record_ops)
+from .task import ShardPartial
+
+__all__ = ["DEFAULT_WAVE", "WAVE_ENV", "wave_size", "partition_waves",
+           "run_wave_task"]
+
+DEFAULT_WAVE = 8
+WAVE_ENV = "REPRO_EXEC_WAVE"
+
+
+def wave_size(spec: Optional[int] = None, backend=None) -> int:
+    """Shards per wave: explicit argument > $REPRO_EXEC_WAVE > backend
+    default (``DEFAULT_WAVE`` when the backend's batched ops amortize
+    kernel launches, else 1 — a loop-over-shards backend gains nothing
+    from wide waves and would only lose per-shard thread parallelism)."""
+    if spec is not None:
+        return max(1, int(spec))
+    env = os.environ.get(WAVE_ENV)
+    if env:
+        return max(1, int(env))
+    if backend is not None and not getattr(backend, "batched_dispatch",
+                                           False):
+        return 1
+    return DEFAULT_WAVE
+
+
+def partition_waves(shard_ids: Sequence[int], wave: int) -> List[List[int]]:
+    sids = list(shard_ids)
+    return [sids[i:i + wave] for i in range(0, len(sids), wave)]
+
+
+def run_wave_task(db: FDb, plan: Plan, sids: Sequence[int],
+                  tables: Optional[Dict[int, CollectedTable]],
+                  catalog, fault_plan: Optional[FaultPlan] = None,
+                  stage: str = "server", backend=None
+                  ) -> Tuple[List[ShardPartial], List[int]]:
+    """Run one wave of shard tasks through the batched backend seam.
+
+    Returns ``(partials, failed_shard_ids)``: shards whose fault check
+    trips are excluded from the wave and handed back for the engine's
+    per-shard retry path.
+    """
+    backend = as_backend(backend)
+    failed: List[int] = []
+    live: List[int] = []
+    for sid in sids:
+        if fault_plan is not None:
+            try:
+                fault_plan.check(stage, sid)
+            except TaskFailure:
+                failed.append(sid)
+                continue
+        live.append(sid)
+    if not live:
+        return [], failed
+
+    t0 = time.perf_counter()
+    shards = [db.shards[sid] for sid in live]
+    # ---- stacked index probe + selection: one launch each per wave
+    bms = backend.probe_shards(
+        [sh.all_bitmap() for sh in shards],
+        [[p.run(sh) for p in plan.probes] for sh in shards])
+    ids_list = backend.compact_masks(
+        [mask_from_bitmap(bm, sh.n) for bm, sh in zip(bms, shards)])
+    t1 = time.perf_counter()
+
+    # ---- selective column read (device-resident buffers when primed)
+    partials: List[ShardPartial] = []
+    batches = []
+    for sid, sh, ids in zip(live, shards, ids_list):
+        paths = [p for p in plan.source_paths if p in sh.batch.columns]
+        if not paths:
+            paths = sh.batch.paths()
+        batch = backend.gather_columns(sh.batch, paths, ids)
+        partials.append(ShardPartial(shard_id=sid, rows_scanned=sh.n,
+                                     rows_selected=len(ids),
+                                     bytes_read=batch.nbytes()))
+        batches.append(batch)
+    t2 = time.perf_counter()
+
+    # ---- residual refine: masks host-evaluated, compacted in one launch
+    if plan.residual is not None:
+        keeps = backend.compact_masks(
+            [predicate_mask(b, plan.residual) for b in batches])
+        batches = [b.gather(k) for b, k in zip(batches, keeps)]
+    batches = [run_record_ops(b, plan.server_ops, catalog, tables,
+                              backend=backend) for b in batches]
+
+    # ---- tail: wave-batched aggregation, or per-shard presort/limit
+    if plan.mixer_ops and isinstance(plan.mixer_ops[0], AggregateOp):
+        aggs = aggregate_produce_batched(batches, plan.mixer_ops[0].spec,
+                                         backend)
+        for part, agg in zip(partials, aggs):
+            part.agg = agg
+    else:
+        presort = (len(plan.mixer_ops) >= 2
+                   and isinstance(plan.mixer_ops[0], SortOp)
+                   and isinstance(plan.mixer_ops[1], LimitOp))
+        for part, batch in zip(partials, batches):
+            pre = batch
+            if presort:
+                pre = apply_limit(apply_sort(pre, plan.mixer_ops[0]),
+                                  plan.mixer_ops[1].k)
+            part.batch = pre
+
+    # profile attribution: wave phases are shared work, split evenly
+    io_each = (t2 - t1) * 1e3 / len(live)
+    cpu_each = (time.perf_counter() - t0) * 1e3 / len(live)
+    for part in partials:
+        part.io_ms = io_each
+        part.cpu_ms = cpu_each
+    return partials, failed

@@ -1,0 +1,83 @@
+"""Device-resident column buffers for the jax execution backend.
+
+The per-shard hot loop used to ship every operand host→device on each
+query.  The stable operands — a shard's :class:`~repro.fdb.columnar.Column`
+value buffers, its valid-doc bitmap, and the ``spacetime`` index postings
+arrays — never change after an FDb is built, so the jax backend puts them
+on device **once per FDb open** (:meth:`JaxBackend.prime_fdb`) and reuses
+the buffers across queries: the selective column read after filter→compact
+gathers from the resident buffers instead of re-uploading the columns.
+
+The cache is keyed by host-array identity.  A cached entry pins the host
+array (so its ``id`` cannot be recycled), which is why only *priming*
+inserts: transient arrays (probe bitmaps, residual masks, derived value
+columns) pass through untouched.
+
+Device puts run under ``jax.experimental.enable_x64`` so int64/float64/
+uint64 buffers keep their width — the parity contract is byte-identical
+results against the numpy oracle, and a silent f64→f32 truncation at put
+time would break it.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["DeviceCache"]
+
+
+class DeviceCache:
+    """Identity-keyed host→device buffer cache (insert via :meth:`put`)."""
+
+    def __init__(self, jax_module):
+        self._jax = jax_module
+        self._jnp = jax_module.numpy
+        # id(host array) → (host array pin, device buffer)
+        self._buffers: Dict[int, Tuple[np.ndarray, object]] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._buffers)
+
+    def nbytes(self) -> int:
+        """Host-side bytes of everything resident (device mirror is 1:1)."""
+        return sum(a.nbytes for a, _ in self._buffers.values())
+
+    def put(self, arr: Optional[np.ndarray]):
+        """Make ``arr`` device-resident; returns the device buffer."""
+        if arr is None:
+            return None
+        key = id(arr)
+        hit = self._buffers.get(key)
+        if hit is not None:
+            return hit[1]
+        with self._jax.experimental.enable_x64():
+            dev = self._jnp.asarray(arr)
+        self._buffers[key] = (arr, dev)
+        return dev
+
+    def get(self, arr: np.ndarray):
+        """Device buffer for ``arr`` if primed, else None (and count it)."""
+        hit = self._buffers.get(id(arr))
+        if hit is not None:
+            self.hits += 1
+            return hit[1]
+        self.misses += 1
+        return None
+
+    def drop(self, keys) -> None:
+        """Evict entries by key id (used by per-FDb finalizers so buffers
+        of a collected FDb do not stay pinned forever)."""
+        for key in keys:
+            self._buffers.pop(key, None)
+
+    def clear(self) -> None:
+        self._buffers.clear()
+        self.hits = 0
+        self.misses = 0
+
+    def stats(self) -> Dict[str, int]:
+        return {"buffers": len(self._buffers), "nbytes": self.nbytes(),
+                "hits": self.hits, "misses": self.misses}

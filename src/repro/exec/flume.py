@@ -36,6 +36,7 @@ from ..fdb.columnar import ColumnBatch
 from ..fdb.schema import Schema
 from .adhoc import QueryProfile, QueryResult
 from .backend import as_backend
+from .batched import partition_waves, run_wave_task, wave_size
 from .catalog import Catalog, default_catalog
 from .failures import FaultPlan, TaskFailure
 from .processors import (aggregate_consume, aggregate_produce,
@@ -53,9 +54,10 @@ class FlumeEngine:
                  max_attempts: int = 4,
                  speculation: bool = True,
                  speculation_factor: float = 4.0,
-                 backend=None):
+                 backend=None, wave: Optional[int] = None):
         self.catalog = catalog or default_catalog()
         self.backend = as_backend(backend)
+        self.wave = wave_size(wave, self.backend)
         self.ckpt_dir = ckpt_dir or os.path.join(tempfile.gettempdir(),
                                                  "warpflume")
         self.max_workers = max_workers
@@ -72,6 +74,7 @@ class FlumeEngine:
         t0 = time.perf_counter()
         plan = plan_flow(flow, self.catalog)
         db = self.catalog.get(plan.source)
+        self.backend.prime_fdb(db)          # device-resident columns
         job_id = job_id or self._job_id(flow)
         job_dir = os.path.join(self.ckpt_dir, job_id)
         os.makedirs(job_dir, exist_ok=True)
@@ -88,15 +91,24 @@ class FlumeEngine:
         profile = QueryProfile(source=plan.source,
                                shards_total=len(plan.shard_ids))
 
-        # Stage 1: shard tasks with checkpoints + speculation (auto-scaled)
+        # Stage 1: shard tasks with checkpoints + speculation (auto-scaled).
+        # Fault-free runs take the batched wave path (per-shard checkpoints
+        # still written); with a fault plan installed the engine schedules
+        # per-shard tasks so retries, rerouting, and speculation stay at
+        # the simulated machine-failure boundary.
         workers = min(self.max_workers, max(1, len(plan.shard_ids)))
+        wave_fn = None
+        if fault_plan is None:
+            wave_fn = lambda sids: run_wave_task(
+                db, plan, sids, tables, self.catalog, None,
+                stage="server", backend=self.backend)
         partials = self._run_stage(
             stage="server", job_dir=job_dir, task_ids=plan.shard_ids,
             fn=lambda sid: run_shard_task(db, plan, sid, tables,
                                           self.catalog, fault_plan,
                                           stage="server",
                                           backend=self.backend),
-            workers=workers, profile=profile)
+            workers=workers, profile=profile, wave_fn=wave_fn)
 
         # Stage 2 (Mixer): merge + finish — itself checkpointed.
         final_path = os.path.join(job_dir, "final.pkl")
@@ -119,8 +131,8 @@ class FlumeEngine:
 
     # --------------------------------------------------------------- stage
     def _run_stage(self, stage: str, job_dir: str, task_ids: List[int],
-                   fn, workers: int, profile: QueryProfile
-                   ) -> List[ShardPartial]:
+                   fn, workers: int, profile: QueryProfile,
+                   wave_fn=None) -> List[ShardPartial]:
         stage_dir = os.path.join(job_dir, stage)
         os.makedirs(stage_dir, exist_ok=True)
         results: Dict[int, ShardPartial] = {}
@@ -133,6 +145,34 @@ class FlumeEngine:
                 self.stats["tasks_skipped"] += 1
             else:
                 todo.append(sid)
+
+        if wave_fn is not None and todo:
+            # batched pre-pass: one stacked dispatch per wave, waves run
+            # concurrently on the stage's worker budget, same per-task
+            # checkpoint files as the per-shard path.  A wave that errors
+            # must not abort its siblings: completed waves still commit
+            # their checkpoints (the point of stage-level recovery), and
+            # the failed wave's shards fall through to the per-shard
+            # machinery below, which retries or raises loudly.
+            remaining: List[int] = []
+            waves = partition_waves(todo, self.wave)
+            with ThreadPoolExecutor(
+                    max_workers=min(workers, len(waves))) as pool:
+                futs = [(pool.submit(wave_fn, wave), wave)
+                        for wave in waves]
+                for fut, wave in futs:
+                    try:
+                        done, failed = fut.result()
+                    except Exception:
+                        remaining.extend(wave)
+                        continue
+                    for out in done:
+                        results[out.shard_id] = out
+                        _atomic_pickle(
+                            out, self._ckpt_path(stage_dir, out.shard_id))
+                    self.stats["tasks_run"] += len(done)
+                    remaining.extend(failed)
+            todo = remaining
 
         if not todo:
             return [results[sid] for sid in task_ids if sid in results]

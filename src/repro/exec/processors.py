@@ -27,11 +27,13 @@ from ..fdb.index import ids_from_bitmap
 from ..fdb.schema import BOOL, DOUBLE, INT, STRING, Schema
 from .backend import as_backend
 
-__all__ = ["val_to_column", "apply_map", "apply_filter", "apply_flatten",
+__all__ = ["val_to_column", "apply_map", "apply_filter", "predicate_mask",
+           "apply_flatten",
            "apply_sort", "apply_limit", "apply_distinct", "apply_model",
            "apply_hash_join", "apply_sub_flow", "aggregate_produce",
-           "merge_agg_partials", "aggregate_consume", "partition_by_hash",
-           "AggPartial", "run_record_ops"]
+           "aggregate_produce_batched", "merge_agg_partials",
+           "aggregate_consume", "partition_by_hash", "AggPartial",
+           "run_record_ops"]
 
 
 # --------------------------------------------------------------------------
@@ -78,8 +80,10 @@ def apply_map(batch: ColumnBatch, make: MakeProto) -> ColumnBatch:
                        batch.n)
 
 
-def apply_filter(batch: ColumnBatch, pred: Expr,
-                 backend=None) -> ColumnBatch:
+def predicate_mask(batch: ColumnBatch, pred: Expr) -> np.ndarray:
+    """Singular predicate → bool row mask [n] (shared by the per-shard
+    filter, the wave runner's batched residual compact, and the Tesseract
+    exact refine — one definition keeps the paths byte-identical)."""
     v = eval_expr(pred, EvalContext(batch))
     if v.is_repeated:
         raise TypeError("filter() predicate must be singular "
@@ -87,6 +91,12 @@ def apply_filter(batch: ColumnBatch, pred: Expr,
     mask = np.asarray(v.values, dtype=bool)
     if mask.ndim == 0:
         mask = np.broadcast_to(mask, (batch.n,))
+    return mask
+
+
+def apply_filter(batch: ColumnBatch, pred: Expr,
+                 backend=None) -> ColumnBatch:
+    mask = predicate_mask(batch, pred)
     return batch.gather(as_backend(backend).compact_mask(mask))
 
 
@@ -273,9 +283,29 @@ def _group_codes(key_arrays: List[np.ndarray], n: int
     return codes, list(mapping)
 
 
-def aggregate_produce(batch: ColumnBatch, spec: AggSpec,
-                      backend=None) -> AggPartial:
-    backend = as_backend(backend)
+@dataclass
+class _AggPrep:
+    """Host-side per-shard aggregation state, ready for segment dispatch.
+
+    Splitting ``aggregate_produce`` into prepare → segment → finalize lets
+    the wave runner batch the segment dispatch across shards (one kernel
+    launch per wave) while the per-shard path keeps its original shape.
+    """
+    codes: np.ndarray                       # int64 [n], group code per row
+    uniq_keys: List[tuple]
+    counts: np.ndarray                      # int64 [n_groups]
+    vals_list: List[Optional[np.ndarray]]   # per agg, None for count
+    vocabs: List[Optional[list]]
+    seg_arrays: List[np.ndarray]            # distinct columns needing (s,s2)
+    seg_slot: List[Optional[int]]           # per agg → index into seg_arrays
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.uniq_keys)
+
+
+def _agg_prepare(batch: ColumnBatch, spec: AggSpec) -> Optional[_AggPrep]:
+    """Evaluate keys and agg inputs; None when the shard has no groups."""
     ctx = EvalContext(batch)
     key_arrays: List[np.ndarray] = []
     for _, e in spec.keys:
@@ -287,11 +317,9 @@ def aggregate_produce(batch: ColumnBatch, spec: AggSpec,
             vals = np.asarray(v.vocab, dtype=object)[vals]
         key_arrays.append(vals)
     codes, uniq_keys = _group_codes(key_arrays, batch.n)
-    n_groups = len(uniq_keys)
-    part = AggPartial()
-    if n_groups == 0:
-        return part
-    counts = np.bincount(codes, minlength=n_groups)
+    if not uniq_keys:
+        return None
+    counts = np.bincount(codes, minlength=len(uniq_keys))
 
     vals_list: List[Optional[np.ndarray]] = []
     vocabs: List[Optional[list]] = []
@@ -317,15 +345,28 @@ def aggregate_produce(batch: ColumnBatch, spec: AggSpec,
     # count/sum/sumsq route through the backend's segment aggregation
     # (numpy bincount, or the segment_agg kernel via kernels.ops); order
     # statistics and sketches need per-group row sets and stay on host.
-    rows_by_group: Optional[List[np.ndarray]] = None
-    seg_cache: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+    # One dispatch slot per distinct value column, not per agg.
+    seg_arrays: List[np.ndarray] = []
+    slot_by_id: Dict[int, int] = {}
+    seg_slot: List[Optional[int]] = []
+    for (kind, _, _), arr in zip(spec.aggs, vals_list):
+        if kind in ("sum", "avg", "std_dev"):
+            if id(arr) not in slot_by_id:
+                slot_by_id[id(arr)] = len(seg_arrays)
+                seg_arrays.append(arr)
+            seg_slot.append(slot_by_id[id(arr)])
+        else:
+            seg_slot.append(None)
+    return _AggPrep(codes, uniq_keys, counts, vals_list, vocabs,
+                    seg_arrays, seg_slot)
 
-    def _segment(arr: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-        # one backend dispatch per distinct value column, not per agg
-        if id(arr) not in seg_cache:
-            _, s, s2 = backend.segment_aggregate(codes, arr, n_groups)
-            seg_cache[id(arr)] = (s, s2)
-        return seg_cache[id(arr)]
+
+def _agg_finalize(prep: _AggPrep, spec: AggSpec,
+                  seg_results: List[Tuple[np.ndarray, np.ndarray]]
+                  ) -> AggPartial:
+    """(s, s2) per segment slot + host order stats/sketches → AggPartial."""
+    codes, counts, n_groups = prep.codes, prep.counts, prep.n_groups
+    rows_by_group: Optional[List[np.ndarray]] = None
 
     def _rows() -> List[np.ndarray]:
         nonlocal rows_by_group
@@ -338,11 +379,12 @@ def aggregate_produce(batch: ColumnBatch, spec: AggSpec,
         return rows_by_group
 
     per_agg: List[List[Any]] = []
-    for (kind, name, e), arr, voc in zip(spec.aggs, vals_list, vocabs):
+    for (kind, name, e), arr, voc, slot in zip(spec.aggs, prep.vals_list,
+                                               prep.vocabs, prep.seg_slot):
         if kind == "count":
             per_agg.append([int(c) for c in counts])
         elif kind in ("sum", "avg", "std_dev"):
-            s, s2 = _segment(arr)
+            s, s2 = seg_results[slot]
             if kind == "sum":
                 per_agg.append([float(x) for x in s])
             elif kind == "avg":
@@ -361,9 +403,46 @@ def aggregate_produce(batch: ColumnBatch, spec: AggSpec,
         else:
             raise ValueError(kind)
 
-    for g, k in enumerate(uniq_keys):
+    part = AggPartial()
+    for g, k in enumerate(prep.uniq_keys):
         part.groups[k] = [col[g] for col in per_agg]
     return part
+
+
+def aggregate_produce(batch: ColumnBatch, spec: AggSpec,
+                      backend=None) -> AggPartial:
+    backend = as_backend(backend)
+    prep = _agg_prepare(batch, spec)
+    if prep is None:
+        return AggPartial()
+    seg_results = []
+    for arr in prep.seg_arrays:
+        _, s, s2 = backend.segment_aggregate(prep.codes, arr, prep.n_groups)
+        seg_results.append((s, s2))
+    return _agg_finalize(prep, spec, seg_results)
+
+
+def aggregate_produce_batched(batches: Sequence[ColumnBatch], spec: AggSpec,
+                              backend=None) -> List[AggPartial]:
+    """Per-shard partials for a wave with one segment dispatch per value
+    column across the whole wave (instead of one per shard) — byte-equal
+    to running :func:`aggregate_produce` shard by shard."""
+    backend = as_backend(backend)
+    preps = [_agg_prepare(b, spec) for b in batches]
+    live = [p for p in preps if p is not None]
+    n_slots = len(live[0].seg_arrays) if live else 0
+    seg_by_prep: Dict[int, List[Tuple[np.ndarray, np.ndarray]]] = {
+        id(p): [] for p in live}
+    for slot in range(n_slots):
+        results = backend.segment_aggregate_batched(
+            [p.codes for p in live],
+            [p.seg_arrays[slot] for p in live],
+            [p.n_groups for p in live])
+        for p, (_, s, s2) in zip(live, results):
+            seg_by_prep[id(p)].append((s, s2))
+    return [AggPartial() if p is None
+            else _agg_finalize(p, spec, seg_by_prep[id(p)])
+            for p in preps]
 
 
 def merge_agg_partials(parts: Sequence[AggPartial], spec: AggSpec

@@ -41,13 +41,19 @@ __all__ = ["FDb", "Shard", "build_fdb"]
 class Shard:
     batch: ColumnBatch
     indexes: Dict[Tuple[str, str], object] = dc_field(default_factory=dict)
+    # valid-doc bitmap, built once: a stable array identity lets the jax
+    # backend keep it device-resident across queries (exec.device_cache)
+    _all_bm: Optional[np.ndarray] = dc_field(default=None, repr=False,
+                                             compare=False)
 
     @property
     def n(self) -> int:
         return self.batch.n
 
     def all_bitmap(self) -> np.ndarray:
-        return bitmap_full(self.n)
+        if self._all_bm is None:
+            self._all_bm = bitmap_full(self.n)
+        return self._all_bm
 
     def index(self, path: str, kind: str):
         return self.indexes.get((path, kind))

@@ -18,7 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["bitset_binary", "bitmap_intersect", "DEFAULT_BLOCK_WORDS"]
+__all__ = ["bitset_binary", "bitmap_intersect", "bitmap_intersect_batched",
+           "DEFAULT_BLOCK_WORDS"]
 
 DEFAULT_BLOCK_WORDS = 8 * 512       # one (8, 512) vreg-aligned tile
 
@@ -109,3 +110,55 @@ def bitmap_intersect(stack: jnp.ndarray,
         interpret=interpret,
     )(s2)
     return out.reshape(-1)[:w], cnt.sum()
+
+
+def _intersect_batched_kernel(stack_ref, o_ref, cnt_ref):
+    """One (shard, word-block) grid step: AND-reduce that shard's K probes
+    for the block + popcount."""
+    k = stack_ref.shape[1]
+    acc = stack_ref[0, 0, 0]
+    for i in range(1, k):           # K is small & static (probes per query)
+        acc = acc & stack_ref[0, i, 0]
+    o_ref[...] = acc[None, None]
+    x = acc
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    per_word = (x * jnp.uint32(0x01010101)) >> jnp.uint32(24)
+    cnt_ref[0, 0] = per_word.astype(jnp.int32).sum()
+
+
+@functools.partial(jax.jit, static_argnames=("block_words", "interpret"))
+def bitmap_intersect_batched(stack: jnp.ndarray,
+                             block_words: int = DEFAULT_BLOCK_WORDS,
+                             interpret: bool = False):
+    """Multi-shard AND-reduce [S, K, W] → (bitmaps [S, W], popcounts [S]).
+
+    The wave dimension S stacks shards (ragged word counts zero-padded to
+    the wave max by the caller); one launch covers the whole wave instead
+    of one ``bitmap_intersect`` per shard.  Zero padding is sound for the
+    result: every stack includes the shard's valid-doc mask, whose padding
+    words are zero, so AND keeps the pad region clear.
+    """
+    s, k, w = stack.shape
+    padded = pl.cdiv(w, block_words) * block_words
+    s_p = jnp.zeros((s, k, padded), jnp.uint32).at[:, :, :w].set(stack)
+    s2 = s_p.reshape(s, k, -1, 8, block_words // 8)
+    nblk = s2.shape[2]
+    out, cnt = pl.pallas_call(
+        _intersect_batched_kernel,
+        grid=(s, nblk),
+        in_specs=[pl.BlockSpec((1, k, 1, 8, block_words // 8),
+                               lambda i, j: (i, 0, j, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((1, 1, 8, block_words // 8),
+                         lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, nblk, 8, block_words // 8), jnp.uint32),
+            jax.ShapeDtypeStruct((s, nblk), jnp.int32),
+        ],
+        interpret=interpret,
+    )(s2)
+    return out.reshape(s, -1)[:, :w], cnt.sum(axis=1)

@@ -21,7 +21,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 from ._compat import CompilerParams
 
-__all__ = ["mask_prefix_sum", "compact"]
+__all__ = ["mask_prefix_sum", "compact", "mask_prefix_sum_batched",
+           "compact_batched"]
 
 DEFAULT_BLOCK = 8 * 512
 
@@ -85,3 +86,77 @@ def compact(mask: jnp.ndarray, block: int = DEFAULT_BLOCK,
     idx = jnp.full((n,), -1, jnp.int32)
     idx = idx.at[slot].set(jnp.arange(n, dtype=jnp.int32), mode="drop")
     return idx, count
+
+
+def _scan_batched_kernel(mask_ref, pos_ref, total_ref, carry_ref):
+    """Per-(shard, row-block) scan step; the carry resets at each shard's
+    first block, so one launch scans a whole wave of shards."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        carry_ref[0, 0] = 0
+
+    x = mask_ref[...].astype(jnp.int32)            # (1, 1, 8, L)
+    lane_cs = jnp.cumsum(x, axis=3)                # inclusive along lanes
+    row_tot = lane_cs[..., -1]                     # (1, 1, 8)
+    row_off = jnp.cumsum(row_tot, axis=2) - row_tot
+    carry = carry_ref[0, 0]
+    pos_ref[...] = lane_cs - x + row_off[..., None] + carry    # exclusive
+    block_total = row_tot.sum()
+    carry_ref[0, 0] = carry + block_total
+    total_ref[0, 0] = carry + block_total          # running total per block
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def mask_prefix_sum_batched(masks: jnp.ndarray, block: int = DEFAULT_BLOCK,
+                            interpret: bool = False):
+    """masks [S, N] bool → (exclusive prefix sums [S, N] int32, counts [S]).
+
+    The wave dimension S stacks shards (ragged lengths False-padded to the
+    wave max by the caller); the grid walks (shard, row-block) with the
+    running count carried in SMEM and reset per shard, so the whole wave is
+    one kernel launch.  Grid order is sequential in both dimensions
+    (``arbitrary`` semantics) — the scan-with-carry pattern requires it.
+    """
+    s, n = masks.shape
+    if n == 0 or s == 0:
+        return (jnp.zeros((s, n), jnp.int32), jnp.zeros((s,), jnp.int32))
+    padded = pl.cdiv(n, block) * block
+    m_p = jnp.zeros((s, padded), jnp.bool_).at[:, :n].set(masks)
+    m2 = m_p.reshape(s, -1, 8, block // 8)
+    nblk = m2.shape[1]
+    pos, totals = pl.pallas_call(
+        _scan_batched_kernel,
+        grid=(s, nblk),
+        in_specs=[pl.BlockSpec((1, 1, 8, block // 8),
+                               lambda i, j: (i, j, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((1, 1, 8, block // 8), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(m2.shape, jnp.int32),
+            jax.ShapeDtypeStruct((s, nblk), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((1, 1), jnp.int32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(m2)
+    return pos.reshape(s, -1)[:, :n], totals[:, -1]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def compact_batched(masks: jnp.ndarray, block: int = DEFAULT_BLOCK,
+                    interpret: bool = False):
+    """masks [S, N] → (indices [S, N] int32, -1 padded; counts [S])."""
+    s, n = masks.shape
+    pos, counts = mask_prefix_sum_batched(masks, block=block,
+                                          interpret=interpret)
+    slot = jnp.where(masks, pos, n)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (s, n), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (s, n), 1)
+    idx = jnp.full((s, n), -1, jnp.int32)
+    idx = idx.at[rows, slot].set(cols, mode="drop")
+    return idx, counts

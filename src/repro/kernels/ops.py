@@ -9,11 +9,20 @@
 
 Default: ``pallas`` on TPU backends, ``reference`` elsewhere — override
 with ``REPRO_KERNEL_IMPL`` or per call.
+
+Every public op records one **launch** per call in a process-wide counter
+(:func:`launch_counts` / :func:`reset_launch_counts`), regardless of the
+selected ``impl`` — a call is one logical kernel dispatch, which is what
+the batched execution path amortizes (one ``*_batched`` launch per wave of
+shards instead of one launch per shard).  Tests and benchmarks use the
+counter to assert the ⌈shards/wave⌉ dispatch contract.
 """
 from __future__ import annotations
 
 import os
-from typing import Optional
+import threading
+from collections import Counter
+from typing import Dict, Optional
 
 import jax
 
@@ -24,8 +33,10 @@ from . import ref as _ref
 from . import segment_agg as _seg
 from . import ssm_scan as _ssm
 
-__all__ = ["default_impl", "bitmap_binary", "bitmap_intersect", "compact",
-           "segment_agg", "flash_attention", "ssm_scan"]
+__all__ = ["default_impl", "bitmap_binary", "bitmap_intersect",
+           "bitmap_intersect_batched", "compact", "compact_batched",
+           "segment_agg", "flash_attention", "ssm_scan",
+           "launch_counts", "reset_launch_counts", "record_launch"]
 
 
 def default_impl() -> str:
@@ -42,8 +53,38 @@ def _resolve(impl: Optional[str]) -> str:
     return impl
 
 
+# --------------------------------------------------------------------------
+# Launch counting — engines dispatch from worker threads, hence the lock.
+# --------------------------------------------------------------------------
+
+_LAUNCHES: Counter = Counter()
+_LAUNCH_LOCK = threading.Lock()
+
+
+def record_launch(op: str) -> None:
+    """Count one logical kernel dispatch under ``op``."""
+    with _LAUNCH_LOCK:
+        _LAUNCHES[op] += 1
+
+
+def launch_counts() -> Dict[str, int]:
+    """Snapshot of per-op dispatch counts since the last reset."""
+    with _LAUNCH_LOCK:
+        return dict(_LAUNCHES)
+
+
+def reset_launch_counts() -> None:
+    with _LAUNCH_LOCK:
+        _LAUNCHES.clear()
+
+
+# --------------------------------------------------------------------------
+# Ops
+# --------------------------------------------------------------------------
+
 def bitmap_binary(a, b, op: str = "and", impl: Optional[str] = None):
     impl = _resolve(impl)
+    record_launch("bitmap_binary")
     if impl == "reference":
         return {"and": _ref.bitset_and_ref, "or": _ref.bitset_or_ref,
                 "andnot": _ref.bitset_andnot_ref}[op](a, b)
@@ -53,22 +94,44 @@ def bitmap_binary(a, b, op: str = "and", impl: Optional[str] = None):
 
 def bitmap_intersect(stack, impl: Optional[str] = None):
     impl = _resolve(impl)
+    record_launch("bitmap_intersect")
     if impl == "reference":
         bm = _ref.bitmap_intersect_ref(stack)
         return bm, _ref.popcount_ref(bm)
     return _bitset.bitmap_intersect(stack, interpret=(impl == "interpret"))
 
 
+def bitmap_intersect_batched(stack, impl: Optional[str] = None):
+    """Wave-stacked AND-reduce [S, K, W] → (bitmaps [S, W], counts [S])."""
+    impl = _resolve(impl)
+    record_launch("bitmap_intersect_batched")
+    if impl == "reference":
+        return _ref.bitmap_intersect_batched_ref(stack)
+    return _bitset.bitmap_intersect_batched(stack,
+                                            interpret=(impl == "interpret"))
+
+
 def compact(mask, impl: Optional[str] = None):
     impl = _resolve(impl)
+    record_launch("compact")
     if impl == "reference":
         return _ref.compact_ref(mask)
     return _compact.compact(mask, interpret=(impl == "interpret"))
 
 
+def compact_batched(masks, impl: Optional[str] = None):
+    """Wave-stacked compaction [S, N] → (indices [S, N], counts [S])."""
+    impl = _resolve(impl)
+    record_launch("compact_batched")
+    if impl == "reference":
+        return _ref.compact_batched_ref(masks)
+    return _compact.compact_batched(masks, interpret=(impl == "interpret"))
+
+
 def segment_agg(group_ids, values, num_groups: int,
                 impl: Optional[str] = None):
     impl = _resolve(impl)
+    record_launch("segment_agg")
     if impl == "reference":
         return _ref.segment_agg_ref(group_ids, values, num_groups)
     return _seg.segment_agg(group_ids, values, num_groups,
@@ -79,6 +142,7 @@ def flash_attention(q, k, v, *, causal: bool = True, window=None,
                     softcap=None, scale=None, impl: Optional[str] = None,
                     **block_kw):
     impl = _resolve(impl)
+    record_launch("flash_attention")
     if impl == "reference":
         return _ref.flash_attention_ref(q, k, v, causal=causal,
                                         window=window, softcap=softcap,
@@ -90,6 +154,7 @@ def flash_attention(q, k, v, *, causal: bool = True, window=None,
 
 def ssm_scan(a, bx, impl: Optional[str] = None, **kw):
     impl = _resolve(impl)
+    record_launch("ssm_scan")
     if impl == "reference":
         return _ref.ssm_scan_ref(a, bx)
     return _ssm.ssm_scan(a, bx, interpret=(impl == "interpret"), **kw)

@@ -12,9 +12,10 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["bitset_and_ref", "bitset_or_ref", "bitset_andnot_ref",
-           "popcount_ref", "bitmap_intersect_ref", "compact_ref",
-           "segment_agg_ref", "flash_attention_ref", "ssm_scan_ref",
-           "decode_attention_ref"]
+           "popcount_ref", "bitmap_intersect_ref",
+           "bitmap_intersect_batched_ref", "compact_ref",
+           "compact_batched_ref", "segment_agg_ref", "flash_attention_ref",
+           "ssm_scan_ref", "decode_attention_ref"]
 
 
 # ----------------------------------------------------------------- bitsets
@@ -31,20 +32,32 @@ def bitset_andnot_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     return a & ~b
 
 
-def popcount_ref(a: jnp.ndarray) -> jnp.ndarray:
-    """Total set bits over a uint32 word array → int32 scalar."""
+def _popcount_words(a: jnp.ndarray) -> jnp.ndarray:
+    """Per-word SWAR popcount of a uint32 array → int32, same shape."""
     x = a.astype(jnp.uint32)
     x = x - ((x >> 1) & jnp.uint32(0x55555555))
     x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
     x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
-    per_word = (x * jnp.uint32(0x01010101)) >> jnp.uint32(24)
-    return per_word.astype(jnp.int32).sum()
+    return ((x * jnp.uint32(0x01010101)) >> jnp.uint32(24)) \
+        .astype(jnp.int32)
+
+
+def popcount_ref(a: jnp.ndarray) -> jnp.ndarray:
+    """Total set bits over a uint32 word array → int32 scalar."""
+    return _popcount_words(a).sum()
 
 
 def bitmap_intersect_ref(stack: jnp.ndarray) -> jnp.ndarray:
     """AND-reduce K probe bitmaps [K, W] → [W] (the find() hot loop)."""
     return jax.lax.reduce(stack, jnp.uint32(0xFFFFFFFF),
                           jax.lax.bitwise_and, dimensions=(0,))
+
+
+def bitmap_intersect_batched_ref(stack: jnp.ndarray):
+    """Wave-stacked AND-reduce [S, K, W] → (bitmaps [S, W], counts [S])."""
+    bm = jax.lax.reduce(stack, jnp.uint32(0xFFFFFFFF),
+                        jax.lax.bitwise_and, dimensions=(1,))
+    return bm, _popcount_words(bm).sum(axis=1)
 
 
 # ------------------------------------------------------------- compaction
@@ -63,6 +76,19 @@ def compact_ref(mask: jnp.ndarray):
     idx = jnp.full((n,), -1, dtype=jnp.int32)
     idx = idx.at[pos].set(src, mode="drop")
     return idx, count.astype(jnp.int32)
+
+
+def compact_batched_ref(masks: jnp.ndarray):
+    """masks [S, N] bool → (indices [S, N] int32, -1 padded; counts [S])."""
+    s, n = masks.shape
+    mask_i = masks.astype(jnp.int32)
+    counts = mask_i.sum(axis=1).astype(jnp.int32)
+    slot = jnp.where(masks, jnp.cumsum(mask_i, axis=1) - 1, n)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (s, n), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (s, n), 1)
+    idx = jnp.full((s, n), -1, dtype=jnp.int32)
+    idx = idx.at[rows, slot].set(cols, mode="drop")
+    return idx, counts
 
 
 # -------------------------------------------------------- group-by partials

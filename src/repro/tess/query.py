@@ -21,12 +21,9 @@ pruning-ratio evidence the benchmarks track.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
-import numpy as np
-
-from ..core.exprs import (EvalContext, Expr, ExprProxy, FieldRef,
-                          InSpaceTime, eval_expr)
+from ..core.exprs import Expr, ExprProxy, FieldRef, InSpaceTime
 from ..geo.areatree import AreaTree
 
 __all__ = ["Tesseract", "tesseract_stats"]
@@ -69,40 +66,48 @@ class Tesseract:
                 f"{len(self.constraints)} constraints)")
 
 
-def tesseract_stats(db, tess: Tesseract, backend=None) -> Dict[str, Any]:
+def tesseract_stats(db, tess: Tesseract, backend=None,
+                    wave: Optional[int] = None) -> Dict[str, Any]:
     """Per-shard index-probe candidates vs. exact-refine survivors.
 
-    Runs the same per-shard hot loop the engines run — one stacked
-    ``intersect_bitmaps`` over all constraint postings, then the exact
-    refine behind ``compact_mask`` — and reports the pruning ratio
-    (fraction of docs the index never touched).
+    Runs the same hot loop the engines run, through the batched seam: per
+    wave of shards, one stacked ``probe_shards`` launch ANDs every
+    constraint's postings bitmaps, one ``compact_masks`` launch turns the
+    surviving bitmaps into candidate ids, and a second ``compact_masks``
+    launch compacts the exact point-in-cover × time-window refine masks.
+    Reports the pruning ratio (fraction of docs the index never touched).
     """
     from ..exec.backend import as_backend     # lazy: exec imports core
+    from ..exec.batched import partition_waves, wave_size
+    from ..exec.processors import predicate_mask
+    from ..fdb.index import mask_from_bitmap
     be = as_backend(backend)
+    be.prime_fdb(db)
     pred: Expr = tess.expr()._expr
     per_shard: List[Dict[str, int]] = []
     docs = candidates = refined = 0
-    for sid, shard in enumerate(db.shards):
-        idx = shard.index(tess.field, "spacetime")
-        if idx is None:
+    for sids in partition_waves(range(db.num_shards), wave_size(wave, be)):
+        shards = [db.shards[sid] for sid in sids]
+        idxs = [sh.index(tess.field, "spacetime") for sh in shards]
+        if any(ix is None for ix in idxs):
             raise RuntimeError(f"{db.name}.{tess.field} has no spacetime "
                                f"index")
-        bms = [idx.lookup(region, t0, t1)
-               for region, t0, t1 in tess.constraints]
-        bm = be.intersect_bitmaps(shard.all_bitmap(), bms)
-        ids = be.select_ids(bm, shard.n)
-        sub = shard.batch.gather(ids)
-        v = eval_expr(pred, EvalContext(sub))
-        mask = np.asarray(v.values, dtype=bool)
-        if mask.ndim == 0:
-            mask = np.broadcast_to(mask, (sub.n,))
-        keep = be.compact_mask(mask)
-        per_shard.append({"shard": sid, "docs": shard.n,
-                          "candidates": int(ids.size),
-                          "refined": int(keep.size)})
-        docs += shard.n
-        candidates += int(ids.size)
-        refined += int(keep.size)
+        bms = be.probe_shards(
+            [sh.all_bitmap() for sh in shards],
+            [[ix.lookup(region, t0, t1)
+              for region, t0, t1 in tess.constraints] for ix in idxs])
+        ids_list = be.compact_masks(
+            [mask_from_bitmap(bm, sh.n) for bm, sh in zip(bms, shards)])
+        subs = [sh.batch.gather(ids) for sh, ids in zip(shards, ids_list)]
+        keeps = be.compact_masks([predicate_mask(sub, pred)
+                                  for sub in subs])
+        for sid, sh, ids, keep in zip(sids, shards, ids_list, keeps):
+            per_shard.append({"shard": sid, "docs": sh.n,
+                              "candidates": int(ids.size),
+                              "refined": int(keep.size)})
+            docs += sh.n
+            candidates += int(ids.size)
+            refined += int(keep.size)
     return {"docs": docs, "candidates": candidates, "refined": refined,
             "pruning": 1.0 - (candidates / docs if docs else 0.0),
             "per_shard": per_shard}

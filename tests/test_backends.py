@@ -161,6 +161,29 @@ def test_session_backend_option(catalog):
     assert_identical(res.batch, want.batch)
 
 
+def test_backend_selection_precedence(catalog, monkeypatch):
+    """engine arg > Session(backend=) > $REPRO_EXEC_BACKEND."""
+    monkeypatch.setenv("REPRO_EXEC_BACKEND", "jax")
+    # engine arg beats the env default
+    eng = AdHocEngine(catalog, backend="numpy")
+    assert isinstance(eng.backend, NumpyBackend)
+    # Session(backend=) beats the env default
+    s = Session(backend="numpy", catalog=catalog)
+    assert isinstance(s.engine.backend, NumpyBackend)
+    # an explicit engine beats Session(backend=): the engine keeps its own
+    s2 = Session(engine=eng, backend="jax")
+    assert s2.engine is eng
+    assert isinstance(s2.engine.backend, NumpyBackend)
+    # env decides when neither engine nor session pin a backend
+    assert isinstance(AdHocEngine(catalog).backend, JaxBackend)
+    monkeypatch.setenv("REPRO_EXEC_BACKEND", "numpy")
+    assert isinstance(AdHocEngine(catalog).backend, NumpyBackend)
+    # ExecBackend instances pass through untouched at every level
+    inst = NumpyBackend()
+    assert AdHocEngine(catalog, backend=inst).backend is inst
+    assert Session(backend=inst, catalog=catalog).engine.backend is inst
+
+
 def test_custom_backend_registration():
     from repro.exec import register_backend
 

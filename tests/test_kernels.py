@@ -33,6 +33,21 @@ def test_bitmap_intersect(k, w):
     assert int(cnt) == int(cnt_r)
 
 
+@pytest.mark.parametrize("s,k,w", [(1, 1, 64), (3, 2, 1000), (6, 4, 4097),
+                                   (2, 1, 513)])
+def test_bitmap_intersect_batched(s, k, w):
+    """Wave-stacked AND: interpret ≡ reference ≡ per-shard intersect."""
+    stack = jnp.asarray(RNG.integers(0, 2**32, (s, k, w), dtype=np.uint32))
+    bm_i, cnt_i = ops.bitmap_intersect_batched(stack, impl="interpret")
+    bm_r, cnt_r = ops.bitmap_intersect_batched(stack, impl="reference")
+    assert (np.asarray(bm_i) == np.asarray(bm_r)).all()
+    assert (np.asarray(cnt_i) == np.asarray(cnt_r)).all()
+    for i in range(s):
+        bm1, cnt1 = ops.bitmap_intersect(stack[i], impl="reference")
+        assert (np.asarray(bm1) == np.asarray(bm_r)[i]).all()
+        assert int(cnt1) == int(np.asarray(cnt_r)[i])
+
+
 # ------------------------------------------------------------ compact
 
 @pytest.mark.parametrize("n", [8, 100, 4096, 9_999])
@@ -65,6 +80,31 @@ def test_compact_property(n, seed):
     idx = np.asarray(idx)
     # indices are exactly the set positions, ascending
     assert (idx[:int(cnt)] == np.nonzero(m)[0]).all()
+
+
+@pytest.mark.parametrize("s,n", [(1, 8), (4, 317), (3, 9000), (2, 4096)])
+@pytest.mark.parametrize("density", [0.0, 0.35, 1.0])
+def test_compact_batched(s, n, density):
+    """Wave-stacked compaction: the carry resets per shard, so each row
+    compacts exactly like an independent single-shard launch."""
+    m = jnp.asarray(RNG.random((s, n)) < density)
+    gi, gc = ops.compact_batched(m, impl="interpret")
+    ri, rc = ops.compact_batched(m, impl="reference")
+    assert (np.asarray(gi) == np.asarray(ri)).all()
+    assert (np.asarray(gc) == np.asarray(rc)).all()
+    for i in range(s):
+        want = np.nonzero(np.asarray(m)[i])[0]
+        cnt = int(np.asarray(gc)[i])
+        assert cnt == want.size
+        assert (np.asarray(gi)[i][:cnt] == want).all()
+        assert (np.asarray(gi)[i][cnt:] == -1).all()
+
+
+@pytest.mark.parametrize("impl", ["interpret", "reference"])
+def test_compact_batched_empty(impl):
+    idx, cnt = ops.compact_batched(jnp.zeros((3, 0), jnp.bool_), impl=impl)
+    assert np.asarray(idx).shape == (3, 0)
+    assert (np.asarray(cnt) == 0).all()
 
 
 # --------------------------------------------------------- segment_agg
