@@ -24,7 +24,7 @@ ci:                   ## CI leg: tier-1 under $REPRO_EXEC_BACKEND (numpy|jax)
 	$(PY) -m pytest -x -q
 
 ci-kernels:           ## CI extra: interpret-vs-reference kernel-body sweeps
-	$(PY) -m pytest -x -q tests/test_kernels.py
+	$(PY) -m pytest -x -q tests/test_kernels.py tests/test_refine.py
 
 ci-bench:             ## CI smoke: tiny backends suite, exits non-zero on parity fail
 	$(PY) -m benchmarks.run --only backends --json --scale 0.05

@@ -7,13 +7,20 @@ For each trip query the report shows
     trips the per-shard ``spacetime`` postings admit at (cell × bucket)
     granularity vs. how many survive the exact point-in-cover ×
     time-window pass — and the resulting pruning ratio,
-  * a byte-level parity verdict between the backends' trip-id sets.
+  * a byte-level parity verdict between the backends' trip-id sets *and*
+    between their per-shard candidate/refined counts (the
+    ``refine_tracks`` op parity gate), and
+  * the refine launch count on the jax path: the exact pass is
+    ⌈shards/wave⌉ fused ``refine_tracks_batched`` device launches per
+    query — the per-shard host refine is gone from the hot loop (zero
+    ``refine_tracks`` single-shard dispatches).
 
 The pruning ratio is the subsystem's reason to exist: for selective
 regions the index must prune ≥ 90 % of trips before the exact pass.
 """
 from __future__ import annotations
 
+import math
 import time
 
 import numpy as np
@@ -21,6 +28,7 @@ import numpy as np
 from repro.data.synthetic import generate_world
 from repro.exec import AdHocEngine, Catalog
 from repro.fdb import build_fdb
+from repro.kernels import ops
 from repro.tess import tesseract_stats
 
 from .queries import TRIP_QUERIES, q_tesseract, tesseract_for
@@ -57,11 +65,25 @@ def run(scale: float = 0.5, print_fn=print, raise_on_mismatch: bool = True):
             results[bname], times[bname] = res, ms
         ids = {b: np.sort(r.batch["id"].values)
                for b, r in results.items()}
+        # refine-op byte parity: identical per-shard candidate/refined
+        # counts across backends (kernel mask ≡ numpy oracle mask)
+        stats = tesseract_stats(db, tesseract_for(legs), backend="numpy")
+        stats_j = tesseract_stats(db, tesseract_for(legs), backend="jax")
+        refine_parity = stats["per_shard"] == stats_j["per_shard"]
+        # launch evidence: the exact pass is ⌈shards/wave⌉ fused device
+        # launches per query — no per-shard host refine remains
+        ops.reset_launch_counts()
+        engines["jax"].collect(flow)
+        lc = ops.launch_counts()
+        waves = math.ceil(db.num_shards / engines["jax"].wave)
+        refine_launches = lc.get("refine_tracks_batched", 0)
+        fused = (refine_launches == waves
+                 and lc.get("refine_tracks", 0) == 0)
         parity = bool(np.array_equal(ids["numpy"], ids["jax"])) \
             and results["numpy"].profile.rows_selected \
-            == results["jax"].profile.rows_selected
+            == results["jax"].profile.rows_selected \
+            and refine_parity and fused
         all_parity &= parity
-        stats = tesseract_stats(db, tesseract_for(legs))
         speedup = times["numpy"] / max(times["jax"], 1e-9)
         rows.append({
             "name": f"tesseract_{qname}",
@@ -74,6 +96,7 @@ def run(scale: float = 0.5, print_fn=print, raise_on_mismatch: bool = True):
                         f"candidates={stats['candidates']} "
                         f"refined={stats['refined']} "
                         f"pruning={stats['pruning']:.3f} "
+                        f"refine_launches={refine_launches}/{waves}waves "
                         f"parity={'OK' if parity else 'MISMATCH'}")})
         print_fn(f"  {qname}: {rows[-1]['derived']}")
         if stats["pruning"] < 0.9:

@@ -25,8 +25,8 @@ from .flow import (AggregateOp, DistinctOp, FilterOp, FindOp, Flow,
                    FlattenOp, JoinOp, LimitOp, MapOp, ModelApplyOp, Op,
                    SampleOp, SortOp, SubFlowOp)
 
-__all__ = ["IndexProbe", "Plan", "plan_flow", "split_find_pred",
-           "probe_shard"]
+__all__ = ["IndexProbe", "RefineSpec", "Plan", "plan_flow",
+           "split_find_pred", "probe_shard"]
 
 
 # --------------------------------------------------------------------------
@@ -40,7 +40,9 @@ class IndexProbe:
     args: tuple             # lookup arguments
 
     #: kinds whose postings are a *superset* of the predicate (cell/bucket
-    #: granularity) — the conjunct stays in the residual for exact refine
+    #: granularity) — the conjunct additionally compiles to a
+    #: :class:`RefineSpec`, the exact device-side pass behind the
+    #: backend's ``refine_tracks`` op
     REFINE_KINDS = ("spacetime",)
 
     @property
@@ -168,9 +170,24 @@ def _indexable_or(e: Expr, schema: Schema) -> Optional[IndexProbe]:
     return IndexProbe(path, "tag", (tuple(values),))
 
 
+@dataclass
+class RefineSpec:
+    """Exact-refine stage over one ragged track field.
+
+    AND of ``(region, t0, t1)`` space-time constraints, evaluated by the
+    execution backend's ``refine_tracks`` / ``refine_tracks_batched`` op
+    directly against the shard's resident CSR track buffers (one fused
+    device pass), instead of a host residual-filter evaluation.
+    """
+    path: str
+    constraints: List[Tuple[Any, float, float]]
+
+
 def split_find_pred(pred: Expr, schema: Schema
-                    ) -> Tuple[List[IndexProbe], Optional[Expr]]:
-    """AND-split a find() predicate into index probes + residual filter.
+                    ) -> Tuple[List[IndexProbe], List[RefineSpec],
+                               Optional[Expr]]:
+    """AND-split a find() predicate into index probes + track refines +
+    residual filter.
 
     Conjuncts that match an index become probes (bitmap AND); everything
     else is evaluated as a post-read filter.  Two refinements:
@@ -178,10 +195,12 @@ def split_find_pred(pred: Expr, schema: Schema
       * a disjunction of tag lookups on one field (``IN``/``==``) compiles
         to a single ``TagIndex.lookup_any`` bitmap-OR probe instead of
         falling back to residual filtering,
-      * ``spacetime`` probes (Tesseract constraints) are *conservative* —
-        postings live at (cell × time-bucket) granularity — so the conjunct
-        additionally stays in the residual for the exact point-in-cover ×
-        time-window refine.
+      * ``InSpaceTime`` conjuncts (Tesseract constraints) compile to
+        :class:`RefineSpec`\\ s — grouped per track field, evaluated exactly
+        behind the backend's ``refine_tracks`` op — plus a *conservative*
+        ``spacetime`` probe when the field is indexed (postings live at
+        (cell × time-bucket) granularity).  They never enter the residual,
+        so the exact pass runs on device instead of the host evaluator.
     """
     conjuncts: List[Expr] = []
 
@@ -194,19 +213,27 @@ def split_find_pred(pred: Expr, schema: Schema
 
     walk(pred)
     probes: List[IndexProbe] = []
+    refine_by_path: Dict[str, List[Tuple[Any, float, float]]] = {}
     residual: List[Expr] = []
     for c in conjuncts:
+        if isinstance(c, InSpaceTime) and isinstance(c.field, FieldRef):
+            p = _indexable(c, schema)
+            if p is not None:
+                probes.append(p)
+            refine_by_path.setdefault(c.field.path, []).append(
+                (c.region, c.t0, c.t1))
+            continue
         p = _indexable(c, schema) or _indexable_or(c, schema)
         if p is not None:
             probes.append(p)
-            if p.needs_refine:
-                residual.append(c)
         else:
             residual.append(c)
     res: Optional[Expr] = None
     for r in residual:
         res = r if res is None else BinOp("and", res, r)
-    return probes, res
+    refines = [RefineSpec(path, cs)
+               for path, cs in refine_by_path.items()]
+    return probes, refines, res
 
 
 def probe_shard(shard: Shard, probes: Sequence[IndexProbe],
@@ -233,6 +260,7 @@ class Plan:
     shard_ids: List[int]             # after sampling
     sample_fraction: float
     probes: List[IndexProbe]
+    refines: List[RefineSpec]        # exact track refine behind the seam
     residual: Optional[Expr]
     source_paths: List[str]          # minimal viable read set
     server_ops: List[Op]             # record-parallel per shard
@@ -246,6 +274,9 @@ class Plan:
                  f"  read columns: {self.source_paths}"]
         for p in self.probes:
             lines.append(f"  index probe: {p.kind}({p.path})")
+        for r in self.refines:
+            lines.append(f"  track refine: {r.path} "
+                         f"[{len(r.constraints)} constraints]")
         if self.residual is not None:
             lines.append("  residual filter: yes")
         lines.append(f"  server ops: "
@@ -275,11 +306,12 @@ def plan_flow(flow: Flow, catalog) -> Plan:
     n_keep = max(1, int(round(num_shards * fraction)))
     shard_ids = list(range(n_keep))            # round-robin ingest ⇒ unbiased
 
-    # -- find(): split into probes + residual
+    # -- find(): split into probes + track refines + residual
     probes: List[IndexProbe] = []
+    refines: List[RefineSpec] = []
     residual: Optional[Expr] = None
     if ops and isinstance(ops[0], FindOp):
-        probes, residual = split_find_pred(ops[0].pred, schema)
+        probes, refines, residual = split_find_pred(ops[0].pred, schema)
         ops = ops[1:]
     elif any(isinstance(o, FindOp) for o in ops):
         raise ValueError("find() must be the first operator on a source")
@@ -344,5 +376,5 @@ def plan_flow(flow: Flow, catalog) -> Plan:
                           and schema.field(x).virtual is None)
 
     out_schema = flow.schema_after(catalog)
-    return Plan(flow.source, schema, shard_ids, fraction, probes, residual,
-                source_paths, server_ops, mixer_ops, out_schema)
+    return Plan(flow.source, schema, shard_ids, fraction, probes, refines,
+                residual, source_paths, server_ops, mixer_ops, out_schema)

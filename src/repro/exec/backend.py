@@ -35,11 +35,21 @@ group codes into one ``segment_agg``), while the numpy base-class
 implementations loop shard-by-shard over the single-shard primitives —
 the loop-over-shards oracle the batched path must match byte-for-byte.
 
+**Ragged track refine.**  The exact Tesseract pass (point-in-cover ×
+time-window over ragged ``(values, row_splits)`` tracks) is the fourth
+op pair on the seam: ``refine_tracks`` / ``refine_tracks_batched`` emit
+the per-doc hit mask that feeds ``compact_masks``.  The numpy base class
+is the vectorized host oracle (:mod:`repro.exec.refine`); the jax backend
+launches the Pallas ``refine`` kernel over packed integer point buffers —
+one fused launch per wave — so the last big host stage of the Tesseract
+hot loop runs behind the seam too.
+
 The jax backend additionally keeps stable per-FDb buffers (column values,
-valid-doc bitmaps, spacetime postings) device-resident across queries —
-``prime_fdb`` / :mod:`repro.exec.device_cache` — so the selective column
-read (``gather_columns``) pulls from resident buffers instead of
-re-uploading columns per query.
+valid-doc bitmaps, spacetime postings, packed track points) device-resident
+across queries — ``prime_fdb`` / :mod:`repro.exec.device_cache` — so the
+selective column read (``gather_columns``) pulls from resident buffers
+instead of re-uploading columns per query; repeated columns use a
+device-side CSR spans-concatenate gather.
 
 Future scaling PRs (sharded device meshes, async prefetch, GPU lowering)
 plug in here: ``register_backend`` a new implementation and every engine
@@ -54,6 +64,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from ..fdb.index import (bitmap_stack, ids_from_bitmap, mask_from_bitmap)
+from .refine import pack_constraints, pack_track_points, refine_tracks_host
 
 __all__ = ["ExecBackend", "NumpyBackend", "JaxBackend", "register_backend",
            "backend_names", "get_backend", "as_backend"]
@@ -120,6 +131,33 @@ class ExecBackend:
         """Per-shard (count, sum, sumsq) over shard-local group codes."""
         return [self.segment_aggregate(c, v, g)
                 for c, v, g in zip(codes, values, num_groups)]
+
+    # ------------------------------------------------------- track refine
+    def refine_tracks(self, batch, path: str, constraints,
+                      candidates: Optional[np.ndarray] = None) -> np.ndarray:
+        """Exact Tesseract refine over the ragged track at ``path``:
+        per-doc bool mask [batch.n], True iff for *every* ``(region, t0,
+        t1)`` constraint some track point lies inside the region's cover
+        during the window.  ``candidates`` (bool mask) restricts the docs
+        considered — the result equals ``full_refine & candidates`` bit
+        for bit, and feeds ``compact_masks`` directly.  Host reference:
+        vectorized numpy over the shard's CSR columns."""
+        lat = batch[path + ".lat"]
+        lng = batch[path + ".lng"]
+        tt = batch[path + ".t"]
+        return refine_tracks_host(lat.values, lng.values, tt.values,
+                                  lat.row_splits, batch.n,
+                                  list(constraints), candidates)
+
+    def refine_tracks_batched(self, batches, path: str, constraints,
+                              candidates_list=None) -> List[np.ndarray]:
+        """Per-shard refine masks for one wave — the loop-over-shards
+        oracle the batched overrides must match byte-for-byte."""
+        batches = list(batches)
+        if candidates_list is None:
+            candidates_list = [None] * len(batches)
+        return [self.refine_tracks(b, path, constraints, cand)
+                for b, cand in zip(batches, candidates_list)]
 
     def gather_columns(self, batch, paths: Sequence[str],
                        ids: np.ndarray):
@@ -196,6 +234,11 @@ class JaxBackend(ExecBackend):
         # once every FDb that primed it is gone.
         self._primed_fdbs: weakref.WeakSet = weakref.WeakSet()
         self._primed_refs: Dict[int, int] = {}
+        # id(track lat values) → (lat values pin, pts [4, P], rows [P]):
+        # the packed integer form the refine kernel consumes, computed
+        # once per shard at prime time (see exec.refine.pack_track_points)
+        self._track_packs: Dict[int, Tuple[np.ndarray, np.ndarray,
+                                           np.ndarray]] = {}
 
     def _impl(self) -> str:
         return self.impl or self._ops.default_impl()
@@ -332,6 +375,7 @@ class JaxBackend(ExecBackend):
             if n <= 0:
                 self._primed_refs.pop(key, None)
                 self.device_cache.drop((key,))
+                self._track_packs.pop(key, None)
             else:
                 self._primed_refs[key] = n
 
@@ -350,10 +394,16 @@ class JaxBackend(ExecBackend):
                 primed.append(col.values)
                 if col.row_splits is not None:
                     primed.append(col.row_splits)
-            for (_, kind), idx in shard.indexes.items():
+            for (path, kind), idx in shard.indexes.items():
                 if kind == "spacetime":
                     primed.extend((idx.keys, idx.splits, idx.doc_ids,
                                    idx.t_min, idx.t_max))
+                    # packed refine-kernel form of the ragged track —
+                    # stable per shard, so pack once and keep resident
+                    pts, rows = self._track_pack(shard.batch, path,
+                                                 pin=True)
+                    if pts is not None:
+                        primed.extend((pts, rows))
         keys = set()
         for arr in primed:
             self.device_cache.put(arr)
@@ -364,26 +414,151 @@ class JaxBackend(ExecBackend):
         weakref.finalize(db, self._release_primed, tuple(keys))
         return len(self.device_cache) - before
 
+    # --------------------------------------------------------- track refine
+    def _track_pack(self, batch, path: str, pin: bool = False):
+        """(pts, rows) packed refine form for ``batch``'s track at
+        ``path`` — cached per shard by the lat buffer's identity.
+
+        Caching pins the source array, so entries are only inserted when
+        their release is guaranteed: at ``prime_fdb`` time (``pin=True``)
+        or when the buffer already belongs to a primed FDb — both paths
+        are dropped by the per-FDb finalizer.  Packs for never-primed
+        batches are computed per call instead of leaking forever."""
+        lat_path = path + ".lat"
+        if lat_path not in batch.columns:
+            return None, None
+        lat = batch[lat_path]
+        hit = self._track_packs.get(id(lat.values))
+        if hit is not None:
+            return hit[1], hit[2]
+        pts, rows = pack_track_points(lat.values, batch[path + ".lng"].values,
+                                      batch[path + ".t"].values,
+                                      lat.row_splits)
+        if pin or id(lat.values) in self._primed_refs:
+            self._track_packs[id(lat.values)] = (lat.values, pts, rows)
+        return pts, rows
+
+    def _dev(self, arr: np.ndarray):
+        """Device buffer for ``arr`` (resident when primed, else upload)."""
+        dev = self.device_cache.get(arr)
+        return dev if dev is not None else self._jnp.asarray(arr)
+
+    def refine_tracks(self, batch, path, constraints,
+                      candidates=None) -> np.ndarray:
+        """One ``refine_tracks`` kernel launch over the full shard track
+        (device-resident when primed), AND-combined with ``candidates`` on
+        the host — byte-equal to the restricted numpy oracle because the
+        per-doc verdict is independent of other docs."""
+        constraints = list(constraints)
+        if not constraints or len(constraints) > 30 or batch.n == 0:
+            # >30 constraints would overflow the kernel's int32 bitset
+            return super().refine_tracks(batch, path, constraints,
+                                         candidates)
+        pts, rows = self._track_pack(batch, path)
+        if pts is None:
+            return super().refine_tracks(batch, path, constraints,
+                                         candidates)
+        cov = pack_constraints(constraints)
+        mask = np.array(self._ops.refine_tracks(
+            self._dev(pts), self._dev(rows), self._jnp.asarray(cov),
+            batch.n, impl=self._impl()), dtype=bool)
+        if candidates is not None:
+            mask &= np.asarray(candidates, dtype=bool)
+        return mask
+
+    def refine_tracks_batched(self, batches, path, constraints,
+                              candidates_list=None):
+        """One ``refine_tracks_batched`` launch for the whole wave: the
+        shards' packed point buffers are stacked (device-side when
+        resident) and every shard shares the query's constraint table.
+        Ragged point/doc counts are padded with never-matching rows."""
+        batches = list(batches)
+        constraints = list(constraints)
+        if candidates_list is None:
+            candidates_list = [None] * len(batches)
+        if not batches:
+            return []
+        if not constraints or len(constraints) > 30:
+            return super().refine_tracks_batched(batches, path, constraints,
+                                                 candidates_list)
+        packs = [self._track_pack(b, path) for b in batches]
+        if any(pts is None for pts, _ in packs):
+            return super().refine_tracks_batched(batches, path, constraints,
+                                                 candidates_list)
+        ns = [b.n for b in batches]
+        n_max = max(ns)
+        p_max = max(pts.shape[1] for pts, _ in packs)
+        if n_max == 0 or p_max == 0:
+            masks = [np.zeros(n, dtype=bool) for n in ns]
+        else:
+            jnp = self._jnp
+            # pad each shard's resident buffers to the wave max, then one
+            # stack — O(S·P_max) total copy (no per-shard full-stack copy)
+            pts_pad, rows_pad = [], []
+            for pts, rows in packs:
+                p = pts.shape[1]
+                dp, dr = self._dev(pts), self._dev(rows)
+                if p < p_max:
+                    dp = jnp.zeros((4, p_max), jnp.uint32).at[:, :p].set(dp)
+                    dr = jnp.full((p_max,), -1, jnp.int32).at[:p].set(dr)
+                pts_pad.append(dp)
+                rows_pad.append(dr)
+            pts_stack = jnp.stack(pts_pad)
+            rows_stack = jnp.stack(rows_pad)
+            cov = pack_constraints(constraints)
+            out = np.asarray(self._ops.refine_tracks_batched(
+                pts_stack, rows_stack, self._jnp.asarray(cov), n_max,
+                impl=self._impl()), dtype=bool)
+            masks = [out[i, :n].copy() for i, n in enumerate(ns)]
+        for m, cand in zip(masks, candidates_list):
+            if cand is not None:
+                m &= np.asarray(cand, dtype=bool)
+        return masks
+
     def gather_columns(self, batch, paths, ids):
-        """Selective read: dense columns gather from device-resident
-        buffers when primed (repeated/unprimed columns fall back to the
-        host gather — identical values either way)."""
+        """Selective read from device-resident buffers when primed: dense
+        columns gather directly; repeated columns run the device-side
+        ragged gather (CSR spans-concatenate over the resident value
+        buffer, new row_splits built host-side from the shard's splits).
+        Unprimed columns fall back to the host gather — identical values
+        either way."""
         from ..fdb.columnar import Column, ColumnBatch
         sub = batch.select_paths(list(paths))
         ids = np.asarray(ids, dtype=np.int64)
         cols = {}
         dev_ids = None
         for p, c in sub.columns.items():
-            dev = None if c.row_splits is not None \
-                else self.device_cache.get(c.values)
+            dev = self.device_cache.get(c.values)
             if dev is None:
                 cols[p] = c.gather(ids)
                 continue
             with self._jax.experimental.enable_x64():
-                if dev_ids is None:
-                    dev_ids = self._jnp.asarray(ids)
-                vals = np.asarray(dev[dev_ids])
-            cols[p] = Column(vals, None, c.vocab)
+                if c.row_splits is None:
+                    if dev_ids is None:
+                        dev_ids = self._jnp.asarray(ids)
+                    vals = np.asarray(dev[dev_ids])
+                    cols[p] = Column(vals, None, c.vocab)
+                    continue
+                # device-side ragged gather: only the per-doc spans (one
+                # entry per selected doc) go host→device; the O(points)
+                # spans-concatenate index build and value gather run on
+                # device against the resident CSR value buffer
+                starts = c.row_splits[ids]
+                ends = c.row_splits[ids + 1]
+                new_splits = np.zeros(ids.size + 1, dtype=np.int64)
+                np.cumsum(ends - starts, out=new_splits[1:])
+                total = int(new_splits[-1])
+                if total == 0:
+                    vals = c.values[:0].copy()
+                else:
+                    jnp = self._jnp
+                    splits_d = jnp.asarray(new_splits)
+                    pos = jnp.arange(total, dtype=jnp.int64)
+                    row = jnp.searchsorted(splits_d, pos,
+                                           side="right") - 1
+                    flat = jnp.asarray(starts)[row] + pos - splits_d[row]
+                    vals = np.asarray(dev[flat])
+                cols[p] = Column(vals, new_splits, c.vocab)
         return ColumnBatch(sub.schema, cols, ids.size)
 
 

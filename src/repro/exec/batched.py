@@ -6,14 +6,17 @@ dominant scaling cliff once shard counts reach the hundreds the paper runs
 wave through the backend's batched ops, so a wave costs:
 
   * one ``probe_shards`` launch       (stacked bitmap AND + popcount),
+  * one ``refine_tracks_batched`` launch per track-refine spec (the exact
+    Tesseract point-in-cover × time-window pass, fused on device),
   * one ``compact_masks`` launch      (stacked selection → doc ids),
-  * one ``compact_masks`` launch      for the residual refine (if any),
+  * one ``compact_masks`` launch      for the residual filter (if any),
   * one ``segment_aggregate_batched`` launch per aggregated value column,
 
 instead of the same set *per shard* — ⌈shards/wave⌉ launches per primitive
-per query (asserted by ``tests/test_batched.py`` via the kernel launch
-counter).  The numpy backend's batched ops loop shard-by-shard, so the
-wave runner is byte-identical to the per-shard path on both backends.
+per query (asserted by ``tests/test_batched.py`` / ``tests/test_refine.py``
+via the kernel launch counter).  The numpy backend's batched ops loop
+shard-by-shard, so the wave runner is byte-identical to the per-shard path
+on both backends.
 
 Engines schedule waves onto their worker pools; shards whose fault check
 trips at wave start are returned to the caller for the engine's per-shard
@@ -94,29 +97,37 @@ def run_wave_task(db: FDb, plan: Plan, sids: Sequence[int],
 
     t0 = time.perf_counter()
     shards = [db.shards[sid] for sid in live]
-    # ---- stacked index probe + selection: one launch each per wave
+    # ---- stacked index probe: one launch per wave
     bms = backend.probe_shards(
         [sh.all_bitmap() for sh in shards],
         [[p.run(sh) for p in plan.probes] for sh in shards])
-    ids_list = backend.compact_masks(
-        [mask_from_bitmap(bm, sh.n) for bm, sh in zip(bms, shards)])
+    masks = [mask_from_bitmap(bm, sh.n) for bm, sh in zip(bms, shards)]
+    # rows_selected reports the *index-selected* candidates (pre-refine),
+    # matching the per-shard path and tesseract_stats' candidate counts
+    n_cands = [int(m.sum()) for m in masks]
+    # ---- exact track refine: one fused device launch per wave per spec,
+    # emitting per-doc hit masks that feed the selection compact below
+    for rf in plan.refines:
+        masks = backend.refine_tracks_batched(
+            [sh.batch for sh in shards], rf.path, rf.constraints, masks)
+    ids_list = backend.compact_masks(masks)
     t1 = time.perf_counter()
 
     # ---- selective column read (device-resident buffers when primed)
     partials: List[ShardPartial] = []
     batches = []
-    for sid, sh, ids in zip(live, shards, ids_list):
+    for sid, sh, ids, n_cand in zip(live, shards, ids_list, n_cands):
         paths = [p for p in plan.source_paths if p in sh.batch.columns]
         if not paths:
             paths = sh.batch.paths()
         batch = backend.gather_columns(sh.batch, paths, ids)
         partials.append(ShardPartial(shard_id=sid, rows_scanned=sh.n,
-                                     rows_selected=len(ids),
+                                     rows_selected=n_cand,
                                      bytes_read=batch.nbytes()))
         batches.append(batch)
     t2 = time.perf_counter()
 
-    # ---- residual refine: masks host-evaluated, compacted in one launch
+    # ---- residual filter: masks host-evaluated, compacted in one launch
     if plan.residual is not None:
         keeps = backend.compact_masks(
             [predicate_mask(b, plan.residual) for b in batches])

@@ -82,8 +82,11 @@ def apply_map(batch: ColumnBatch, make: MakeProto) -> ColumnBatch:
 
 def predicate_mask(batch: ColumnBatch, pred: Expr) -> np.ndarray:
     """Singular predicate → bool row mask [n] (shared by the per-shard
-    filter, the wave runner's batched residual compact, and the Tesseract
-    exact refine — one definition keeps the paths byte-identical)."""
+    filter and the wave runner's batched residual compact — one definition
+    keeps the paths byte-identical).  Tesseract's exact pass no longer
+    routes through here from ``find()``: the planner compiles it to the
+    backend's ``refine_tracks`` op; this host evaluation of ``InSpaceTime``
+    remains the ``filter()``-path fallback."""
     v = eval_expr(pred, EvalContext(batch))
     if v.is_repeated:
         raise TypeError("filter() predicate must be singular "

@@ -1,0 +1,144 @@
+"""Host-side packing + numpy oracle for the ragged track refine.
+
+The exact Tesseract pass — "some track point inside the region's cover
+during the window, for every constraint" — runs in two shapes:
+
+  * :func:`refine_tracks_host` — the numpy oracle over raw CSR
+    ``(lat, lng, t, row_splits)`` columns, semantically identical to
+    ``eval_expr(InSpaceTime)`` (``repro.core.exprs``).  It optionally
+    restricts work to candidate docs (the index-probe survivors) via a
+    spans-concatenate gather, which is what the per-shard host path runs.
+  * the device kernel (``repro.kernels.refine``), which consumes the
+    *packed* integer form built here: Morton keys and order-mapped float64
+    timestamps split into uint32 (hi, lo) word pairs, plus the per-point
+    doc-id expansion of ``row_splits``.  Packing is a pure function of the
+    stored track, so the jax backend computes it once per shard at
+    ``prime_fdb`` time and keeps it device-resident.
+
+Both shapes are exact bit/integer work on the same inputs, so backend
+results are byte-identical (the parity contract the tests enforce).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..fdb.columnar import span_indices
+from ..geo import mercator as M
+
+__all__ = ["f64_sort_key", "pack_track_points", "pack_constraints",
+           "refine_tracks_host"]
+
+_U32 = np.uint64(0xFFFFFFFF)
+_SHIFT32 = np.uint64(32)
+
+
+def f64_sort_key(t) -> np.ndarray:
+    """Map float64 → uint64 preserving order: flip all bits of negatives,
+    set the sign bit of non-negatives (−0.0 is first normalized to +0.0 so
+    the two zeros stay equal).  Lets the kernel compare timestamps with
+    exact integer word compares instead of device float64."""
+    t = np.asarray(t, dtype=np.float64) + 0.0       # −0.0 + 0.0 → +0.0
+    bits = t.view(np.uint64)
+    neg = bits >> np.uint64(63) != 0
+    return np.where(neg, ~bits, bits | np.uint64(1) << np.uint64(63))
+
+
+def _split_words(v: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    v = np.asarray(v, dtype=np.uint64)
+    return ((v >> _SHIFT32).astype(np.uint32),
+            (v & _U32).astype(np.uint32))
+
+
+def pack_track_points(lat: np.ndarray, lng: np.ndarray, t: np.ndarray,
+                      row_splits: Optional[np.ndarray]
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """CSR track columns → (pts uint32 [4, P], rows int32 [P]).
+
+    pts rows are (key_hi, key_lo, t_hi, t_lo); rows is the per-point doc
+    id (``row_splits`` expanded; identity for singular location fields).
+    """
+    keys = M.latlng_to_morton(lat, lng)
+    k_hi, k_lo = _split_words(keys)
+    t_hi, t_lo = _split_words(f64_sort_key(t))
+    pts = np.stack([k_hi, k_lo, t_hi, t_lo]).astype(np.uint32)
+    if row_splits is None:
+        rows = np.arange(keys.size, dtype=np.int32)
+    else:
+        rows = np.repeat(
+            np.arange(row_splits.size - 1, dtype=np.int32),
+            np.diff(row_splits))
+    return pts, rows
+
+
+def pack_constraints(constraints: Sequence[Tuple[object, float, float]]
+                     ) -> np.ndarray:
+    """[(AreaTree, t0, t1), …] → uint32 [C, 8, R] word table.
+
+    Slot r of constraint c holds (cover-range lo, hi) and the constraint's
+    (window lo, hi), each split into (hi, lo) 32-bit words.  Range slots
+    beyond the region's cover are the empty range (lo = 2^64−1, hi = 0) —
+    never satisfiable — while window words fill every slot so the kernel
+    and reference can read them from any slot.
+    """
+    n_c = len(constraints)
+    r_pad = 128
+    for region, _, _ in constraints:
+        r_pad = max(r_pad, -(-int(region.lo.size) // 128) * 128)
+    cov = np.zeros((n_c, 8, r_pad), dtype=np.uint32)
+    cov[:, 0, :] = 0xFFFFFFFF                      # empty-range padding
+    cov[:, 1, :] = 0xFFFFFFFF
+    for c, (region, t0, t1) in enumerate(constraints):
+        r = int(region.lo.size)
+        if r:
+            cov[c, 0, :r], cov[c, 1, :r] = _split_words(region.lo)
+            cov[c, 2, :r], cov[c, 3, :r] = _split_words(region.hi)
+        w0_hi, w0_lo = _split_words(f64_sort_key(t0))
+        w1_hi, w1_lo = _split_words(f64_sort_key(t1))
+        cov[c, 4, :] = w0_hi
+        cov[c, 5, :] = w0_lo
+        cov[c, 6, :] = w1_hi
+        cov[c, 7, :] = w1_lo
+    return cov
+
+
+def refine_tracks_host(lat: np.ndarray, lng: np.ndarray, t: np.ndarray,
+                       row_splits: Optional[np.ndarray], n_docs: int,
+                       constraints: Sequence[Tuple[object, float, float]],
+                       candidates: Optional[np.ndarray] = None
+                       ) -> np.ndarray:
+    """Numpy oracle: exact per-doc refine mask [n_docs] bool.
+
+    ``candidates`` (bool [n_docs]) restricts evaluation to the index-probe
+    survivors — docs outside it come back False, and because the per-doc
+    verdict is independent of other docs, the result equals
+    ``full_refine & candidates`` bit for bit.
+    """
+    if n_docs == 0:
+        return np.zeros(0, dtype=bool)
+    if row_splits is None:                         # singular location + t
+        keys = M.latlng_to_morton(lat, lng)
+        out = np.ones(n_docs, dtype=bool) if candidates is None \
+            else np.asarray(candidates, dtype=bool).copy()
+        for region, t0, t1 in constraints:
+            out &= region.contains(keys) & (t >= t0) & (t <= t1)
+        return out
+    if candidates is not None:
+        cand = np.asarray(candidates, dtype=bool)
+        ids = np.nonzero(cand)[0]
+        flat = span_indices(row_splits[ids], row_splits[ids + 1])
+        lat, lng, t = lat[flat], lng[flat], t[flat]
+        row_of = np.repeat(ids, np.diff(row_splits)[ids])
+        out = cand.copy()
+    else:
+        row_of = np.repeat(np.arange(n_docs), np.diff(row_splits))
+        out = np.ones(n_docs, dtype=bool)
+    keys = M.latlng_to_morton(lat, lng)
+    for region, t0, t1 in constraints:
+        hit = region.contains(keys) & (t >= t0) & (t <= t1)
+        doc_hit = np.zeros(n_docs, dtype=bool)
+        if hit.size:
+            np.logical_or.at(doc_hit, row_of, hit)
+        out &= doc_hit
+    return out

@@ -1,9 +1,11 @@
 """The per-shard server task, shared by Warp:AdHoc and Warp:Flume.
 
 This is the unit of distribution and the unit of failure: index probe →
-selective column read → residual filter → record-parallel ops →
-(aggregate_produce | pre-sorted batch).  Both engines schedule it; they
-differ only in what happens when it fails or lags (§4.3.5 vs §4.3.6).
+exact track refine (Tesseract constraints, behind the backend's
+``refine_tracks`` op) → selective column read → residual filter →
+record-parallel ops → (aggregate_produce | pre-sorted batch).  Both
+engines schedule it; they differ only in what happens when it fails or
+lags (§4.3.5 vs §4.3.6).
 """
 from __future__ import annotations
 
@@ -18,6 +20,7 @@ from ..core.flow import AggregateOp, LimitOp, SortOp
 from ..core.planner import Plan, probe_shard
 from ..fdb.columnar import ColumnBatch
 from ..fdb.fdb import FDb
+from ..fdb.index import mask_from_bitmap
 from .backend import as_backend
 from .failures import FaultPlan
 from .processors import (AggPartial, aggregate_produce, apply_filter,
@@ -48,7 +51,16 @@ def run_shard_task(db: FDb, plan: Plan, shard_id: int,
     t0 = time.perf_counter()
     shard = db.shards[shard_id]
     bm = probe_shard(shard, plan.probes, backend)
-    ids = backend.select_ids(bm, shard.n)
+    if plan.refines:
+        mask = mask_from_bitmap(bm, shard.n)
+        n_cand = int(mask.sum())
+        for rf in plan.refines:
+            mask = backend.refine_tracks(shard.batch, rf.path,
+                                         rf.constraints, mask)
+        ids = backend.compact_mask(mask)
+    else:
+        ids = backend.select_ids(bm, shard.n)
+        n_cand = len(ids)
     t1 = time.perf_counter()
     paths = [p for p in plan.source_paths if p in shard.batch.columns]
     if not paths:
@@ -56,7 +68,7 @@ def run_shard_task(db: FDb, plan: Plan, shard_id: int,
     batch = shard.batch.select_paths(paths).gather(ids)
     t2 = time.perf_counter()
     out = ShardPartial(shard_id=shard_id, rows_scanned=shard.n,
-                       rows_selected=len(ids), bytes_read=batch.nbytes(),
+                       rows_selected=n_cand, bytes_read=batch.nbytes(),
                        io_ms=(t2 - t1) * 1e3)
     if plan.residual is not None:
         batch = apply_filter(batch, plan.residual, backend)

@@ -25,11 +25,28 @@ from .schema import Schema, MESSAGE, STRING, BOOL, INT, UINT, FLOAT, DOUBLE
 _DTYPES = {BOOL: np.bool_, INT: np.int64, UINT: np.uint64,
            FLOAT: np.float32, DOUBLE: np.float64, STRING: np.int32}
 
-__all__ = ["Column", "ColumnBatch", "dtype_for"]
+__all__ = ["Column", "ColumnBatch", "dtype_for", "span_indices"]
 
 
 def dtype_for(ftype: str):
     return _DTYPES[ftype]
+
+
+def span_indices(starts: np.ndarray, ends: np.ndarray) -> np.ndarray:
+    """Concatenate integer ranges ``[starts[i], ends[i])`` into one flat
+    int64 index array, fully vectorized (no per-span Python loop).
+
+    This is the spans-concatenate gather behind every CSR read: ragged
+    column gathers, postings-list unions, and candidate track slicing.
+    """
+    starts = np.asarray(starts, dtype=np.int64)
+    lens = np.asarray(ends, dtype=np.int64) - starts
+    total = int(lens.sum())
+    if total == 0:
+        return np.zeros(0, dtype=np.int64)
+    offsets = np.cumsum(lens) - lens               # flat start of each span
+    return np.repeat(starts - offsets, lens) + np.arange(total,
+                                                         dtype=np.int64)
 
 
 @dataclass
@@ -63,17 +80,9 @@ class Column:
             return Column(self.values[ids], None, self.vocab)
         starts = self.row_splits[ids]
         ends = self.row_splits[ids + 1]
-        lens = ends - starts
         new_splits = np.zeros(ids.size + 1, dtype=np.int64)
-        np.cumsum(lens, out=new_splits[1:])
-        # Flat indices of all kept elements.
-        total = int(new_splits[-1])
-        flat = np.zeros(total, dtype=np.int64)
-        if total:
-            # offsets within each segment
-            seg_start = np.repeat(starts, lens)
-            within = np.arange(total) - np.repeat(new_splits[:-1], lens)
-            flat = seg_start + within
+        np.cumsum(ends - starts, out=new_splits[1:])
+        flat = span_indices(starts, ends)          # kept elements, in order
         return Column(self.values[flat], new_splits, self.vocab)
 
     @staticmethod

@@ -373,9 +373,14 @@ def _points_in_polygon(qx, qy, vx, vy):
     j = n - 1
     for i in range(n):
         cond = ((vy[i] > qy) != (vy[j] > qy))
+        # An edge only crosses the ray where `cond` holds, and there
+        # |qy − vy[i]| < |denom|, so the quotient is bounded by the edge's
+        # x-extent.  Degenerate/near-horizontal edges (cond all-False)
+        # divide by the placeholder 1.0 instead — no overflow, result
+        # masked out either way.
         denom = vy[j] - vy[i]
-        denom = np.where(np.abs(denom) < 1e-300, 1e-300, denom)
-        xin = (vx[j] - vx[i]) * (qy - vy[i]) / denom + vx[i]
+        xin = (vx[j] - vx[i]) * np.where(cond, qy - vy[i], 0.0) \
+            / np.where(cond, denom, 1.0) + vx[i]
         inside ^= cond & (qx < xin)
         j = i
     return inside

@@ -30,12 +30,14 @@ from . import bitset as _bitset
 from . import compact as _compact
 from . import flash_attention as _fa
 from . import ref as _ref
+from . import refine as _refine
 from . import segment_agg as _seg
 from . import ssm_scan as _ssm
 
 __all__ = ["default_impl", "bitmap_binary", "bitmap_intersect",
            "bitmap_intersect_batched", "compact", "compact_batched",
-           "segment_agg", "flash_attention", "ssm_scan",
+           "segment_agg", "refine_tracks", "refine_tracks_batched",
+           "flash_attention", "ssm_scan",
            "launch_counts", "reset_launch_counts", "record_launch"]
 
 
@@ -136,6 +138,30 @@ def segment_agg(group_ids, values, num_groups: int,
         return _ref.segment_agg_ref(group_ids, values, num_groups)
     return _seg.segment_agg(group_ids, values, num_groups,
                             interpret=(impl == "interpret"))
+
+
+def refine_tracks(pts, rows, cov, num_docs: int, impl: Optional[str] = None):
+    """Exact point-in-cover × time-window refine over one shard's packed
+    ragged track → per-doc hit mask [num_docs] bool (see kernels.refine)."""
+    impl = _resolve(impl)
+    record_launch("refine_tracks")
+    if impl == "reference":
+        return _ref.refine_tracks_ref(pts, rows, cov, num_docs=num_docs)
+    return _refine.refine_tracks(pts, rows, cov, num_docs,
+                                 interpret=(impl == "interpret"))
+
+
+def refine_tracks_batched(pts, rows, cov, num_docs: int,
+                          impl: Optional[str] = None):
+    """Wave-stacked refine [S, 4, P] × [C, 8, R] → hit masks
+    [S, num_docs] bool — one launch per wave of shards."""
+    impl = _resolve(impl)
+    record_launch("refine_tracks_batched")
+    if impl == "reference":
+        return _ref.refine_tracks_batched_ref(pts, rows, cov,
+                                              num_docs=num_docs)
+    return _refine.refine_tracks_batched(pts, rows, cov, num_docs,
+                                         interpret=(impl == "interpret"))
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window=None,

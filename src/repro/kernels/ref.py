@@ -7,6 +7,8 @@ roofline FLOPs/bytes come from the same math the kernels implement.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -14,7 +16,8 @@ import numpy as np
 __all__ = ["bitset_and_ref", "bitset_or_ref", "bitset_andnot_ref",
            "popcount_ref", "bitmap_intersect_ref",
            "bitmap_intersect_batched_ref", "compact_ref",
-           "compact_batched_ref", "segment_agg_ref", "flash_attention_ref",
+           "compact_batched_ref", "segment_agg_ref", "refine_tracks_ref",
+           "refine_tracks_batched_ref", "flash_attention_ref",
            "ssm_scan_ref", "decode_attention_ref"]
 
 
@@ -110,6 +113,70 @@ def segment_agg_ref(group_ids: jnp.ndarray, values: jnp.ndarray,
     s = jax.ops.segment_sum(v, gid, num_segments=num_groups)
     s2 = jax.ops.segment_sum(v * v, gid, num_segments=num_groups)
     return count, s, s2
+
+
+# ------------------------------------------------------------ track refine
+
+def _pair_ge(a_hi, a_lo, b_hi, b_lo):
+    """a >= b over (hi, lo) uint32 word pairs (64-bit lexicographic)."""
+    return (a_hi > b_hi) | ((a_hi == b_hi) & (a_lo >= b_lo))
+
+
+def _pair_lt(a_hi, a_lo, b_hi, b_lo):
+    return (a_hi < b_hi) | ((a_hi == b_hi) & (a_lo < b_lo))
+
+
+def _pair_le(a_hi, a_lo, b_hi, b_lo):
+    return (a_hi < b_hi) | ((a_hi == b_hi) & (a_lo <= b_lo))
+
+
+@functools.partial(jax.jit, static_argnames=("num_docs",))
+def refine_tracks_ref(pts: jnp.ndarray, rows: jnp.ndarray,
+                      cov: jnp.ndarray, num_docs: int) -> jnp.ndarray:
+    """Exact Tesseract refine over one shard's packed ragged track.
+
+    pts [4, P] uint32 — per-point (key_hi, key_lo, t_hi, t_lo) words;
+    rows [P] int32 — doc id per point (−1 = padding);
+    cov [C, 8, R] uint32 — per-constraint cover-range + window word table
+    (see ``kernels.refine``).  → bool hit mask [num_docs]: doc d passes iff
+    for *every* constraint some point of d lies in a cover range during the
+    window.  Pure integer work — byte-equal to the host numpy oracle.
+    """
+    n_constraints = int(cov.shape[0])
+    p = pts.shape[1]
+    if num_docs == 0:
+        return jnp.zeros((0,), jnp.bool_)
+    if p == 0 or n_constraints == 0:
+        return jnp.full((num_docs,), n_constraints == 0)
+    k_hi, k_lo, t_hi, t_lo = pts[0], pts[1], pts[2], pts[3]
+    safe_rows = jnp.where(rows >= 0, rows, num_docs)    # pad → dropped
+    out = jnp.ones((num_docs,), jnp.bool_)
+    for c in range(n_constraints):
+        in_win = (_pair_ge(t_hi, t_lo, cov[c, 4, 0], cov[c, 5, 0])
+                  & _pair_le(t_hi, t_lo, cov[c, 6, 0], cov[c, 7, 0]))
+
+        def body(r, acc, c=c):
+            return acc | (_pair_ge(k_hi, k_lo, cov[c, 0, r], cov[c, 1, r])
+                          & _pair_lt(k_hi, k_lo, cov[c, 2, r], cov[c, 3, r]))
+
+        in_cov = jax.lax.fori_loop(0, cov.shape[2], body,
+                                   jnp.zeros((p,), jnp.bool_))
+        hit = (in_cov & in_win).astype(jnp.int32)
+        doc_hit = jnp.zeros((num_docs,), jnp.int32) \
+            .at[safe_rows].max(hit, mode="drop")
+        out = out & (doc_hit > 0)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("num_docs",))
+def refine_tracks_batched_ref(pts: jnp.ndarray, rows: jnp.ndarray,
+                              cov: jnp.ndarray, num_docs: int):
+    """Wave-stacked refine: pts [S, 4, P], rows [S, P] → masks
+    [S, num_docs] (every shard shares the query's constraint table)."""
+    if pts.shape[0] == 0:
+        return jnp.zeros((0, num_docs), jnp.bool_)
+    return jax.vmap(
+        lambda pp, rr: refine_tracks_ref(pp, rr, cov, num_docs))(pts, rows)
 
 
 # --------------------------------------------------------- flash attention

@@ -1,0 +1,169 @@
+"""Pallas ragged track-refine kernel (the Tesseract exact pass, paper §2).
+
+After the conservative ``spacetime`` index probe, every candidate trip must
+be checked *exactly*: does some track point fall inside the query region's
+Morton-range cover during the time window — for **every** constraint of the
+query?  Host-side this is the `eval_expr(InSpaceTime)` loop; here it is one
+fused device pass over the shard's CSR track buffers.
+
+Input packing (all integer words, so the pass is exact on any impl):
+
+  * ``pts`` — uint32 ``[4, P]`` per-point words: Morton key split into
+    (hi, lo) 32-bit halves, and the float64 timestamp mapped through the
+    order-preserving IEEE-754 trick (flip sign bit for positives, all bits
+    for negatives) and split the same way.  Point-in-range and in-window
+    become 64-bit *lexicographic* integer compares — byte-identical to the
+    host's uint64 searchsorted + float64 compares, with no f64 on device.
+  * ``rows`` — int32 ``[P]`` doc id per point (CSR ``row_splits`` expanded;
+    ``-1`` marks padding and never matches a doc).
+  * ``cov`` — uint32 ``[C, 8, R]`` per-constraint range table: each of the
+    R slots holds (key_lo, key_hi) cover-range bounds and the constraint's
+    (win_lo, win_hi) window, all as (hi, lo) word pairs.  Padding slots use
+    an empty range (lo = 2^64−1, hi = 0) and never hit.
+
+The kernel walks a ``(doc-block, point-block)`` grid like ``segment_agg``:
+per point block it evaluates all C constraints against the R ranges on the
+VPU, reduces hits per doc through the one-hot ``rows == doc_iota`` compare,
+and OR-accumulates a **per-doc constraint bitset** (bit c set ⇔ some point
+satisfied constraint c).  A doc passes iff its bitset is full — computed in
+the jit epilogue.  ``refine_tracks_batched`` stacks a whole wave of shards
+(ragged P and doc counts zero-padded) and adds a leading shard grid axis,
+so a wave costs **one** launch, mirroring ``compact_batched``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ._compat import CompilerParams
+
+__all__ = ["refine_tracks", "refine_tracks_batched",
+           "DEFAULT_POINT_BLOCK", "DEFAULT_DOC_BLOCK"]
+
+DEFAULT_POINT_BLOCK = 512
+DEFAULT_DOC_BLOCK = 128
+_RANGE_PAD = 128               # cover-range slots padded to the lane width
+
+
+def _ge(a_hi, a_lo, b_hi, b_lo):
+    """a >= b over (hi, lo) uint32 word pairs (64-bit lexicographic)."""
+    return (a_hi > b_hi) | ((a_hi == b_hi) & (a_lo >= b_lo))
+
+
+def _lt(a_hi, a_lo, b_hi, b_lo):
+    return (a_hi < b_hi) | ((a_hi == b_hi) & (a_lo < b_lo))
+
+
+def _le(a_hi, a_lo, b_hi, b_lo):
+    return (a_hi < b_hi) | ((a_hi == b_hi) & (a_lo <= b_lo))
+
+
+def _refine_kernel(pts_ref, rows_ref, cov_ref, out_ref, *,
+                   doc_block: int, n_constraints: int):
+    g = pl.program_id(1)
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    k_hi = pts_ref[0, 0, :][:, None]               # (T, 1) uint32
+    k_lo = pts_ref[0, 1, :][:, None]
+    t_hi = pts_ref[0, 2, :][:, None]
+    t_lo = pts_ref[0, 3, :][:, None]
+    rows = rows_ref[0, :]                          # (T,) int32
+    docs = g * doc_block + jax.lax.broadcasted_iota(
+        jnp.int32, (1, doc_block), 1)              # (1, D)
+    onehot = rows[:, None] == docs                 # (T, D) bool
+    acc = jnp.zeros((1, doc_block), jnp.int32)
+    for c in range(n_constraints):
+        lo_hi = cov_ref[c, 0, :][None, :]          # (1, R)
+        lo_lo = cov_ref[c, 1, :][None, :]
+        hi_hi = cov_ref[c, 2, :][None, :]
+        hi_lo = cov_ref[c, 3, :][None, :]
+        w0_hi = cov_ref[c, 4, :][None, :]
+        w0_lo = cov_ref[c, 5, :][None, :]
+        w1_hi = cov_ref[c, 6, :][None, :]
+        w1_lo = cov_ref[c, 7, :][None, :]
+        hit = (_ge(k_hi, k_lo, lo_hi, lo_lo)       # key in [lo, hi)
+               & _lt(k_hi, k_lo, hi_hi, hi_lo)
+               & _ge(t_hi, t_lo, w0_hi, w0_lo)     # t in [w0, w1]
+               & _le(t_hi, t_lo, w1_hi, w1_lo))
+        hit_pt = jnp.any(hit, axis=1)              # (T,)
+        contrib = jnp.any(onehot & hit_pt[:, None], axis=0)   # (D,)
+        acc = acc | jnp.left_shift(contrib[None, :].astype(jnp.int32), c)
+    out_ref[...] = out_ref[...] | acc
+
+
+def _pad_cov(cov: jnp.ndarray) -> jnp.ndarray:
+    """Pad the range axis to the lane width with never-hit slots."""
+    c, _, r = cov.shape
+    padded_r = max(_RANGE_PAD, pl.cdiv(max(r, 1), _RANGE_PAD) * _RANGE_PAD)
+    if r == padded_r:
+        return cov
+    pad = jnp.zeros((c, 8, padded_r), jnp.uint32)
+    # empty range: key >= 0xFFFF…FFFF is unsatisfiable for 60-bit keys and
+    # key < 0 is always false — either kills the slot
+    pad = pad.at[:, 0, :].set(jnp.uint32(0xFFFFFFFF))
+    pad = pad.at[:, 1, :].set(jnp.uint32(0xFFFFFFFF))
+    return pad.at[:, :, :r].set(cov)
+
+
+@functools.partial(jax.jit, static_argnames=("num_docs", "point_block",
+                                             "doc_block", "interpret"))
+def refine_tracks_batched(pts: jnp.ndarray, rows: jnp.ndarray,
+                          cov: jnp.ndarray, num_docs: int,
+                          point_block: int = DEFAULT_POINT_BLOCK,
+                          doc_block: int = DEFAULT_DOC_BLOCK,
+                          interpret: bool = False):
+    """pts [S, 4, P] uint32, rows [S, P] int32 (−1 pad), cov [C, 8, R]
+    uint32 → per-doc hit mask [S, num_docs] bool (wave-ragged doc counts
+    zero-padded to ``num_docs`` by the caller; slice per shard)."""
+    s, _, p = pts.shape
+    n_constraints = int(cov.shape[0])
+    full = jnp.int32((1 << n_constraints) - 1)
+    if s == 0 or num_docs == 0:
+        return jnp.zeros((s, num_docs), jnp.bool_)
+    if p == 0 or n_constraints == 0:
+        # no points → no constraint can hit; no constraints → vacuous truth
+        return jnp.full((s, num_docs), n_constraints == 0)
+    cov = _pad_cov(cov)
+    r_pad = cov.shape[2]
+    padded_p = pl.cdiv(p, point_block) * point_block
+    padded_d = pl.cdiv(num_docs, doc_block) * doc_block
+    pts_p = jnp.zeros((s, 4, padded_p), jnp.uint32).at[:, :, :p].set(pts)
+    rows_p = jnp.full((s, padded_p), -1, jnp.int32).at[:, :p].set(rows)
+    bits = pl.pallas_call(
+        functools.partial(_refine_kernel, doc_block=doc_block,
+                          n_constraints=n_constraints),
+        grid=(s, padded_d // doc_block, padded_p // point_block),
+        in_specs=[
+            pl.BlockSpec((1, 4, point_block), lambda i, g, t: (i, 0, t)),
+            pl.BlockSpec((1, point_block), lambda i, g, t: (i, t)),
+            pl.BlockSpec((n_constraints, 8, r_pad),
+                         lambda i, g, t: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, doc_block), lambda i, g, t: (i, g)),
+        out_shape=jax.ShapeDtypeStruct((s, padded_d), jnp.int32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(pts_p, rows_p, cov)
+    return bits[:, :num_docs] == full
+
+
+@functools.partial(jax.jit, static_argnames=("num_docs", "point_block",
+                                             "doc_block", "interpret"))
+def refine_tracks(pts: jnp.ndarray, rows: jnp.ndarray, cov: jnp.ndarray,
+                  num_docs: int, point_block: int = DEFAULT_POINT_BLOCK,
+                  doc_block: int = DEFAULT_DOC_BLOCK,
+                  interpret: bool = False):
+    """Single-shard refine: pts [4, P], rows [P], cov [C, 8, R] →
+    hit mask [num_docs] bool."""
+    return refine_tracks_batched(pts[None], rows[None], cov, num_docs,
+                                 point_block=point_block,
+                                 doc_block=doc_block,
+                                 interpret=interpret)[0]

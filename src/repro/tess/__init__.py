@@ -8,8 +8,11 @@ through region A during time window T1 and region B during T2" (§2, §6):
     time next to ``TagIndex``/``RangeIndex`` (declare
     ``indexes=("spacetime",)`` on the track message field),
   * :class:`Tesseract` — the constraint builder whose predicate compiles
-    to stacked bitmap AND work on the ``ExecBackend`` seam plus an exact
-    refine pass (see ``Flow.tesseract`` and ``repro.core.planner``),
+    to stacked bitmap AND work on the ``ExecBackend`` seam plus the exact
+    refine pass, itself a fused device op (``refine_tracks_batched`` →
+    the Pallas ``refine`` kernel over the shard's resident CSR track
+    buffers; see ``Flow.tesseract``, ``repro.core.planner`` and
+    ``repro.exec.refine``),
   * :func:`tesseract_stats` — index-probe candidates vs. exact survivors,
     the pruning-ratio report the benchmarks track.
 """

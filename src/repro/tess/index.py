@@ -24,9 +24,23 @@ positives of trips that pass the region at a different time of day.
 
 Probes are **conservative**: a returned doc's track touches a covered cell
 during an overlapping bucket, which is a superset of exactly passing through
-the region during the window.  The planner therefore keeps the constraint in
-the residual filter; the exact point-in-cover × time-window pass runs behind
-the backend's ``compact_mask`` (see ``repro.core.planner``).
+the region during the window.  The planner therefore also compiles the
+constraint into a ``RefineSpec``: the exact point-in-cover × time-window
+pass runs *on device* behind the backend's ``refine_tracks`` /
+``refine_tracks_batched`` ops (the Pallas ``refine`` kernel over the
+shard's resident CSR track buffers; see ``repro.core.planner`` and
+``repro.exec.refine``), and its per-doc hit mask feeds the selection
+compaction.
+
+Time is bucketed relative to ``epoch``: build clamps points outside
+``[epoch, epoch + 2^20·bucket_s)`` into the boundary buckets — pick
+``epoch`` ≤ the dataset's earliest timestamp for time discrimination.
+Query windows entirely outside the representable range return no
+candidates when nothing was clamped on that side (the common case; they
+must not alias onto unrelated bucket-0 / MAX_BUCKET postings), and
+collapse onto the boundary bucket when build did clamp points there —
+conservative either way, so ``find()`` always agrees with the exact
+``filter()`` semantics.
 """
 from __future__ import annotations
 
@@ -35,6 +49,7 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from ..fdb.columnar import span_indices
 from ..fdb.index import bitmap_from_ids, bitmap_zeros
 from ..geo import mercator as M
 from ..geo.areatree import AreaTree
@@ -61,6 +76,12 @@ class SpaceTimeIndex:
     t_min: np.ndarray          # float64 [n_docs]; +inf for empty tracks
     t_max: np.ndarray          # float64 [n_docs]; -inf for empty tracks
     n_docs: int
+    #: build saw points clamped into the boundary buckets (t < epoch /
+    #: past bucket 2^20−1) — out-of-range query windows must then stay
+    #: conservative and probe the boundary bucket instead of short-
+    #: circuiting to empty
+    clamped_lo: bool = False
+    clamped_hi: bool = False
 
     # ------------------------------------------------------------------ build
     @staticmethod
@@ -97,8 +118,19 @@ class SpaceTimeIndex:
                                   t_min, t_max, n_docs)
         shift = np.uint64(6 * (M.MAX_LEVEL - level))
         cell = M.latlng_to_morton(lat, lng) >> shift
-        bucket = np.clip(np.floor((t - epoch) / bucket_s),
-                         0, MAX_BUCKET).astype(np.uint64)
+        # Build-side clamp: points before ``epoch`` post into bucket 0 and
+        # points past bucket 2^20−1 into MAX_BUCKET, so out-of-range data
+        # stays discoverable by windows that reach (or overshoot toward)
+        # the boundary buckets.  ``epoch`` should be ≤ the dataset's
+        # earliest t (and the bucket width wide enough for its span) for
+        # the index to discriminate in time; the ``clamped_lo``/
+        # ``clamped_hi`` flags remember that the clamp fired, so
+        # :meth:`_bucket_range` only short-circuits out-of-range windows
+        # to empty when no clamped postings exist to alias onto.
+        raw_bucket = np.floor((t - epoch) / bucket_s)
+        clamped_lo = bool(np.any(raw_bucket < 0))
+        clamped_hi = bool(np.any(raw_bucket > MAX_BUCKET))
+        bucket = np.clip(raw_bucket, 0, MAX_BUCKET).astype(np.uint64)
         ck = (cell << _TB) | bucket
         order = np.lexsort((docs, ck))
         ck_s, docs_s = ck[order], docs[order]
@@ -109,40 +141,68 @@ class SpaceTimeIndex:
         uniq, starts = np.unique(ck_s, return_index=True)
         splits = np.concatenate([starts, [ck_s.size]]).astype(np.int64)
         return SpaceTimeIndex(level, bucket_s, epoch, uniq, splits, docs_s,
-                              t_min, t_max, n_docs)
+                              t_min, t_max, n_docs, clamped_lo, clamped_hi)
 
     # ----------------------------------------------------------------- lookup
-    def _bucket_range(self, t0: float, t1: float) -> Tuple[int, int]:
-        b0 = int(np.clip(np.floor((t0 - self.epoch) / self.bucket_s),
-                         0, MAX_BUCKET))
-        b1 = int(np.clip(np.floor((t1 - self.epoch) / self.bucket_s),
-                         0, MAX_BUCKET))
-        return b0, b1
+    def _bucket_range(self, t0: float, t1: float
+                      ) -> Optional[Tuple[int, int]]:
+        """Bucket span of ``[t0, t1]``, or ``None`` when the window misses
+        every posted bucket.
+
+        Build time clamps out-of-range *points* into the boundary buckets
+        (0 / ``MAX_BUCKET``), which keeps probes conservative for windows
+        that reach a boundary.  A window that ends before ``epoch`` or
+        starts past bucket 2^20−1 must NOT be clamped the same way when no
+        such points exist — that would alias it onto the boundary buckets
+        and probe unrelated postings — so it reports no intersection
+        instead.  When build *did* clamp points on that side
+        (``clamped_lo``/``clamped_hi``), the window collapses onto the
+        boundary bucket: those postings are a genuine superset of the
+        window's matches, preserving the conservative contract even when
+        ``epoch`` was chosen inside the data's time span.
+        """
+        b0 = np.floor((t0 - self.epoch) / self.bucket_s)
+        b1 = np.floor((t1 - self.epoch) / self.bucket_s)
+        if b1 < 0 and not self.clamped_lo:
+            return None
+        if b0 > MAX_BUCKET and not self.clamped_hi:
+            return None
+        return (int(np.clip(b0, 0, MAX_BUCKET)),
+                int(np.clip(b1, 0, MAX_BUCKET)))
 
     def lookup(self, region: AreaTree, t0: float, t1: float) -> np.ndarray:
         """Candidate docs with a track point in a cell covering ``region``
-        during a bucket overlapping ``[t0, t1]`` (superset of exact)."""
+        during a bucket overlapping ``[t0, t1]`` (superset of exact).
+
+        The postings OR is a single spans-concatenate gather: per cover
+        range, ``searchsorted`` bounds the key span; matching keys across
+        *all* ranges are collected at once (bucket post-filter included)
+        and their CSR doc lists concatenated without any per-key Python
+        loop — the key-fan-out cost is one vectorized gather.
+        """
         if region.is_empty or t1 < t0 or self.keys.size == 0:
             return bitmap_zeros(self.n_docs)
+        br = self._bucket_range(t0, t1)
+        if br is None:                 # window outside representable range
+            return bitmap_zeros(self.n_docs)
+        b0, b1 = br
         shift = np.uint64(6 * (M.MAX_LEVEL - self.level))
         c0 = region.lo >> shift
         c1 = (region.hi - _ONE) >> shift          # inclusive cell ranges
-        b0, b1 = self._bucket_range(t0, t1)
-        parts = []
-        for lo, hi in zip(c0, c1):
-            a = int(np.searchsorted(self.keys, (lo << _TB) | np.uint64(b0),
-                                    side="left"))
-            b = int(np.searchsorted(self.keys, (hi << _TB) | np.uint64(b1),
-                                    side="right"))
-            if b <= a:
-                continue
-            span = self.keys[a:b]
-            bk = span & _BMASK
-            for i in np.nonzero((bk >= b0) & (bk <= b1))[0] + a:
-                parts.append(self.doc_ids[self.splits[i]:self.splits[i + 1]])
-        if not parts:
+        a = np.searchsorted(self.keys, (c0 << _TB) | np.uint64(b0),
+                            side="left")
+        b = np.searchsorted(self.keys, (c1 << _TB) | np.uint64(b1),
+                            side="right")
+        kidx = span_indices(a, b)                 # key slots, all ranges
+        if kidx.size == 0:
             return bitmap_zeros(self.n_docs)
-        bm = bitmap_from_ids(np.concatenate(parts), self.n_docs)
+        bk = self.keys[kidx] & _BMASK
+        kidx = kidx[(bk >= b0) & (bk <= b1)]      # bucket post-filter
+        if kidx.size == 0:
+            return bitmap_zeros(self.n_docs)
+        ids = self.doc_ids[span_indices(self.splits[kidx],
+                                        self.splits[kidx + 1])]
+        bm = bitmap_from_ids(ids, self.n_docs)
         # IntervalSet-style span prune: drop docs whose whole track misses
         # the window (kills same-place-different-time false positives).
         overlap = (self.t_min <= t1) & (self.t_max >= t0)

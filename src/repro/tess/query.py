@@ -9,11 +9,16 @@ constraint builder —
 
 Each constraint becomes one :class:`~repro.core.exprs.InSpaceTime` conjunct.
 The planner compiles every conjunct into a ``spacetime`` index probe *and*
-keeps it in the residual filter: per shard, all constraint postings bitmaps
-are stacked into **one** batched ``bitset`` kernel launch through the
-``ExecBackend`` seam (``probe_shard`` → ``intersect_bitmaps``), and the
-surviving candidates are refined exactly (point-in-cover × time-window)
-behind the backend's ``compact_mask``.
+a :class:`~repro.core.planner.RefineSpec`: per shard, all constraint
+postings bitmaps are stacked into **one** batched ``bitset`` kernel launch
+through the ``ExecBackend`` seam (``probe_shards`` → ``intersect_bitmaps``),
+and the exact pass (point-in-cover × time-window over the ragged track)
+runs as **one** fused device launch per wave behind the backend's
+``refine_tracks_batched`` op — the Pallas ``refine`` kernel on the jax
+backend, a vectorized numpy oracle on the host backend — whose per-doc hit
+masks feed the existing ``compact_masks`` selection.  Nothing about the
+exact pass runs per-shard on the host anymore; the residual filter is only
+used for non-Tesseract conjuncts.
 
 :func:`tesseract_stats` mirrors that hot path outside an engine, reporting
 index-probe candidate counts vs. exact-refine counts per shard — the
@@ -23,7 +28,7 @@ from __future__ import annotations
 
 from typing import Any, Dict, List, Optional, Tuple
 
-from ..core.exprs import Expr, ExprProxy, FieldRef, InSpaceTime
+from ..core.exprs import ExprProxy, FieldRef, InSpaceTime
 from ..geo.areatree import AreaTree
 
 __all__ = ["Tesseract", "tesseract_stats"]
@@ -72,18 +77,18 @@ def tesseract_stats(db, tess: Tesseract, backend=None,
 
     Runs the same hot loop the engines run, through the batched seam: per
     wave of shards, one stacked ``probe_shards`` launch ANDs every
-    constraint's postings bitmaps, one ``compact_masks`` launch turns the
-    surviving bitmaps into candidate ids, and a second ``compact_masks``
-    launch compacts the exact point-in-cover × time-window refine masks.
-    Reports the pruning ratio (fraction of docs the index never touched).
+    constraint's postings bitmaps, one ``refine_tracks_batched`` launch
+    evaluates the exact point-in-cover × time-window pass on device over
+    the resident ragged tracks, and one ``compact_masks`` launch per mask
+    set turns the bitmaps into candidate/survivor ids.  Reports the
+    pruning ratio (fraction of docs the index never touched); 0.0 on an
+    empty FDb (an index over zero docs has pruned nothing).
     """
     from ..exec.backend import as_backend     # lazy: exec imports core
     from ..exec.batched import partition_waves, wave_size
-    from ..exec.processors import predicate_mask
     from ..fdb.index import mask_from_bitmap
     be = as_backend(backend)
     be.prime_fdb(db)
-    pred: Expr = tess.expr()._expr
     per_shard: List[Dict[str, int]] = []
     docs = candidates = refined = 0
     for sids in partition_waves(range(db.num_shards), wave_size(wave, be)):
@@ -96,11 +101,13 @@ def tesseract_stats(db, tess: Tesseract, backend=None,
             [sh.all_bitmap() for sh in shards],
             [[ix.lookup(region, t0, t1)
               for region, t0, t1 in tess.constraints] for ix in idxs])
-        ids_list = be.compact_masks(
-            [mask_from_bitmap(bm, sh.n) for bm, sh in zip(bms, shards)])
-        subs = [sh.batch.gather(ids) for sh, ids in zip(shards, ids_list)]
-        keeps = be.compact_masks([predicate_mask(sub, pred)
-                                  for sub in subs])
+        cand_masks = [mask_from_bitmap(bm, sh.n)
+                      for bm, sh in zip(bms, shards)]
+        ids_list = be.compact_masks(cand_masks)
+        refined_masks = be.refine_tracks_batched(
+            [sh.batch for sh in shards], tess.field, tess.constraints,
+            cand_masks)
+        keeps = be.compact_masks(refined_masks)
         for sid, sh, ids, keep in zip(sids, shards, ids_list, keeps):
             per_shard.append({"shard": sid, "docs": sh.n,
                               "candidates": int(ids.size),
@@ -109,5 +116,5 @@ def tesseract_stats(db, tess: Tesseract, backend=None,
             candidates += int(ids.size)
             refined += int(keep.size)
     return {"docs": docs, "candidates": candidates, "refined": refined,
-            "pruning": 1.0 - (candidates / docs if docs else 0.0),
+            "pruning": (1.0 - candidates / docs) if docs else 0.0,
             "per_shard": per_shard}

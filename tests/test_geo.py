@@ -116,6 +116,30 @@ def test_polygon_cover():
     assert not tri.contains(np.array([outside]))[0]
 
 
+def test_polygon_cover_horizontal_edges():
+    """Axis-aligned polygons have fully horizontal edges whose ray-cast
+    denominator is 0 — must not warn (RuntimeWarning → error under
+    pytest.ini) and must classify interiors correctly (regression for the
+    overflow-in-divide in ``_points_in_polygon``)."""
+    x0, y0, x1, y1 = 1_000_000.0, 1_000_000.0, 1_008_000.0, 1_006_000.0
+    xs = np.array([x0, x1, x1, x0])          # rectangle: 2 horizontal edges
+    ys = np.array([y0, y0, y1, y1])
+    rect = AreaTree.from_polygon(xs, ys, max_level=7)
+    box = AreaTree.from_box(int(x0), int(y0), int(x1), int(y1), max_level=7)
+    # same region → covers agree on interior/exterior probes
+    inside = M.interleave(np.uint64(1_004_000), np.uint64(1_003_000))
+    outside = M.interleave(np.uint64(1_020_000), np.uint64(1_020_000))
+    assert rect.contains(np.array([inside]))[0]
+    assert box.contains(np.array([inside]))[0]
+    assert not rect.contains(np.array([outside]))[0]
+    # point-level helper directly: on-row queries vs horizontal edges
+    from repro.geo.areatree import _points_in_polygon
+    qx = np.array([x0 + 10.0, x0 - 10.0, (x0 + x1) / 2])
+    qy = np.array([(y0 + y1) / 2, (y0 + y1) / 2, y0 - 5.0])
+    got = _points_in_polygon(qx, qy, xs, ys)
+    assert got.tolist() == [True, False, False]
+
+
 def test_polyline_length():
     # 1km east along equator ≈ 1000m
     ix0, iy0 = M.latlng_to_xy(0.0, 0.0)

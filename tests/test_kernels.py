@@ -133,6 +133,115 @@ def test_segment_agg_vs_host_groupby(world):
                                    rtol=1e-4)
 
 
+# -------------------------------------------------------- track refine
+
+def _refine_case(rng, n_docs, max_len, n_constraints, *, empty_every=0):
+    """Random ragged tracks + constraints in packed kernel form."""
+    from repro.exec.refine import pack_constraints, pack_track_points
+    from repro.geo import mercator as M
+    from repro.geo.areatree import AreaTree
+    lens = rng.integers(0, max_len, n_docs)
+    if empty_every:
+        lens[::empty_every] = 0                  # force empty tracks
+    splits = np.zeros(n_docs + 1, np.int64)
+    np.cumsum(lens, out=splits[1:])
+    p = int(splits[-1])
+    lat = rng.uniform(37.6, 37.9, p)
+    lng = rng.uniform(-122.6, -122.2, p)
+    t = rng.uniform(0.0, 1e5, p)
+    cons = []
+    for _ in range(n_constraints):
+        ix, iy = M.latlng_to_xy(rng.uniform(37.6, 37.9),
+                                rng.uniform(-122.6, -122.2))
+        d = int(rng.integers(3_000, 2_000_000))
+        cons.append((AreaTree.from_box(int(ix) - d, int(iy) - d,
+                                       int(ix) + d, int(iy) + d,
+                                       max_level=7),
+                     float(rng.uniform(0, 5e4)),
+                     float(rng.uniform(5e4, 1e5))))
+    pts, rows = pack_track_points(lat, lng, t, splits)
+    return ((lat, lng, t, splits), cons,
+            jnp.asarray(pts), jnp.asarray(rows),
+            jnp.asarray(pack_constraints(cons)))
+
+
+def _refine_brute(track, cons, n_docs):
+    from repro.geo import mercator as M
+    lat, lng, t, splits = track
+    keys = M.latlng_to_morton(lat, lng)
+    out = np.ones(n_docs, dtype=bool)
+    row_of = np.repeat(np.arange(n_docs), np.diff(splits))
+    for region, t0, t1 in cons:
+        hit = region.contains(keys) & (t >= t0) & (t <= t1)
+        doc = np.zeros(n_docs, dtype=bool)
+        np.logical_or.at(doc, row_of, hit)
+        out &= doc
+    return out
+
+
+@pytest.mark.parametrize("n_docs,max_len,c", [(1, 5, 1), (31, 10, 2),
+                                              (128, 8, 1), (300, 12, 3)])
+def test_refine_tracks(n_docs, max_len, c):
+    """Interpret ≡ reference ≡ brute-force numpy on ragged tracks (empty
+    tracks included, doc counts off word boundaries)."""
+    rng = np.random.default_rng(n_docs * 7 + c)
+    track, cons, pts, rows, cov = _refine_case(rng, n_docs, max_len, c,
+                                               empty_every=5)
+    want = _refine_brute(track, cons, n_docs)
+    got_i = np.asarray(ops.refine_tracks(pts, rows, cov, n_docs,
+                                         impl="interpret"))
+    got_r = np.asarray(ops.refine_tracks(pts, rows, cov, n_docs,
+                                         impl="reference"))
+    assert np.array_equal(got_i, want)
+    assert np.array_equal(got_r, want)
+
+
+@pytest.mark.parametrize("impl", ["interpret", "reference"])
+def test_refine_tracks_batched(impl):
+    """Wave-stacked refine: ragged shard sizes (incl. an all-empty-track
+    shard) padded into one launch ≡ per-shard refine."""
+    rng = np.random.default_rng(3)
+    shard_docs = [0, 1, 64, 33]
+    cases = [_refine_case(rng, n, 10, 2, empty_every=3)
+             for n in shard_docs]
+    cov = cases[-1][4]           # same constraints for every shard
+    cons = cases[-1][1]
+    n_max = max(shard_docs)
+    p_max = max(c[2].shape[1] for c in cases)
+    pts = np.zeros((len(cases), 4, p_max), np.uint32)
+    rows = np.full((len(cases), p_max), -1, np.int32)
+    for i, case in enumerate(cases):
+        p = case[2].shape[1]
+        pts[i, :, :p] = np.asarray(case[2])
+        rows[i, :p] = np.asarray(case[3])
+    got = np.asarray(ops.refine_tracks_batched(
+        jnp.asarray(pts), jnp.asarray(rows), cov, n_max, impl=impl))
+    assert got.shape == (len(cases), n_max)
+    for i, (case, n) in enumerate(zip(cases, shard_docs)):
+        want = _refine_brute(case[0], cons, n)
+        assert np.array_equal(got[i, :n], want), i
+        assert not got[i, n:].any()              # padding never hits
+
+
+@pytest.mark.parametrize("impl", ["interpret", "reference"])
+def test_refine_tracks_empty_inputs(impl):
+    """Zero docs, zero points, empty cover region."""
+    from repro.exec.refine import pack_constraints
+    from repro.geo.areatree import AreaTree
+    cov = jnp.asarray(pack_constraints([(AreaTree.empty(), 0.0, 1.0)]))
+    pts0 = jnp.zeros((4, 0), jnp.uint32)
+    rows0 = jnp.zeros((0,), jnp.int32)
+    assert np.asarray(ops.refine_tracks(pts0, rows0, cov, 0,
+                                        impl=impl)).shape == (0,)
+    got = np.asarray(ops.refine_tracks(pts0, rows0, cov, 7, impl=impl))
+    assert got.shape == (7,) and not got.any()
+    # points exist but the cover is empty → nothing can match
+    rng = np.random.default_rng(0)
+    _, _, pts, rows, _ = _refine_case(rng, 16, 6, 1)
+    assert not np.asarray(ops.refine_tracks(pts, rows, cov, 16,
+                                            impl=impl)).any()
+
+
 # ------------------------------------------------------ flash attention
 
 def _fa_case(b, hq, hkv, sq, skv, d, dtype=np.float32, **kw):

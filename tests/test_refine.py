@@ -1,0 +1,272 @@
+"""Device-side ragged track refine: backend op byte parity (numpy oracle
+vs jax kernel path) on ragged/empty tracks and word-boundary doc counts,
+the wave launch-count contract including the refine launch, device-side
+ragged column gathers, and ``tesseract_stats`` edge cases."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import fdb
+from repro.data.synthetic import city_region
+from repro.exec import AdHocEngine, Catalog, JaxBackend, get_backend
+from repro.fdb import build_fdb
+from repro.fdb.schema import Field, Schema, DOUBLE, INT, MESSAGE
+from repro.geo import AreaTree, mercator as M
+from repro.kernels import ops
+from repro.tess import Tesseract, tesseract_stats
+
+pytestmark = pytest.mark.tesseract
+
+RNG = np.random.default_rng(17)
+
+
+def _track_schema() -> Schema:
+    return Schema("Walks", [
+        Field("id", INT, indexes=("tag",)),
+        Field("track", MESSAGE, fields=[
+            Field("lat", DOUBLE, repeated=True),
+            Field("lng", DOUBLE, repeated=True),
+            Field("t", DOUBLE, repeated=True)],
+            indexes=("spacetime",),
+            index_params={"level": 6, "bucket_s": 900.0, "epoch": 0.0}),
+    ])
+
+
+def _walks(n, rng, empty_every=7):
+    """Random ragged tracks around the bay; every ``empty_every``-th doc
+    has an empty track (the refine must return False for those)."""
+    recs = []
+    for i in range(n):
+        ln = 0 if (empty_every and i % empty_every == 0) \
+            else int(rng.integers(1, 14))
+        lat = rng.uniform(37.2, 38.0, ln)
+        lng = rng.uniform(-122.6, -121.8, ln)
+        t = np.sort(rng.uniform(0.0, 3 * 86400.0, ln))
+        recs.append({"id": i, "track": {"lat": lat.tolist(),
+                                        "lng": lng.tolist(),
+                                        "t": t.tolist()}})
+    return recs
+
+
+def _region(rng, d=2_000_000):
+    ix, iy = M.latlng_to_xy(rng.uniform(37.2, 38.0),
+                            rng.uniform(-122.6, -121.8))
+    return AreaTree.from_box(int(ix) - d, int(iy) - d,
+                             int(ix) + d, int(iy) + d, max_level=7)
+
+
+@pytest.fixture(scope="module")
+def walks_db():
+    # word-boundary shard sizes: 32-bit bitmap words must not leak pad docs
+    sizes = [32, 31, 64, 65, 1, 0, 33]
+    recs = _walks(sum(sizes), RNG)
+    bounds = np.cumsum([0] + sizes)
+    key = lambda r: int(np.searchsorted(bounds, r["id"], "right") - 1)
+    db = build_fdb("Walks", _track_schema(), recs,
+                   num_shards=len(sizes), shard_key=key)
+    assert [s.n for s in db.shards] == sizes
+    return db
+
+
+# -------------------------------------------------------- backend op parity
+
+@pytest.mark.parametrize("n_constraints", [1, 2, 3])
+def test_refine_tracks_backend_parity(walks_db, n_constraints):
+    """numpy ≡ jax per-shard refine on ragged/empty tracks, with and
+    without a candidate restriction."""
+    npb, jxb = get_backend("numpy"), get_backend("jax")
+    jxb.prime_fdb(walks_db)
+    rng = np.random.default_rng(n_constraints)
+    cons = [(_region(rng), float(rng.uniform(0, 86400.0)),
+             float(rng.uniform(86400.0, 3 * 86400.0)))
+            for _ in range(n_constraints)]
+    some_hits = 0
+    for shard in walks_db.shards:
+        cand = rng.random(shard.n) < 0.7
+        for candidates in (None, cand):
+            a = npb.refine_tracks(shard.batch, "track", cons, candidates)
+            b = jxb.refine_tracks(shard.batch, "track", cons, candidates)
+            assert a.dtype == np.bool_ and b.dtype == np.bool_
+            assert np.array_equal(a, b)
+        some_hits += int(a.sum())
+        # empty tracks can never satisfy a constraint
+        sp = shard.batch["track.lat"].row_splits
+        assert not a[np.diff(sp) == 0].any()
+    assert some_hits > 0
+
+
+def test_refine_tracks_batched_matches_per_shard(walks_db):
+    """Wave-stacked refine ≡ loop-over-shards oracle, empty shard incl."""
+    rng = np.random.default_rng(5)
+    cons = [(_region(rng), 0.0, 2 * 86400.0),
+            (_region(rng), 86400.0, 3 * 86400.0)]
+    batches = [s.batch for s in walks_db.shards]
+    cands = [rng.random(b.n) < 0.8 for b in batches]
+    oracle = get_backend("numpy")
+    want = [oracle.refine_tracks(b, "track", cons, c)
+            for b, c in zip(batches, cands)]
+    for bname in ("numpy", "jax"):
+        be = get_backend(bname)
+        be.prime_fdb(walks_db)
+        got = be.refine_tracks_batched(batches, "track", cons, cands)
+        for g, w in zip(got, want):
+            assert np.array_equal(g, w), bname
+
+
+def test_refine_empty_region_and_window(walks_db):
+    """Empty cover / inverted window kill every doc on both backends."""
+    for bname in ("numpy", "jax"):
+        be = get_backend(bname)
+        for cons in ([(AreaTree.empty(), 0.0, 1e9)],
+                     [(_region(np.random.default_rng(0)), 5.0, 1.0)]):
+            masks = be.refine_tracks_batched(
+                [s.batch for s in walks_db.shards], "track", cons)
+            assert not any(m.any() for m in masks), (bname, cons)
+
+
+# --------------------------------------------------- engine + launch counts
+
+def _tess(rng):
+    return Tesseract(_region(rng), 0.0, 2 * 86400.0).also(
+        _region(rng), 43200.0, 3 * 86400.0)
+
+
+def test_engine_refine_parity_and_launch_contract(walks_db):
+    cat = Catalog(server_slots=8)
+    cat.register(walks_db)
+    rng = np.random.default_rng(11)
+    tess = _tess(rng)
+    flow = fdb("Walks").tesseract(tess)
+    ids = {}
+    wave = 3
+    for bname in ("numpy", "jax"):
+        eng = AdHocEngine(cat, num_servers=2, backend=bname, wave=wave)
+        res = eng.collect(flow)
+        ids[bname] = sorted(res.batch["id"].values.tolist())
+    assert ids["numpy"] == ids["jax"]
+    assert len(ids["numpy"]) > 0
+
+    # the refine rides the wave contract: ⌈shards/wave⌉ launches per query,
+    # one selection compact (the refine mask feeds it), zero per-shard ops
+    eng = AdHocEngine(cat, num_servers=2, backend="jax", wave=wave)
+    eng.collect(flow)                          # warm
+    ops.reset_launch_counts()
+    eng.collect(flow)
+    lc = ops.launch_counts()
+    waves = math.ceil(walks_db.num_shards / wave)
+    assert lc.get("bitmap_intersect_batched") == waves
+    assert lc.get("refine_tracks_batched") == waves
+    assert lc.get("compact_batched") == waves
+    assert lc.get("refine_tracks", 0) == 0
+    assert lc.get("compact", 0) == 0
+
+
+def test_refine_without_spacetime_index():
+    """InSpaceTime over an unindexed track still routes through the refine
+    op (full scan + exact pass) and matches across backends."""
+    schema = Schema("Plain", [
+        Field("id", INT, indexes=("tag",)),
+        Field("track", MESSAGE, fields=[
+            Field("lat", DOUBLE, repeated=True),
+            Field("lng", DOUBLE, repeated=True),
+            Field("t", DOUBLE, repeated=True)])])
+    recs = _walks(60, np.random.default_rng(2))
+    cat = Catalog()
+    cat.register(build_fdb("Plain", schema, recs, num_shards=3))
+    from repro.core.planner import plan_flow
+    rng = np.random.default_rng(3)
+    tess = Tesseract(_region(rng), 0.0, 3 * 86400.0)
+    flow = fdb("Plain").find(tess.expr())
+    plan = plan_flow(flow, cat)
+    assert plan.probes == [] and len(plan.refines) == 1
+    ids = {}
+    for bname in ("numpy", "jax"):
+        res = AdHocEngine(cat, num_servers=2, backend=bname).collect(flow)
+        ids[bname] = sorted(res.batch["id"].values.tolist())
+    assert ids["numpy"] == ids["jax"]
+    assert len(ids["numpy"]) > 0
+
+
+def test_track_pack_cache_lifecycle():
+    """Packed track buffers are only cached when tied to a primed FDb
+    (released by its finalizer); refining never-primed batches must not
+    pin entries in the backend forever."""
+    rng = np.random.default_rng(9)
+    cons = [(_region(rng), 0.0, 3 * 86400.0)]
+    be = JaxBackend()
+    db = build_fdb("W1", _track_schema(), _walks(20, rng), num_shards=2)
+    masks = be.refine_tracks_batched([s.batch for s in db.shards],
+                                     "track", cons)
+    assert len(masks) == 2
+    assert len(be._track_packs) == 0           # unprimed → no pinning
+    be.prime_fdb(db)
+    be.refine_tracks(db.shards[0].batch, "track", cons)
+    assert len(be._track_packs) == db.num_shards
+    del db, masks                              # finalizer drops the packs
+    assert len(be._track_packs) == 0
+    assert len(be.device_cache) == 0
+
+
+# ------------------------------------------------- device-side ragged gather
+
+def test_device_ragged_gather_parity(walks_db):
+    """Repeated (values, row_splits) columns gather from device-resident
+    buffers — values, splits, and dtypes byte-equal to the host gather."""
+    be = JaxBackend()
+    be.prime_fdb(walks_db)
+    shard = walks_db.shards[2]
+    before = be.device_cache.hits
+    for ids in (np.array([], np.int64),
+                np.array([3], np.int64),
+                np.sort(RNG.choice(shard.n, shard.n // 2, replace=False))):
+        paths = shard.batch.paths()
+        dev = be.gather_columns(shard.batch, paths, ids)
+        host = shard.batch.select_paths(paths).gather(ids)
+        assert dev.n == host.n
+        for p in paths:
+            assert dev[p].values.dtype == host[p].values.dtype, p
+            assert np.array_equal(dev[p].values, host[p].values), p
+            if host[p].row_splits is None:
+                assert dev[p].row_splits is None
+            else:
+                assert np.array_equal(dev[p].row_splits,
+                                      host[p].row_splits), p
+    assert be.device_cache.hits > before       # ragged reads hit residency
+
+
+# ------------------------------------------------------- tesseract_stats
+
+def test_tesseract_stats_zero_doc_fdb():
+    """An empty FDb has pruned nothing: pruning must report 0.0, not 1.0."""
+    db = build_fdb("Empty", _track_schema(), [], num_shards=3)
+    stats = tesseract_stats(db, _tess(np.random.default_rng(0)))
+    assert stats["docs"] == 0
+    assert stats["candidates"] == 0 and stats["refined"] == 0
+    assert stats["pruning"] == 0.0
+
+
+def test_tesseract_stats_matches_engine(walks_db):
+    cat = Catalog()
+    cat.register(walks_db)
+    tess = _tess(np.random.default_rng(11))
+    for bname in ("numpy", "jax"):
+        stats = tesseract_stats(walks_db, tess, backend=bname)
+        res = AdHocEngine(cat, num_servers=2, backend=bname).collect(
+            fdb("Walks").tesseract(tess))
+        assert stats["docs"] == walks_db.num_docs
+        assert res.batch.n == stats["refined"]
+        assert res.profile.rows_selected == stats["candidates"]
+        assert stats["refined"] <= stats["candidates"]
+
+
+def test_engine_out_of_range_window(walks_db):
+    """A window entirely before the index epoch selects nothing (and the
+    probe short-circuits instead of probing bucket-0 postings)."""
+    cat = Catalog()
+    cat.register(walks_db)
+    tess = Tesseract(city_region("SF"), -9000.0, -100.0)
+    for bname in ("numpy", "jax"):
+        res = AdHocEngine(cat, num_servers=2, backend=bname).collect(
+            fdb("Walks").tesseract(tess))
+        assert res.batch.n == 0

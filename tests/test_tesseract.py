@@ -102,6 +102,56 @@ def test_spacetime_index_empty_cases(trips_world):
                            n).size == 0
 
 
+def test_spacetime_index_out_of_range_windows(trips_world):
+    """Windows entirely outside the representable bucket range must return
+    empty instead of aliasing into the clamped boundary buckets'
+    postings (regression: pre-epoch windows used to probe bucket 0)."""
+    trips = trips_world["trips"]
+    db = build_fdb("T", trips_world["trips_schema"], trips, num_shards=2)
+    idx = db.shards[0].index("track", "spacetime")   # epoch=0.0 (schema)
+    n = db.shards[0].n
+    region = city_region("SF")
+    # entirely before epoch: b1 < 0 — not bucket 0
+    assert idx._bucket_range(-5000.0, -1.0) is None
+    assert ids_from_bitmap(idx.lookup(region, -5000.0, -1.0), n).size == 0
+    # entirely past the last representable bucket: b0 > 2^20 − 1
+    horizon = idx.epoch + (1 << 20) * idx.bucket_s
+    assert idx._bucket_range(horizon + 1e9, horizon + 2e9) is None
+    assert ids_from_bitmap(idx.lookup(region, horizon + 1e9, horizon + 2e9),
+                           n).size == 0
+    # straddling epoch: clamps to bucket 0 and stays conservative
+    assert idx._bucket_range(-5000.0, 1.0) == (0, 0)
+    week = ids_from_bitmap(idx.lookup(region, 0.0, 7 * 86400.0), n)
+    straddle = ids_from_bitmap(idx.lookup(region, -5000.0, 900.0), n)
+    assert set(straddle.tolist()) <= set(week.tolist())
+
+
+def test_spacetime_index_clamped_epoch_stays_conservative(trips_world):
+    """If build clamped pre-epoch points into bucket 0 (epoch chosen above
+    the data's earliest t), a pre-epoch window must collapse onto bucket 0
+    and stay a superset of the exact matches — find() may never silently
+    drop docs that filter() returns."""
+    trips = trips_world["trips"]
+    lo_t = min(min(tr["track"]["t"], default=np.inf) for tr in trips)
+    epoch = float(lo_t) + 4 * 86400.0          # violates epoch ≤ min t
+    sh = build_fdb("T", trips_world["trips_schema"], trips,
+                   num_shards=1).shards[0]
+    tt = sh.batch["track.t"]
+    idx = SpaceTimeIndex.build(sh.batch["track.lat"].values,
+                               sh.batch["track.lng"].values, tt.values,
+                               sh.n, tt.row_splits, level=6,
+                               bucket_s=900.0, epoch=epoch)
+    assert idx.clamped_lo and not idx.clamped_hi
+    region = city_region("SF")
+    t0, t1 = float(lo_t), float(lo_t) + 86400.0      # entirely pre-epoch
+    assert idx._bucket_range(t0, t1) == (0, 0)       # boundary collapse
+    cand = set(ids_from_bitmap(idx.lookup(region, t0, t1), sh.n).tolist())
+    pred = InSpaceTime(FieldRef("track"), region, t0, t1)
+    v = eval_expr(pred, EvalContext(sh.batch))
+    exact = set(np.nonzero(np.asarray(v.values, dtype=bool))[0].tolist())
+    assert exact and exact <= cand
+
+
 def test_spacetime_index_time_discrimination(trips_world):
     """Same region, disjoint window → candidates don't leak across time."""
     trips = trips_world["trips"]
@@ -121,9 +171,27 @@ def test_spacetime_index_time_discrimination(trips_world):
 def test_planner_compiles_probes_plus_refine(trips_catalog, two_leg_tess):
     plan = plan_flow(fdb("Trips").tesseract(two_leg_tess), trips_catalog)
     assert [p.kind for p in plan.probes] == ["spacetime", "spacetime"]
-    # conservative probes keep the exact constraint in the residual
-    assert plan.residual is not None
+    # conservative probes compile the exact constraints into one refine
+    # spec over the track field (device-side pass), not the residual
+    assert plan.residual is None
+    assert len(plan.refines) == 1
+    assert plan.refines[0].path == "track"
+    assert len(plan.refines[0].constraints) == 2
+    # raw collect still reads every stored column, tracks included
     assert {"track.lat", "track.lng", "track.t"} <= set(plan.source_paths)
+    assert "track refine" in plan.describe()
+
+
+def test_planner_refine_composes_with_residual(trips_catalog, two_leg_tess):
+    """Non-indexable conjuncts stay in the residual next to the refine."""
+    flow = fdb("Trips").find(two_leg_tess.expr()
+                             & (P.duration_s * 2.0 > 100.0))
+    plan = plan_flow(flow, trips_catalog)
+    assert len(plan.refines) == 1
+    assert plan.residual is not None
+    eng = AdHocEngine(trips_catalog, num_servers=4)
+    res = eng.collect(flow)
+    assert np.all(res.batch["duration_s"].values * 2.0 > 100.0)
 
 
 def test_tesseract_composes_with_other_conjuncts(trips_catalog,

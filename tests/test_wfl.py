@@ -68,10 +68,11 @@ def test_find_pred_split(catalog):
             & BETWEEN(P.speed_limit, 30, 60)
             & (P.city == "SF")
             & (P.speed_limit * 2.0 > 80.0))      # not indexable
-    probes, residual = split_find_pred(pred._expr,
+    probes, refines, residual = split_find_pred(pred._expr,
                                        catalog.schema_of("Roads"))
     kinds = sorted(p.kind for p in probes)
     assert kinds == ["location", "range", "tag"]
+    assert refines == []          # no space-time conjuncts → no refine
     assert residual is not None
 
 
@@ -92,7 +93,7 @@ def test_planner_minimal_read_set(catalog):
 def test_or_pushdown_tag_lookup_any(catalog, engine):
     """Disjunctions of tag lookups on one field → bitmap OR, no residual."""
     pred = (P.city == "SF") | IN(P.city, ["OAK"])
-    probes, residual = split_find_pred(pred._expr,
+    probes, refines, residual = split_find_pred(pred._expr,
                                        catalog.schema_of("Roads"))
     assert [p.kind for p in probes] == ["tag"]
     assert probes[0].args == (("SF", "OAK"),)
@@ -108,16 +109,16 @@ def test_or_pushdown_tag_lookup_any(catalog, engine):
 def test_or_pushdown_rejects_mixed_or_unindexed(catalog):
     schema = catalog.schema_of("Roads")
     # mixed fields: stays residual
-    probes, residual = split_find_pred(
+    probes, refines, residual = split_find_pred(
         ((P.city == "SF") | (P.id == 3))._expr, schema)
     assert probes == [] and residual is not None
     # non-tag field (speed_limit is range-indexed only): stays residual
-    probes, residual = split_find_pred(
+    probes, refines, residual = split_find_pred(
         ((P.speed_limit == 30.0) | (P.speed_limit == 50.0))._expr, schema)
     assert all(p.kind != "tag" for p in probes)
     assert residual is not None
     # OR with a non-leaf disjunct: stays residual
-    probes, residual = split_find_pred(
+    probes, refines, residual = split_find_pred(
         ((P.city == "SF") | (P.speed_limit * 2.0 > 80.0))._expr, schema)
     assert probes == [] and residual is not None
 
