@@ -26,12 +26,11 @@ ci:                   ## CI leg: tier-1 under $REPRO_EXEC_BACKEND (numpy|jax)
 ci-kernels:           ## CI extra: interpret-vs-reference kernel-body sweeps
 	$(PY) -m pytest -x -q tests/test_kernels.py tests/test_refine.py
 
-ci-bench:             ## CI smoke: tiny backends suite, exits non-zero on parity fail
-	$(PY) -m benchmarks.run --only backends --json --scale 0.05
+ci-bench:             ## CI smoke: tiny backends+tesseract suites (Q1–Q9), exits non-zero on parity fail
+	$(PY) -m benchmarks.run --only backends,tesseract --json --scale 0.05
 
-bench-regression:     ## compare fresh BENCH_backends.json vs committed baseline
-	$(PY) benchmarks/check_regression.py --current BENCH_backends.json \
-	  --baseline benchmarks/baselines/BENCH_backends.json
+bench-regression:     ## blocking gate: fresh BENCH_{backends,tesseract}.json vs committed baselines (>1.5x/query fails)
+	$(PY) benchmarks/check_regression.py --suite backends,tesseract
 
 bench:                ## full benchmark harness
 	$(PY) -m benchmarks.run
@@ -39,5 +38,5 @@ bench:                ## full benchmark harness
 bench-backends:       ## numpy-vs-jax backend timing + parity report
 	$(PY) -m benchmarks.run --only backends
 
-bench-tesseract:      ## Q6/Q7 trip queries: pruning ratio + backend parity
+bench-tesseract:      ## Q6–Q9 trip queries (Q8/Q9 ordered): pruning + backend parity
 	$(PY) -m benchmarks.run --only tesseract --json

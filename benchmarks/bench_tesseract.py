@@ -1,4 +1,4 @@
-"""Tesseract trip-query benchmark (Q6–Q7): pruning ratio + backend parity.
+"""Tesseract trip-query benchmark (Q6–Q9): pruning ratio + backend parity.
 
 For each trip query the report shows
 
@@ -15,6 +15,13 @@ For each trip query the report shows
     query — the per-shard host refine is gone from the hot loop (zero
     ``refine_tracks`` single-shard dispatches).
 
+Q8–Q9 are the *ordered* (A-then-B) variants of Q6–Q7: the same legs
+sequenced with ``Tesseract.then()``.  Their parity verdict additionally
+compares the per-(doc × constraint) **first-hit timestamp tables** across
+backends byte-for-byte (the table the ordering DAG is resolved against),
+and their launch evidence shows ordering rides the same fused refine
+launches — no extra dispatches.
+
 The pruning ratio is the subsystem's reason to exist: for selective
 regions the index must prune ≥ 90 % of trips before the exact pass.
 """
@@ -26,14 +33,26 @@ import time
 import numpy as np
 
 from repro.data.synthetic import generate_world
-from repro.exec import AdHocEngine, Catalog
+from repro.exec import AdHocEngine, Catalog, get_backend
 from repro.fdb import build_fdb
 from repro.kernels import ops
 from repro.tess import tesseract_stats
 
-from .queries import TRIP_QUERIES, q_tesseract, tesseract_for
+from .queries import (ORDERED_TRIP_QUERIES, TRIP_QUERIES, q_tesseract,
+                      tesseract_for)
 
 __all__ = ["run"]
+
+
+def _first_hit_parity(db, tess) -> bool:
+    """Byte parity of the per-shard first-hit tables across backends."""
+    cons = list(tess.constraints)
+    batches = [sh.batch for sh in db.shards]
+    _, tab_n = get_backend("numpy").refine_tracks_batched(
+        batches, tess.field, cons, with_first_hits=True)
+    _, tab_j = get_backend("jax").refine_tracks_batched(
+        batches, tess.field, cons, with_first_hits=True)
+    return all(np.array_equal(a, b) for a, b in zip(tab_n, tab_j))
 
 
 def _time(fn, repeats=3):
@@ -48,6 +67,10 @@ def _time(fn, repeats=3):
 
 def run(scale: float = 0.5, print_fn=print, raise_on_mismatch: bool = True):
     rows: list = []
+    # floor the world size: below ~0.2 the synthetic week holds so few
+    # trips that Q6–Q9 select nothing, which would turn the parity and
+    # pruning evidence vacuous (the CI smoke runs --scale 0.05)
+    scale = max(scale, 0.2)
     # trips-only catalog: skip the (dominant) ingest/index cost of the
     # road/observation datasets the trip queries never touch
     world = generate_world(scale=scale)
@@ -57,8 +80,12 @@ def run(scale: float = 0.5, print_fn=print, raise_on_mismatch: bool = True):
     db = cat.get("Trips")
     engines = {b: AdHocEngine(cat, backend=b) for b in ("numpy", "jax")}
     all_parity = True
-    for qname, legs in TRIP_QUERIES.items():
-        flow = q_tesseract(legs)
+    all_queries = {**{q: (legs, False) for q, legs in TRIP_QUERIES.items()},
+                   **{q: (legs, True)
+                      for q, legs in ORDERED_TRIP_QUERIES.items()}}
+    for qname, (legs, ordered) in all_queries.items():
+        flow = q_tesseract(legs, ordered=ordered)
+        tess = tesseract_for(legs, ordered=ordered)
         results, times = {}, {}
         for bname, eng in engines.items():
             res, ms = _time(lambda e=eng: e.collect(flow), repeats=2)
@@ -66,10 +93,13 @@ def run(scale: float = 0.5, print_fn=print, raise_on_mismatch: bool = True):
         ids = {b: np.sort(r.batch["id"].values)
                for b, r in results.items()}
         # refine-op byte parity: identical per-shard candidate/refined
-        # counts across backends (kernel mask ≡ numpy oracle mask)
-        stats = tesseract_stats(db, tesseract_for(legs), backend="numpy")
-        stats_j = tesseract_stats(db, tesseract_for(legs), backend="jax")
+        # counts across backends (kernel mask ≡ numpy oracle mask); for
+        # ordered queries also the first-hit tables byte-for-byte
+        stats = tesseract_stats(db, tess, backend="numpy")
+        stats_j = tesseract_stats(db, tess, backend="jax")
         refine_parity = stats["per_shard"] == stats_j["per_shard"]
+        if ordered:
+            refine_parity &= _first_hit_parity(db, tess)
         # launch evidence: the exact pass is ⌈shards/wave⌉ fused device
         # launches per query — no per-shard host refine remains
         ops.reset_launch_counts()
@@ -96,6 +126,7 @@ def run(scale: float = 0.5, print_fn=print, raise_on_mismatch: bool = True):
                         f"candidates={stats['candidates']} "
                         f"refined={stats['refined']} "
                         f"pruning={stats['pruning']:.3f} "
+                        f"ordered={1 if ordered else 0} "
                         f"refine_launches={refine_launches}/{waves}waves "
                         f"parity={'OK' if parity else 'MISMATCH'}")})
         print_fn(f"  {qname}: {rows[-1]['derived']}")

@@ -1,25 +1,38 @@
 #!/usr/bin/env python
-"""Compare a fresh ``BENCH_<suite>.json`` against a committed baseline.
+"""Compare fresh ``BENCH_<suite>.json`` runs against committed baselines.
 
-Fails (exit 1) when any query's wall time regressed by more than
-``--threshold`` (default 1.5×) versus the baseline.  Rows are matched by
-name; rows missing from either side, non-numeric rows (parity summaries),
-and rows faster than ``--min-us`` (dispatch noise on shared CI runners)
-are reported but never fail the check.
+Fails (exit 1) when
 
-CI wires this as a *non-blocking* report step to start (the baselines are
-laptop-class numbers; absolute CI-runner variance is still being learned)
-— flip ``continue-on-error`` off in ``.github/workflows/ci.yml`` once the
-numbers settle.  Runs on stdlib only, no repo imports:
+  * any query's wall time regressed by more than ``--threshold`` (default
+    1.5×) versus the baseline, or
+  * the two sides disagree about which queries exist — a query in the
+    baseline but missing from the current run, or vice versa, is printed
+    as a readable two-column diff and fails the check (an out-of-date
+    baseline must be regenerated and committed alongside the change).
 
+Rows are matched by name; non-numeric rows (parity summaries) and rows
+faster than ``--min-us`` (dispatch noise on shared CI runners) are
+reported but never fail the check.
+
+CI wires this as a **blocking** PR gate (the ``bench-smoke`` job): pass
+the ``bench-skip`` PR label or put ``[bench-skip]`` in the head commit
+message to skip it for an intentional perf trade.  Runs on stdlib only,
+no repo imports:
+
+    # one suite, explicit files
     python benchmarks/check_regression.py \
         --current BENCH_backends.json \
         --baseline benchmarks/baselines/BENCH_backends.json
+
+    # several suites, conventional paths (BENCH_<s>.json in --current-dir
+    # vs benchmarks/baselines/BENCH_<s>.json)
+    python benchmarks/check_regression.py --suite backends,tesseract
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 
@@ -34,49 +47,92 @@ def _rows_by_name(path: str) -> dict:
     return out
 
 
-def main() -> int:
+def check_pair(current: str, baseline: str, threshold: float,
+               min_us: float) -> int:
+    """Compare one (current, baseline) file pair; returns the number of
+    failures (regressions + row-set mismatches)."""
+    cur = _rows_by_name(current)
+    base = _rows_by_name(baseline)
+    regressions = []
+    print(f"{'query':44s} {'baseline':>12s} {'current':>12s} {'ratio':>7s}")
+    for name in sorted(set(base) & set(cur)):
+        b, c = base[name], cur[name]
+        ratio = c / b if b > 0 else float("inf")
+        flag = ""
+        if max(b, c) < min_us:
+            flag = "  (below --min-us, informational)"
+        elif ratio > threshold:
+            flag = "  REGRESSION"
+            regressions.append((name, b, c, ratio))
+        print(f"{name:44s} {b:10.1f}µs {c:10.1f}µs {ratio:6.2f}x{flag}")
+    # row-set mismatch: fail with a readable diff instead of silently
+    # skipping (or KeyError-ing) — the baseline must track the suite
+    missing_cur = sorted(set(base) - set(cur))
+    missing_base = sorted(set(cur) - set(base))
+    if missing_cur or missing_base:
+        print(f"\nrow-set mismatch between {current} and {baseline}:",
+              file=sys.stderr)
+        for name in missing_cur:
+            print(f"  - {name:42s} in baseline, missing from current run",
+                  file=sys.stderr)
+        for name in missing_base:
+            print(f"  + {name:42s} in current run, missing from baseline "
+                  f"(regenerate + commit the baseline)", file=sys.stderr)
+    if regressions:
+        print(f"\n{len(regressions)} regression(s) past "
+              f"{threshold:.2f}x:", file=sys.stderr)
+        for name, b, c, ratio in regressions:
+            print(f"  {name}: {b:.1f}µs → {c:.1f}µs ({ratio:.2f}x)",
+                  file=sys.stderr)
+    n_fail = len(regressions) + len(missing_cur) + len(missing_base)
+    if n_fail == 0:
+        print(f"\nno wall-time regressions past {threshold:.2f}x "
+              f"({len(base)} baseline rows)")
+    return n_fail
+
+
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
-    ap.add_argument("--current", required=True,
-                    help="fresh BENCH_<suite>.json")
-    ap.add_argument("--baseline", required=True,
-                    help="committed baseline BENCH_<suite>.json")
+    ap.add_argument("--suite", default=None,
+                    help="comma-separated suite names; compares "
+                         "<current-dir>/BENCH_<s>.json against "
+                         "<baseline-dir>/BENCH_<s>.json for each")
+    ap.add_argument("--current-dir", default=".",
+                    help="directory holding fresh BENCH_<suite>.json files")
+    ap.add_argument("--baseline-dir", default="benchmarks/baselines",
+                    help="directory holding committed baselines")
+    ap.add_argument("--current", default=None,
+                    help="fresh BENCH_<suite>.json (single-pair mode)")
+    ap.add_argument("--baseline", default=None,
+                    help="committed baseline (single-pair mode)")
     ap.add_argument("--threshold", type=float, default=1.5,
                     help="fail when current > threshold × baseline")
     ap.add_argument("--min-us", type=float, default=500.0,
                     help="ignore rows faster than this (dispatch noise)")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
-    cur = _rows_by_name(args.current)
-    base = _rows_by_name(args.baseline)
-    regressions, skipped = [], []
-    print(f"{'query':44s} {'baseline':>12s} {'current':>12s} {'ratio':>7s}")
-    for name in sorted(base):
-        if name not in cur:
-            skipped.append(f"{name} (missing from current)")
-            continue
-        b, c = base[name], cur[name]
-        ratio = c / b if b > 0 else float("inf")
-        flag = ""
-        if max(b, c) < args.min_us:
-            flag = "  (below --min-us, informational)"
-        elif ratio > args.threshold:
-            flag = "  REGRESSION"
-            regressions.append((name, b, c, ratio))
-        print(f"{name:44s} {b:10.1f}µs {c:10.1f}µs {ratio:6.2f}x{flag}")
-    for name in sorted(set(cur) - set(base)):
-        skipped.append(f"{name} (new, no baseline)")
-    for s in skipped:
-        print(f"  note: {s}")
-    if regressions:
-        print(f"\n{len(regressions)} regression(s) past "
-              f"{args.threshold:.2f}x:", file=sys.stderr)
-        for name, b, c, ratio in regressions:
-            print(f"  {name}: {b:.1f}µs → {c:.1f}µs ({ratio:.2f}x)",
-                  file=sys.stderr)
-        return 1
-    print("\nno wall-time regressions past "
-          f"{args.threshold:.2f}x ({len(base)} baseline rows)")
-    return 0
+    if bool(args.suite) == bool(args.current):
+        ap.error("pass either --suite or --current/--baseline")
+    if args.current and not args.baseline:
+        ap.error("--current needs --baseline")
+
+    pairs = [(args.current, args.baseline)] if args.current else [
+        (os.path.join(args.current_dir, f"BENCH_{s}.json"),
+         os.path.join(args.baseline_dir, f"BENCH_{s}.json"))
+        for s in args.suite.split(",") if s]
+    failures = 0
+    for current, baseline in pairs:
+        print(f"== {current} vs {baseline} ==")
+        for path in (current, baseline):
+            if not os.path.exists(path):
+                print(f"  MISSING FILE: {path}", file=sys.stderr)
+                failures += 1
+                break
+        else:
+            failures += check_pair(current, baseline, args.threshold,
+                                   args.min_us)
+        print()
+    return 1 if failures else 0
 
 
 if __name__ == "__main__":

@@ -9,7 +9,10 @@ families:
     with respect to its mean — the *coefficient of variation*",
   * Q6–Q7 — Tesseract trip queries (§2): "all trips passing through region
     A during time window T1 and region B during T2", served by the
-    per-shard ``spacetime`` index (:mod:`repro.tess`).
+    per-shard ``spacetime`` index (:mod:`repro.tess`),
+  * Q8–Q9 — *ordered* Tesseract trip queries: the same legs sequenced with
+    ``Tesseract.then()`` ("through A during T1 **and then** B during T2"),
+    resolved by the refine kernel's per-constraint first-hit timestamps.
 """
 from __future__ import annotations
 
@@ -22,7 +25,8 @@ from repro.geo import AreaTree
 from repro.tess import Tesseract
 
 __all__ = ["build_catalog", "region_for", "q_variability", "QUERIES",
-           "tesseract_for", "q_tesseract", "TRIP_QUERIES", "TRIP_DAY"]
+           "tesseract_for", "q_tesseract", "TRIP_QUERIES", "TRIP_DAY",
+           "ORDERED_TRIP_QUERIES"]
 
 
 def build_catalog(scale: float = 1.0, num_shards: int = 20,
@@ -111,23 +115,28 @@ QUERIES = {
 TRIP_DAY = 2
 
 
-def tesseract_for(legs, day: int = TRIP_DAY) -> Tesseract:
+def tesseract_for(legs, day: int = TRIP_DAY,
+                  ordered: bool = False) -> Tesseract:
     """``legs``: sequence of ``(cities, hour0, hour1)`` constraints — the
     trip must pass through ``region_for(cities)`` during ``[hour0, hour1]``
-    of ``day`` (track ``t`` is seconds since the week's epoch)."""
+    of ``day`` (track ``t`` is seconds since the week's epoch).
+    ``ordered`` sequences the legs with ``then()``: each leg's first hit
+    must come strictly before the next leg's (A-then-B trip queries)."""
     tess = None
     for cities, h0, h1 in legs:
         region = region_for(cities)
         t0 = day * 86400.0 + h0 * 3600.0
         t1 = day * 86400.0 + h1 * 3600.0
         tess = Tesseract(region, t0, t1) if tess is None \
-            else tess.also(region, t0, t1)
+            else (tess.then(region, t0, t1) if ordered
+                  else tess.also(region, t0, t1))
     return tess
 
 
-def q_tesseract(legs, day: int = TRIP_DAY):
+def q_tesseract(legs, day: int = TRIP_DAY, ordered: bool = False):
     """Trip ids + durations matching a multi-constraint Tesseract query."""
-    return (fdb("Trips").tesseract(tesseract_for(legs, day))
+    return (fdb("Trips").tesseract(tesseract_for(legs, day,
+                                                 ordered=ordered))
             .map(lambda p: proto(id=p.id, day=p.day,
                                  duration_s=p.duration_s)))
 
@@ -136,4 +145,13 @@ def q_tesseract(legs, day: int = TRIP_DAY):
 TRIP_QUERIES = {
     "Q6": ((("SF",), 6, 12), (("Berkeley",), 6, 14)),
     "Q7": ((BAY_AREA, 6, 12), (("LA",), 6, 18)),
+}
+
+#: ordered (A-then-B) variants: Q8 sequences Q6's commute (SF first, then
+#: Berkeley), Q9 sequences Q7's long-haul (Bay Area first, then LA) — the
+#: synthetic inter-city trips run origin-city-first, so ordering keeps the
+#: true A→B trips and drops the B→A ones Q6/Q7 also admit
+ORDERED_TRIP_QUERIES = {
+    "Q8": TRIP_QUERIES["Q6"],
+    "Q9": TRIP_QUERIES["Q7"],
 }

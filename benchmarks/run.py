@@ -50,7 +50,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=0.5)
     ap.add_argument("--only", default=None,
-                    help="table2|fig11|fig12|flume|kernels|backends|"
+                    help="comma-separated subset of "
+                         "table2|fig11|fig12|flume|kernels|backends|"
                          "tesseract|roofline")
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_<suite>.json per suite "
@@ -76,9 +77,14 @@ def main() -> None:
                                                  raise_on_mismatch=False),
         "roofline": lambda: roofline.run(),
     }
+    only = {s for s in (args.only or "").split(",") if s}
+    unknown = only - set(benches)
+    if unknown:
+        raise SystemExit(f"unknown --only suite(s): {sorted(unknown)}; "
+                         f"known: {sorted(benches)}")
     all_rows = []
     for name, fn in benches.items():
-        if args.only and name != args.only:
+        if only and name not in only:
             continue
         print(f"== {name} ==", flush=True)
         try:

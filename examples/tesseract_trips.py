@@ -7,6 +7,14 @@ Tesseract query through both execution backends.  The pruning report shows
 how many trips the (area-tree cell × time bucket) postings admit vs. the
 exact point-in-cover × time-window refine.
 
+The second query is the *ordered* variant: ``Tesseract.then()`` sequences
+the constraints — "through SF **and then** Berkeley" — which keeps only
+trips whose first SF hit comes strictly before their first Berkeley hit
+(SF→Berkeley commutes) and drops the Berkeley→SF direction the unordered
+``also()`` query admits.  Ordering is resolved inside the same fused
+refine pass via per-constraint first-hit timestamps; ``before(i, j)``
+builds arbitrary ordering DAGs on top of ``also()``.
+
 Run:  PYTHONPATH=src python examples/tesseract_trips.py
 """
 from repro.core import P, fdb, proto
@@ -52,6 +60,19 @@ def main():
     for r in res.to_records():
         print(f"  trip {r['id']}: day {r['day']}, starts "
               f"{r['start_hour']:02d}:00, {r['duration_s'] / 60:.0f} min")
+
+    # Ordered: SF first, THEN Berkeley — first-hit(SF) < first-hit(Berkeley)
+    ordered = (Tesseract(city_region("SF"), day + 6 * 3600,
+                         day + 12 * 3600)
+               .then(city_region("Berkeley"), day + 6 * 3600,
+                     day + 14 * 3600))
+    print(f"\n{ordered} (SF -> Berkeley direction only)")
+    oflow = (fdb("Trips").tesseract(ordered)
+             .map(lambda p: proto(id=p.id)).sort_asc(P.id))
+    for backend in ("numpy", "jax"):
+        res = AdHocEngine(cat, num_servers=6, backend=backend).collect(oflow)
+        print(f"{backend:>5}: {res.batch.n} ordered trips "
+              f"{res.batch['id'].values.tolist()}")
 
 
 if __name__ == "__main__":

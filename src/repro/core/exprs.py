@@ -31,7 +31,8 @@ from .sketches import BloomFilter, IntervalSet
 
 __all__ = [
     "Expr", "FieldRef", "Lit", "External", "BinOp", "UnOp", "Between",
-    "InRegion", "InSet", "InSpaceTime", "Reduce", "GetField", "TableLookup",
+    "InRegion", "InSet", "InSpaceTime", "InSpaceTimeSeq", "Reduce",
+    "GetField", "TableLookup",
     "Func",
     "MakeProto", "ModelApply", "P", "proto", "IN", "BETWEEN",
     "vsum", "vmin", "vmax", "vcount", "vmean", "where",
@@ -121,6 +122,27 @@ class InSpaceTime(Expr):
     region: Any = dc_field(hash=False)            # AreaTree
     t0: float = 0.0
     t1: float = 0.0
+
+    def children(self):
+        return (self.field,)
+
+
+@dataclass(frozen=True)
+class InSpaceTimeSeq(Expr):
+    """Ordered Tesseract constraints over one track field (A **then** B).
+
+    Every ``(region, t0, t1)`` constraint must hit (some track point inside
+    the region's cover during the window — the plain ``InSpaceTime`` AND),
+    and for each ``(i, j)`` ordering edge the track's **first hit** of
+    constraint ``i`` (minimum timestamp among its satisfying points) must be
+    *strictly* before its first hit of constraint ``j``.  Equal first-hit
+    timestamps do not count as before (tie ⇒ edge fails).  Singular
+    (any-reduced) over the repeated track, like ``InSpaceTime``.
+    """
+    field: Expr            # FieldRef to a track (repeated lat/lng/t leaves)
+    constraints: Tuple[Tuple[Any, float, float], ...] = \
+        dc_field(hash=False, default=())      # [(AreaTree, t0, t1), …]
+    edges: Tuple[Tuple[int, int], ...] = ()   # (i, j): first_i < first_j
 
     def children(self):
         return (self.field,)
@@ -497,19 +519,44 @@ def eval_expr(expr: Expr, ctx: EvalContext) -> Val:
         keys = Mc.latlng_to_morton(lat.values, lng.values)
         return Val(expr.region.contains(keys), lat.row_splits)
     if isinstance(expr, InSpaceTime):
-        # exact Tesseract constraint: any track point in-cover AND in-window
+        # exact Tesseract constraint: the 1-constraint/no-edges case of
+        # the ordered evaluation below (one source of the hit semantics)
+        return eval_expr(InSpaceTimeSeq(
+            expr.field, ((expr.region, expr.t0, expr.t1),)), ctx)
+    if isinstance(expr, InSpaceTimeSeq):
+        # ordered Tesseract: AND of every constraint's any-hit (some track
+        # point in-cover AND in-window), plus strict first-hit ordering
+        # per edge.  First hit = min timestamp among the doc's points
+        # satisfying the constraint (+inf when none — such docs already
+        # fail the hit AND, so edges never resurrect them); float min
+        # order-matches the packed uint64 sort-key min the refine ops use
+        # for every non-NaN timestamp.
         lat = ctx.batch[expr.field.path + ".lat"]
         lng = ctx.batch[expr.field.path + ".lng"]
         tt = ctx.batch[expr.field.path + ".t"]
         keys = Mc.latlng_to_morton(lat.values, lng.values)
-        hit = expr.region.contains(keys) \
-            & (tt.values >= expr.t0) & (tt.values <= expr.t1)
-        if lat.row_splits is None:
-            return Val(np.asarray(hit, dtype=bool))
-        out = np.zeros(n, dtype=bool)
-        if hit.size:
-            row_of = np.repeat(np.arange(n), np.diff(lat.row_splits))
-            np.logical_or.at(out, row_of, hit)
+        first = np.full((n, len(expr.constraints)), np.inf) \
+            if expr.edges else None
+        out = np.ones(n, dtype=bool)
+        row_of = None if lat.row_splits is None else \
+            np.repeat(np.arange(n), np.diff(lat.row_splits))
+        for c, (region, t0, t1) in enumerate(expr.constraints):
+            hit = region.contains(keys) \
+                & (tt.values >= t0) & (tt.values <= t1)
+            if row_of is None:                  # singular location + t
+                if first is not None:
+                    first[:, c] = np.where(hit, tt.values, np.inf)
+                out &= np.asarray(hit, dtype=bool)
+                continue
+            doc_hit = np.zeros(n, dtype=bool)
+            if hit.size:
+                np.logical_or.at(doc_hit, row_of, hit)
+                if first is not None:
+                    np.minimum.at(first[:, c], row_of,
+                                  np.where(hit, tt.values, np.inf))
+            out &= doc_hit
+        for i, j in expr.edges:
+            out &= first[:, i] < first[:, j]
         return Val(out)
     if isinstance(expr, Reduce):
         a = eval_expr(expr.a, ctx)
@@ -647,7 +694,7 @@ def required_paths(expr: Expr, schema: Schema) -> List[str]:
             out.add(e.field.path + ".lat")
             out.add(e.field.path + ".lng")
             return
-        if isinstance(e, InSpaceTime):
+        if isinstance(e, (InSpaceTime, InSpaceTimeSeq)):
             out.add(e.field.path + ".lat")
             out.add(e.field.path + ".lng")
             out.add(e.field.path + ".t")
@@ -699,7 +746,7 @@ def infer_spec(expr: Expr, schema: Optional[Schema]) -> Tuple[str, bool]:
         t, r = infer_spec(expr.a, schema)
         return (BOOL, r) if expr.op == "not" else (t if expr.op in
                                                    ("neg", "abs") else DOUBLE, r)
-    if isinstance(expr, InSpaceTime):
+    if isinstance(expr, (InSpaceTime, InSpaceTimeSeq)):
         return BOOL, False            # any-reduced over the track
     if isinstance(expr, (Between, InSet, InRegion)):
         _, r = infer_spec(expr.children()[0], schema)

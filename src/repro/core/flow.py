@@ -177,10 +177,13 @@ class Flow:
         """Space-time trip selection (paper §2 Tesseract queries).
 
         ``tess`` is a :class:`repro.tess.Tesseract`; its constraints become
-        ``InSpaceTime`` conjuncts of a leading ``find()``, which the planner
-        compiles to stacked ``spacetime``-index bitmap probes plus the exact
-        point-in-cover × time-window refine.  Compose with other predicates
-        via ``find(tess.expr() & ...)`` instead when needed.
+        ``InSpaceTime`` conjuncts of a leading ``find()`` (a single
+        ``InSpaceTimeSeq`` conjunct when the builder carries ``then()`` /
+        ``before()`` ordering edges), which the planner compiles to stacked
+        ``spacetime``-index bitmap probes plus the exact point-in-cover ×
+        time-window refine — ordering resolved there via per-constraint
+        first-hit timestamps.  Compose with other predicates via
+        ``find(tess.expr() & ...)`` instead when needed.
         """
         return self._push(FindOp(_trace(tess.expr(field))))
 

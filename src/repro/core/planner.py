@@ -20,7 +20,8 @@ import numpy as np
 from ..fdb.fdb import FDb, Shard
 from ..fdb.schema import Schema
 from .exprs import (Between, BinOp, Expr, FieldRef, InRegion, InSet,
-                    InSpaceTime, Lit, MakeProto, required_paths)
+                    InSpaceTime, InSpaceTimeSeq, Lit, MakeProto,
+                    required_paths)
 from .flow import (AggregateOp, DistinctOp, FilterOp, FindOp, Flow,
                    FlattenOp, JoinOp, LimitOp, MapOp, ModelApplyOp, Op,
                    SampleOp, SortOp, SubFlowOp)
@@ -178,9 +179,17 @@ class RefineSpec:
     execution backend's ``refine_tracks`` / ``refine_tracks_batched`` op
     directly against the shard's resident CSR track buffers (one fused
     device pass), instead of a host residual-filter evaluation.
+
+    ``edges`` is the ordering DAG over the constraint list (indices into
+    ``constraints``): edge ``(i, j)`` requires the doc's *first hit* of
+    constraint ``i`` — minimum timestamp among its satisfying points — to
+    be strictly before its first hit of constraint ``j``.  The refine op
+    evaluates edges against the per-(doc × constraint) first-hit table the
+    same fused pass produces, so ordering adds no extra launches.
     """
     path: str
     constraints: List[Tuple[Any, float, float]]
+    edges: List[Tuple[int, int]] = dc_field(default_factory=list)
 
 
 def split_find_pred(pred: Expr, schema: Schema
@@ -201,6 +210,10 @@ def split_find_pred(pred: Expr, schema: Schema
         ``spacetime`` probe when the field is indexed (postings live at
         (cell × time-bucket) granularity).  They never enter the residual,
         so the exact pass runs on device instead of the host evaluator.
+        ``InSpaceTimeSeq`` (ordered Tesseract) merges into the same
+        per-path spec: its constraints append to the spec's list with one
+        conservative probe each, and its ordering edges are offset to the
+        merged indices — one fused refine launch per wave either way.
     """
     conjuncts: List[Expr] = []
 
@@ -213,15 +226,29 @@ def split_find_pred(pred: Expr, schema: Schema
 
     walk(pred)
     probes: List[IndexProbe] = []
-    refine_by_path: Dict[str, List[Tuple[Any, float, float]]] = {}
+    refine_by_path: Dict[str, Tuple[List[Tuple[Any, float, float]],
+                                    List[Tuple[int, int]]]] = {}
     residual: List[Expr] = []
     for c in conjuncts:
         if isinstance(c, InSpaceTime) and isinstance(c.field, FieldRef):
             p = _indexable(c, schema)
             if p is not None:
                 probes.append(p)
-            refine_by_path.setdefault(c.field.path, []).append(
+            refine_by_path.setdefault(c.field.path, ([], []))[0].append(
                 (c.region, c.t0, c.t1))
+            continue
+        if isinstance(c, InSpaceTimeSeq) and isinstance(c.field, FieldRef):
+            path = c.field.path
+            cons, edges = refine_by_path.setdefault(path, ([], []))
+            off = len(cons)
+            indexed = schema.has(path) \
+                and "spacetime" in schema.field(path).indexes
+            for region, t0, t1 in c.constraints:
+                if indexed:
+                    probes.append(IndexProbe(path, "spacetime",
+                                             (region, t0, t1)))
+                cons.append((region, float(t0), float(t1)))
+            edges.extend((i + off, j + off) for i, j in c.edges)
             continue
         p = _indexable(c, schema) or _indexable_or(c, schema)
         if p is not None:
@@ -231,8 +258,8 @@ def split_find_pred(pred: Expr, schema: Schema
     res: Optional[Expr] = None
     for r in residual:
         res = r if res is None else BinOp("and", res, r)
-    refines = [RefineSpec(path, cs)
-               for path, cs in refine_by_path.items()]
+    refines = [RefineSpec(path, cs, edges)
+               for path, (cs, edges) in refine_by_path.items()]
     return probes, refines, res
 
 
@@ -275,8 +302,9 @@ class Plan:
         for p in self.probes:
             lines.append(f"  index probe: {p.kind}({p.path})")
         for r in self.refines:
+            order = f", {len(r.edges)} ordering edges" if r.edges else ""
             lines.append(f"  track refine: {r.path} "
-                         f"[{len(r.constraints)} constraints]")
+                         f"[{len(r.constraints)} constraints{order}]")
         if self.residual is not None:
             lines.append("  residual filter: yes")
         lines.append(f"  server ops: "

@@ -42,7 +42,11 @@ the per-doc hit mask that feeds ``compact_masks``.  The numpy base class
 is the vectorized host oracle (:mod:`repro.exec.refine`); the jax backend
 launches the Pallas ``refine`` kernel over packed integer point buffers —
 one fused launch per wave — so the last big host stage of the Tesseract
-hot loop runs behind the seam too.
+hot loop runs behind the seam too.  Ordered queries hand the op an
+``edges`` DAG: the same launch min-reduces per-(doc × constraint)
+**first-hit** timestamps and each edge is a strict first-hit compare
+applied device-side before the mask comes back — byte-parity extends to
+the first-hit table itself (``with_first_hits``).
 
 The jax backend additionally keeps stable per-FDb buffers (column values,
 valid-doc bitmaps, spacetime postings, packed track points) device-resident
@@ -64,7 +68,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from ..fdb.index import (bitmap_stack, ids_from_bitmap, mask_from_bitmap)
-from .refine import pack_constraints, pack_track_points, refine_tracks_host
+from .refine import (FIRST_HIT_NONE, pack_constraints, pack_track_points,
+                     refine_tracks_host)
 
 __all__ = ["ExecBackend", "NumpyBackend", "JaxBackend", "register_backend",
            "backend_names", "get_backend", "as_backend"]
@@ -134,30 +139,49 @@ class ExecBackend:
 
     # ------------------------------------------------------- track refine
     def refine_tracks(self, batch, path: str, constraints,
-                      candidates: Optional[np.ndarray] = None) -> np.ndarray:
+                      candidates: Optional[np.ndarray] = None,
+                      edges=(), with_first_hits: bool = False):
         """Exact Tesseract refine over the ragged track at ``path``:
         per-doc bool mask [batch.n], True iff for *every* ``(region, t0,
         t1)`` constraint some track point lies inside the region's cover
         during the window.  ``candidates`` (bool mask) restricts the docs
         considered — the result equals ``full_refine & candidates`` bit
-        for bit, and feeds ``compact_masks`` directly.  Host reference:
-        vectorized numpy over the shard's CSR columns."""
+        for bit, and feeds ``compact_masks`` directly.
+
+        ``edges`` is the ordering DAG over the constraint list: edge
+        ``(i, j)`` additionally requires the doc's **first hit** of
+        constraint ``i`` (min packed timestamp among its satisfying
+        points) to be strictly before its first hit of ``j`` — equal
+        first hits do not count as before.  ``with_first_hits`` returns
+        ``(mask, table)`` with ``table`` the uint64 [batch.n, C]
+        first-hit table (``exec.refine.FIRST_HIT_NONE`` where a
+        constraint never hits) — parity-checked byte-for-byte across
+        backends.  Host reference: vectorized numpy over the shard's CSR
+        columns."""
         lat = batch[path + ".lat"]
         lng = batch[path + ".lng"]
         tt = batch[path + ".t"]
         return refine_tracks_host(lat.values, lng.values, tt.values,
                                   lat.row_splits, batch.n,
-                                  list(constraints), candidates)
+                                  list(constraints), candidates,
+                                  edges=tuple(edges),
+                                  with_first_hits=with_first_hits)
 
     def refine_tracks_batched(self, batches, path: str, constraints,
-                              candidates_list=None) -> List[np.ndarray]:
+                              candidates_list=None, edges=(),
+                              with_first_hits: bool = False):
         """Per-shard refine masks for one wave — the loop-over-shards
-        oracle the batched overrides must match byte-for-byte."""
+        oracle the batched overrides must match byte-for-byte.  Returns
+        the mask list, or ``(masks, tables)`` under ``with_first_hits``."""
         batches = list(batches)
         if candidates_list is None:
             candidates_list = [None] * len(batches)
-        return [self.refine_tracks(b, path, constraints, cand)
+        outs = [self.refine_tracks(b, path, constraints, cand, edges=edges,
+                                   with_first_hits=with_first_hits)
                 for b, cand in zip(batches, candidates_list)]
+        if with_first_hits:
+            return [m for m, _ in outs], [t for _, t in outs]
+        return outs
 
     def gather_columns(self, batch, paths: Sequence[str],
                        ids: np.ndarray):
@@ -443,53 +467,106 @@ class JaxBackend(ExecBackend):
         dev = self.device_cache.get(arr)
         return dev if dev is not None else self._jnp.asarray(arr)
 
+    def _order_ok(self, fh_hi, fh_lo, i: int, j: int):
+        """Device-side strict first-hit compare for ordering edge (i, j):
+        (hi, lo) uint32 word pairs, 64-bit lexicographic — True where the
+        first hit of constraint i is strictly before constraint j's.
+        ``fh_*`` index constraints on axis -2 (works for [C, D] and
+        [S, C, D])."""
+        a_hi, a_lo = fh_hi[..., i, :], fh_lo[..., i, :]
+        b_hi, b_lo = fh_hi[..., j, :], fh_lo[..., j, :]
+        return (a_hi < b_hi) | ((a_hi == b_hi) & (a_lo < b_lo))
+
+    @staticmethod
+    def _fh_table(fh_hi: np.ndarray, fh_lo: np.ndarray,
+                  candidates: Optional[np.ndarray]) -> np.ndarray:
+        """Kernel (hi, lo) word pair [C, n] → host uint64 table [n, C],
+        masked to the sentinel outside ``candidates`` (byte parity with
+        the restricted host oracle, which never evaluates those docs)."""
+        table = ((fh_hi.astype(np.uint64) << np.uint64(32))
+                 | fh_lo.astype(np.uint64)).T.copy()
+        if candidates is not None:
+            table[~np.asarray(candidates, dtype=bool), :] = FIRST_HIT_NONE
+        return table
+
     def refine_tracks(self, batch, path, constraints,
-                      candidates=None) -> np.ndarray:
+                      candidates=None, edges=(),
+                      with_first_hits: bool = False):
         """One ``refine_tracks`` kernel launch over the full shard track
         (device-resident when primed), AND-combined with ``candidates`` on
         the host — byte-equal to the restricted numpy oracle because the
-        per-doc verdict is independent of other docs."""
+        per-doc verdict is independent of other docs.  Ordering ``edges``
+        are a pure device-side compare over the first-hit table the same
+        launch produces (no extra dispatch)."""
         constraints = list(constraints)
+        edges = list(edges)
         if not constraints or len(constraints) > 30 or batch.n == 0:
             # >30 constraints would overflow the kernel's int32 bitset
             return super().refine_tracks(batch, path, constraints,
-                                         candidates)
+                                         candidates, edges=edges,
+                                         with_first_hits=with_first_hits)
         pts, rows = self._track_pack(batch, path)
         if pts is None:
             return super().refine_tracks(batch, path, constraints,
-                                         candidates)
+                                         candidates, edges=edges,
+                                         with_first_hits=with_first_hits)
         cov = pack_constraints(constraints)
-        mask = np.array(self._ops.refine_tracks(
-            self._dev(pts), self._dev(rows), self._jnp.asarray(cov),
-            batch.n, impl=self._impl()), dtype=bool)
+        need_fh = bool(edges) or with_first_hits
+        if need_fh:
+            mask_d, fh_hi, fh_lo = self._ops.refine_tracks(
+                self._dev(pts), self._dev(rows), self._jnp.asarray(cov),
+                batch.n, impl=self._impl(), with_first_hits=True)
+            for i, j in edges:
+                mask_d = mask_d & self._order_ok(fh_hi, fh_lo, i, j)
+            mask = np.array(mask_d, dtype=bool)
+        else:
+            mask = np.array(self._ops.refine_tracks(
+                self._dev(pts), self._dev(rows), self._jnp.asarray(cov),
+                batch.n, impl=self._impl()), dtype=bool)
         if candidates is not None:
             mask &= np.asarray(candidates, dtype=bool)
+        if with_first_hits:
+            return mask, self._fh_table(np.asarray(fh_hi),
+                                        np.asarray(fh_lo), candidates)
         return mask
 
     def refine_tracks_batched(self, batches, path, constraints,
-                              candidates_list=None):
+                              candidates_list=None, edges=(),
+                              with_first_hits: bool = False):
         """One ``refine_tracks_batched`` launch for the whole wave: the
         shards' packed point buffers are stacked (device-side when
         resident) and every shard shares the query's constraint table.
-        Ragged point/doc counts are padded with never-matching rows."""
+        Ragged point/doc counts are padded with never-matching rows.
+        Ordering ``edges`` stay on device: the strict first-hit compare
+        runs over the launch's stacked (hi, lo) tables before the masks
+        come back to feed ``compact_masks``."""
         batches = list(batches)
         constraints = list(constraints)
+        edges = list(edges)
         if candidates_list is None:
             candidates_list = [None] * len(batches)
         if not batches:
-            return []
+            return ([], []) if with_first_hits else []
         if not constraints or len(constraints) > 30:
             return super().refine_tracks_batched(batches, path, constraints,
-                                                 candidates_list)
+                                                 candidates_list,
+                                                 edges=edges,
+                                                 with_first_hits=with_first_hits)
         packs = [self._track_pack(b, path) for b in batches]
         if any(pts is None for pts, _ in packs):
             return super().refine_tracks_batched(batches, path, constraints,
-                                                 candidates_list)
+                                                 candidates_list,
+                                                 edges=edges,
+                                                 with_first_hits=with_first_hits)
+        need_fh = bool(edges) or with_first_hits
         ns = [b.n for b in batches]
         n_max = max(ns)
         p_max = max(pts.shape[1] for pts, _ in packs)
+        tables: List[np.ndarray] = []
         if n_max == 0 or p_max == 0:
             masks = [np.zeros(n, dtype=bool) for n in ns]
+            tables = [np.full((n, len(constraints)), FIRST_HIT_NONE,
+                              dtype=np.uint64) for n in ns]
         else:
             jnp = self._jnp
             # pad each shard's resident buffers to the wave max, then one
@@ -506,14 +583,28 @@ class JaxBackend(ExecBackend):
             pts_stack = jnp.stack(pts_pad)
             rows_stack = jnp.stack(rows_pad)
             cov = pack_constraints(constraints)
-            out = np.asarray(self._ops.refine_tracks_batched(
-                pts_stack, rows_stack, self._jnp.asarray(cov), n_max,
-                impl=self._impl()), dtype=bool)
+            if need_fh:
+                out_d, fh_hi, fh_lo = self._ops.refine_tracks_batched(
+                    pts_stack, rows_stack, self._jnp.asarray(cov), n_max,
+                    impl=self._impl(), with_first_hits=True)
+                for i, j in edges:
+                    out_d = out_d & self._order_ok(fh_hi, fh_lo, i, j)
+                out = np.asarray(out_d, dtype=bool)
+            else:
+                out = np.asarray(self._ops.refine_tracks_batched(
+                    pts_stack, rows_stack, self._jnp.asarray(cov), n_max,
+                    impl=self._impl()), dtype=bool)
             masks = [out[i, :n].copy() for i, n in enumerate(ns)]
+            if with_first_hits:
+                hi_h, lo_h = np.asarray(fh_hi), np.asarray(fh_lo)
+                tables = [self._fh_table(hi_h[i, :, :n], lo_h[i, :, :n],
+                                         cand)
+                          for i, (n, cand) in enumerate(
+                              zip(ns, candidates_list))]
         for m, cand in zip(masks, candidates_list):
             if cand is not None:
                 m &= np.asarray(cand, dtype=bool)
-        return masks
+        return (masks, tables) if with_first_hits else masks
 
     def gather_columns(self, batch, paths, ids):
         """Selective read from device-resident buffers when primed: dense

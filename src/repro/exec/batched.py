@@ -109,7 +109,8 @@ def run_wave_task(db: FDb, plan: Plan, sids: Sequence[int],
     # emitting per-doc hit masks that feed the selection compact below
     for rf in plan.refines:
         masks = backend.refine_tracks_batched(
-            [sh.batch for sh in shards], rf.path, rf.constraints, masks)
+            [sh.batch for sh in shards], rf.path, rf.constraints, masks,
+            edges=rf.edges)
     ids_list = backend.compact_masks(masks)
     t1 = time.perf_counter()
 

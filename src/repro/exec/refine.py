@@ -16,7 +16,11 @@ during the window, for every constraint" — runs in two shapes:
     ``prime_fdb`` time and keeps it device-resident.
 
 Both shapes are exact bit/integer work on the same inputs, so backend
-results are byte-identical (the parity contract the tests enforce).
+results are byte-identical (the parity contract the tests enforce) — and
+both produce the same per-(doc × constraint) **first-hit** table (minimum
+packed timestamp among a doc's points satisfying a constraint,
+:data:`FIRST_HIT_NONE` when none) that ordered (A-then-B) queries compare
+edge-wise.
 """
 from __future__ import annotations
 
@@ -28,10 +32,15 @@ from ..fdb.columnar import span_indices
 from ..geo import mercator as M
 
 __all__ = ["f64_sort_key", "pack_track_points", "pack_constraints",
-           "refine_tracks_host"]
+           "refine_tracks_host", "FIRST_HIT_NONE"]
 
 _U32 = np.uint64(0xFFFFFFFF)
 _SHIFT32 = np.uint64(32)
+
+#: first-hit sentinel: a (cell, t) pair no finite timestamp maps to —
+#: ``f64_sort_key`` reaches 0xFFFF… only for NaN payloads, and NaN
+#: timestamps never satisfy a window compare, so "no hit" is unambiguous
+FIRST_HIT_NONE = np.uint64(0xFFFFFFFFFFFFFFFF)
 
 
 def f64_sort_key(t) -> np.ndarray:
@@ -106,24 +115,54 @@ def pack_constraints(constraints: Sequence[Tuple[object, float, float]]
 def refine_tracks_host(lat: np.ndarray, lng: np.ndarray, t: np.ndarray,
                        row_splits: Optional[np.ndarray], n_docs: int,
                        constraints: Sequence[Tuple[object, float, float]],
-                       candidates: Optional[np.ndarray] = None
-                       ) -> np.ndarray:
+                       candidates: Optional[np.ndarray] = None,
+                       edges: Sequence[Tuple[int, int]] = (),
+                       with_first_hits: bool = False):
     """Numpy oracle: exact per-doc refine mask [n_docs] bool.
 
     ``candidates`` (bool [n_docs]) restricts evaluation to the index-probe
     survivors — docs outside it come back False, and because the per-doc
     verdict is independent of other docs, the result equals
     ``full_refine & candidates`` bit for bit.
+
+    ``edges`` is the ordering DAG over ``constraints``: edge ``(i, j)``
+    additionally requires the doc's **first hit** of constraint ``i`` to be
+    strictly before its first hit of constraint ``j``, where first hit =
+    the lexicographic-minimum packed timestamp (``f64_sort_key``) among the
+    doc's points satisfying the constraint, or :data:`FIRST_HIT_NONE` when
+    none do.  Equal first hits do not count as before.
+
+    ``with_first_hits`` returns ``(mask, first)`` with ``first`` the
+    uint64 ``[n_docs, C]`` first-hit table (sentinel outside ``candidates``
+    when restricted) — the parity surface the jax kernel must match byte
+    for byte.
     """
+    n_c = len(constraints)
+    edges = list(edges)
+    need_first = bool(edges) or with_first_hits
+    first = np.full((n_docs, n_c), FIRST_HIT_NONE, dtype=np.uint64) \
+        if need_first else None
+
+    def finish(out):
+        for i, j in edges:
+            out &= first[:, i] < first[:, j]
+        return (out, first) if with_first_hits else out
+
     if n_docs == 0:
-        return np.zeros(0, dtype=bool)
+        return finish(np.zeros(0, dtype=bool))
     if row_splits is None:                         # singular location + t
         keys = M.latlng_to_morton(lat, lng)
         out = np.ones(n_docs, dtype=bool) if candidates is None \
             else np.asarray(candidates, dtype=bool).copy()
-        for region, t0, t1 in constraints:
-            out &= region.contains(keys) & (t >= t0) & (t <= t1)
-        return out
+        tkey = f64_sort_key(t) if need_first else None
+        for c, (region, t0, t1) in enumerate(constraints):
+            hit = region.contains(keys) & (t >= t0) & (t <= t1)
+            if need_first:
+                masked = hit if candidates is None \
+                    else hit & np.asarray(candidates, dtype=bool)
+                first[:, c] = np.where(masked, tkey, FIRST_HIT_NONE)
+            out &= hit
+        return finish(out)
     if candidates is not None:
         cand = np.asarray(candidates, dtype=bool)
         ids = np.nonzero(cand)[0]
@@ -135,10 +174,14 @@ def refine_tracks_host(lat: np.ndarray, lng: np.ndarray, t: np.ndarray,
         row_of = np.repeat(np.arange(n_docs), np.diff(row_splits))
         out = np.ones(n_docs, dtype=bool)
     keys = M.latlng_to_morton(lat, lng)
-    for region, t0, t1 in constraints:
+    tkey = f64_sort_key(t) if need_first else None
+    for c, (region, t0, t1) in enumerate(constraints):
         hit = region.contains(keys) & (t >= t0) & (t <= t1)
         doc_hit = np.zeros(n_docs, dtype=bool)
         if hit.size:
             np.logical_or.at(doc_hit, row_of, hit)
+            if need_first:
+                np.minimum.at(first[:, c], row_of,
+                              np.where(hit, tkey, FIRST_HIT_NONE))
         out &= doc_hit
-    return out
+    return finish(out)

@@ -56,7 +56,8 @@ def run_shard_task(db: FDb, plan: Plan, shard_id: int,
         n_cand = int(mask.sum())
         for rf in plan.refines:
             mask = backend.refine_tracks(shard.batch, rf.path,
-                                         rf.constraints, mask)
+                                         rf.constraints, mask,
+                                         edges=rf.edges)
         ids = backend.compact_mask(mask)
     else:
         ids = backend.select_ids(bm, shard.n)

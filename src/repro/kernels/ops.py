@@ -140,28 +140,39 @@ def segment_agg(group_ids, values, num_groups: int,
                             interpret=(impl == "interpret"))
 
 
-def refine_tracks(pts, rows, cov, num_docs: int, impl: Optional[str] = None):
+def refine_tracks(pts, rows, cov, num_docs: int, impl: Optional[str] = None,
+                  with_first_hits: bool = False):
     """Exact point-in-cover × time-window refine over one shard's packed
-    ragged track → per-doc hit mask [num_docs] bool (see kernels.refine)."""
+    ragged track → per-doc hit mask [num_docs] bool (see kernels.refine).
+    ``with_first_hits`` adds the per-(constraint × doc) first-hit uint32
+    (hi, lo) word tables the ordered-query edge compare consumes — same
+    fused pass, still one launch."""
     impl = _resolve(impl)
     record_launch("refine_tracks")
     if impl == "reference":
-        return _ref.refine_tracks_ref(pts, rows, cov, num_docs=num_docs)
+        return _ref.refine_tracks_ref(pts, rows, cov, num_docs=num_docs,
+                                      with_first_hits=with_first_hits)
     return _refine.refine_tracks(pts, rows, cov, num_docs,
-                                 interpret=(impl == "interpret"))
+                                 interpret=(impl == "interpret"),
+                                 with_first_hits=with_first_hits)
 
 
 def refine_tracks_batched(pts, rows, cov, num_docs: int,
-                          impl: Optional[str] = None):
+                          impl: Optional[str] = None,
+                          with_first_hits: bool = False):
     """Wave-stacked refine [S, 4, P] × [C, 8, R] → hit masks
-    [S, num_docs] bool — one launch per wave of shards."""
+    [S, num_docs] bool — one launch per wave of shards
+    (+ first-hit word tables [S, C, num_docs] × 2 under
+    ``with_first_hits``)."""
     impl = _resolve(impl)
     record_launch("refine_tracks_batched")
     if impl == "reference":
         return _ref.refine_tracks_batched_ref(pts, rows, cov,
-                                              num_docs=num_docs)
+                                              num_docs=num_docs,
+                                              with_first_hits=with_first_hits)
     return _refine.refine_tracks_batched(pts, rows, cov, num_docs,
-                                         interpret=(impl == "interpret"))
+                                         interpret=(impl == "interpret"),
+                                         with_first_hits=with_first_hits)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window=None,

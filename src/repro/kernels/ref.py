@@ -130,9 +130,14 @@ def _pair_le(a_hi, a_lo, b_hi, b_lo):
     return (a_hi < b_hi) | ((a_hi == b_hi) & (a_lo <= b_lo))
 
 
-@functools.partial(jax.jit, static_argnames=("num_docs",))
+_FH_SENT = 0xFFFFFFFF          # first-hit "no hit" sentinel word (uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_docs",
+                                             "with_first_hits"))
 def refine_tracks_ref(pts: jnp.ndarray, rows: jnp.ndarray,
-                      cov: jnp.ndarray, num_docs: int) -> jnp.ndarray:
+                      cov: jnp.ndarray, num_docs: int,
+                      with_first_hits: bool = False):
     """Exact Tesseract refine over one shard's packed ragged track.
 
     pts [4, P] uint32 — per-point (key_hi, key_lo, t_hi, t_lo) words;
@@ -141,16 +146,31 @@ def refine_tracks_ref(pts: jnp.ndarray, rows: jnp.ndarray,
     (see ``kernels.refine``).  → bool hit mask [num_docs]: doc d passes iff
     for *every* constraint some point of d lies in a cover range during the
     window.  Pure integer work — byte-equal to the host numpy oracle.
+
+    ``with_first_hits`` additionally returns the per-(constraint × doc)
+    **first-hit** packed timestamp as uint32 (hi, lo) word pairs
+    ``[C, num_docs]`` — the lexicographic min of (t_hi, t_lo) over the
+    doc's satisfying points, (0xFFFFFFFF, 0xFFFFFFFF) when none — the
+    table ordered queries compare edge-wise.
     """
     n_constraints = int(cov.shape[0])
     p = pts.shape[1]
+    sent = jnp.uint32(_FH_SENT)
+
+    def table():
+        return (jnp.full((n_constraints, num_docs), sent, jnp.uint32),
+                jnp.full((n_constraints, num_docs), sent, jnp.uint32))
+
     if num_docs == 0:
-        return jnp.zeros((0,), jnp.bool_)
+        out = jnp.zeros((0,), jnp.bool_)
+        return (out, *table()) if with_first_hits else out
     if p == 0 or n_constraints == 0:
-        return jnp.full((num_docs,), n_constraints == 0)
+        out = jnp.full((num_docs,), n_constraints == 0)
+        return (out, *table()) if with_first_hits else out
     k_hi, k_lo, t_hi, t_lo = pts[0], pts[1], pts[2], pts[3]
     safe_rows = jnp.where(rows >= 0, rows, num_docs)    # pad → dropped
     out = jnp.ones((num_docs,), jnp.bool_)
+    fh_his, fh_los = [], []
     for c in range(n_constraints):
         in_win = (_pair_ge(t_hi, t_lo, cov[c, 4, 0], cov[c, 5, 0])
                   & _pair_le(t_hi, t_lo, cov[c, 6, 0], cov[c, 7, 0]))
@@ -161,22 +181,47 @@ def refine_tracks_ref(pts: jnp.ndarray, rows: jnp.ndarray,
 
         in_cov = jax.lax.fori_loop(0, cov.shape[2], body,
                                    jnp.zeros((p,), jnp.bool_))
-        hit = (in_cov & in_win).astype(jnp.int32)
+        hit = in_cov & in_win
         doc_hit = jnp.zeros((num_docs,), jnp.int32) \
-            .at[safe_rows].max(hit, mode="drop")
+            .at[safe_rows].max(hit.astype(jnp.int32), mode="drop")
         out = out & (doc_hit > 0)
+        if with_first_hits:
+            # lexicographic (hi, lo) min in two passes: min the hi words,
+            # then min the lo words among points matching that hi — exact
+            # because the second pass only sees the argmin-hi candidates
+            fh_hi = jnp.full((num_docs + 1,), sent, jnp.uint32) \
+                .at[safe_rows].min(jnp.where(hit, t_hi, sent), mode="drop")
+            at_min = hit & (t_hi == fh_hi[safe_rows])
+            fh_lo = jnp.full((num_docs + 1,), sent, jnp.uint32) \
+                .at[safe_rows].min(jnp.where(at_min, t_lo, sent),
+                                   mode="drop")
+            fh_his.append(fh_hi[:num_docs])
+            fh_los.append(fh_lo[:num_docs])
+    if with_first_hits:
+        return out, jnp.stack(fh_his), jnp.stack(fh_los)
     return out
 
 
-@functools.partial(jax.jit, static_argnames=("num_docs",))
+@functools.partial(jax.jit, static_argnames=("num_docs",
+                                             "with_first_hits"))
 def refine_tracks_batched_ref(pts: jnp.ndarray, rows: jnp.ndarray,
-                              cov: jnp.ndarray, num_docs: int):
+                              cov: jnp.ndarray, num_docs: int,
+                              with_first_hits: bool = False):
     """Wave-stacked refine: pts [S, 4, P], rows [S, P] → masks
-    [S, num_docs] (every shard shares the query's constraint table)."""
+    [S, num_docs] (every shard shares the query's constraint table);
+    ``with_first_hits`` adds uint32 first-hit word tables
+    [S, C, num_docs] × 2 (hi, lo)."""
+    n_constraints = int(cov.shape[0])
     if pts.shape[0] == 0:
-        return jnp.zeros((0, num_docs), jnp.bool_)
+        out = jnp.zeros((0, num_docs), jnp.bool_)
+        if with_first_hits:
+            sent = jnp.uint32(_FH_SENT)
+            t = jnp.full((0, n_constraints, num_docs), sent, jnp.uint32)
+            return out, t, t
+        return out
     return jax.vmap(
-        lambda pp, rr: refine_tracks_ref(pp, rr, cov, num_docs))(pts, rows)
+        lambda pp, rr: refine_tracks_ref(pp, rr, cov, num_docs,
+                                         with_first_hits))(pts, rows)
 
 
 # --------------------------------------------------------- flash attention

@@ -29,6 +29,14 @@ satisfied constraint c).  A doc passes iff its bitset is full — computed in
 the jit epilogue.  ``refine_tracks_batched`` stacks a whole wave of shards
 (ragged P and doc counts zero-padded) and adds a leading shard grid axis,
 so a wave costs **one** launch, mirroring ``compact_batched``.
+
+Under ``with_first_hits`` the same grid walk also min-reduces a
+per-(doc × constraint) **first-hit** timestamp — the lexicographic
+(t_hi, t_lo) minimum over the doc's satisfying points, kept as two uint32
+word planes with a (0xFFFFFFFF, 0xFFFFFFFF) "never hit" sentinel (only
+NaN timestamps could collide with it, and NaN never passes a window
+compare).  Ordered Tesseract queries (A before B) compare that table
+edge-wise on device; the ordering adds outputs, not launches.
 """
 from __future__ import annotations
 
@@ -61,14 +69,20 @@ def _le(a_hi, a_lo, b_hi, b_lo):
     return (a_hi < b_hi) | ((a_hi == b_hi) & (a_lo <= b_lo))
 
 
-def _refine_kernel(pts_ref, rows_ref, cov_ref, out_ref, *,
+_FH_SENT = 0xFFFFFFFF          # first-hit "no hit" sentinel word
+
+
+def _refine_kernel(pts_ref, rows_ref, cov_ref, out_ref, *fh_refs,
                    doc_block: int, n_constraints: int):
     g = pl.program_id(1)
     t = pl.program_id(2)
+    sent = jnp.uint32(_FH_SENT)
 
     @pl.when(t == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
+        for fh in fh_refs:
+            fh[...] = jnp.full_like(fh, sent)
 
     k_hi = pts_ref[0, 0, :][:, None]               # (T, 1) uint32
     k_lo = pts_ref[0, 1, :][:, None]
@@ -93,8 +107,24 @@ def _refine_kernel(pts_ref, rows_ref, cov_ref, out_ref, *,
                & _ge(t_hi, t_lo, w0_hi, w0_lo)     # t in [w0, w1]
                & _le(t_hi, t_lo, w1_hi, w1_lo))
         hit_pt = jnp.any(hit, axis=1)              # (T,)
-        contrib = jnp.any(onehot & hit_pt[:, None], axis=0)   # (D,)
+        hit2d = onehot & hit_pt[:, None]           # (T, D)
+        contrib = jnp.any(hit2d, axis=0)           # (D,)
         acc = acc | jnp.left_shift(contrib[None, :].astype(jnp.int32), c)
+        if fh_refs:
+            # per-doc lexicographic (t_hi, t_lo) min over this point
+            # block, two passes: min hi, then min lo among points whose
+            # hi equals that min (exact — the second pass only sees the
+            # argmin-hi candidates; no-hit docs stay at the sentinel)
+            fh_hi_ref, fh_lo_ref = fh_refs
+            blk_hi = jnp.min(jnp.where(hit2d, t_hi, sent), axis=0)  # (D,)
+            at_min = hit2d & (t_hi == blk_hi[None, :])
+            blk_lo = jnp.min(jnp.where(at_min, t_lo, sent), axis=0)
+            acc_hi = fh_hi_ref[0, c, :]
+            acc_lo = fh_lo_ref[0, c, :]
+            take = (blk_hi < acc_hi) \
+                | ((blk_hi == acc_hi) & (blk_lo < acc_lo))
+            fh_hi_ref[0, c, :] = jnp.where(take, blk_hi, acc_hi)
+            fh_lo_ref[0, c, :] = jnp.where(take, blk_lo, acc_lo)
     out_ref[...] = out_ref[...] | acc
 
 
@@ -113,30 +143,59 @@ def _pad_cov(cov: jnp.ndarray) -> jnp.ndarray:
 
 
 @functools.partial(jax.jit, static_argnames=("num_docs", "point_block",
-                                             "doc_block", "interpret"))
+                                             "doc_block", "interpret",
+                                             "with_first_hits"))
 def refine_tracks_batched(pts: jnp.ndarray, rows: jnp.ndarray,
                           cov: jnp.ndarray, num_docs: int,
                           point_block: int = DEFAULT_POINT_BLOCK,
                           doc_block: int = DEFAULT_DOC_BLOCK,
-                          interpret: bool = False):
+                          interpret: bool = False,
+                          with_first_hits: bool = False):
     """pts [S, 4, P] uint32, rows [S, P] int32 (−1 pad), cov [C, 8, R]
     uint32 → per-doc hit mask [S, num_docs] bool (wave-ragged doc counts
-    zero-padded to ``num_docs`` by the caller; slice per shard)."""
+    zero-padded to ``num_docs`` by the caller; slice per shard).
+
+    ``with_first_hits`` grows the same fused pass with a per-(doc ×
+    constraint) **first-hit** min-reduce and returns
+    ``(mask, first_hi, first_lo)`` — uint32 ``[S, C, num_docs]`` word
+    pairs, the lexicographic minimum (t_hi, t_lo) over each doc's points
+    satisfying constraint c, (0xFFFFFFFF, 0xFFFFFFFF) when none.  Ordered
+    (A-before-B) queries compare this table edge-wise; still one launch
+    per wave.
+    """
     s, _, p = pts.shape
     n_constraints = int(cov.shape[0])
     full = jnp.int32((1 << n_constraints) - 1)
+    sent = jnp.uint32(_FH_SENT)
+
+    def empty_table():
+        return jnp.full((s, n_constraints, num_docs), sent, jnp.uint32)
+
     if s == 0 or num_docs == 0:
-        return jnp.zeros((s, num_docs), jnp.bool_)
+        out = jnp.zeros((s, num_docs), jnp.bool_)
+        return (out, empty_table(), empty_table()) if with_first_hits \
+            else out
     if p == 0 or n_constraints == 0:
         # no points → no constraint can hit; no constraints → vacuous truth
-        return jnp.full((s, num_docs), n_constraints == 0)
+        out = jnp.full((s, num_docs), n_constraints == 0)
+        return (out, empty_table(), empty_table()) if with_first_hits \
+            else out
     cov = _pad_cov(cov)
     r_pad = cov.shape[2]
     padded_p = pl.cdiv(p, point_block) * point_block
     padded_d = pl.cdiv(num_docs, doc_block) * doc_block
     pts_p = jnp.zeros((s, 4, padded_p), jnp.uint32).at[:, :, :p].set(pts)
     rows_p = jnp.full((s, padded_p), -1, jnp.int32).at[:, :p].set(rows)
-    bits = pl.pallas_call(
+    out_shape = [jax.ShapeDtypeStruct((s, padded_d), jnp.int32)]
+    out_specs = [pl.BlockSpec((1, doc_block), lambda i, g, t: (i, g))]
+    if with_first_hits:
+        fh_shape = jax.ShapeDtypeStruct((s, n_constraints, padded_d),
+                                        jnp.uint32)
+        fh_spec = pl.BlockSpec((1, n_constraints, doc_block),
+                               lambda i, g, t: (i, 0, g))
+        out_shape += [fh_shape, fh_shape]
+        out_specs += [fh_spec, fh_spec]
+    outs = pl.pallas_call(
         functools.partial(_refine_kernel, doc_block=doc_block,
                           n_constraints=n_constraints),
         grid=(s, padded_d // doc_block, padded_p // point_block),
@@ -146,24 +205,35 @@ def refine_tracks_batched(pts: jnp.ndarray, rows: jnp.ndarray,
             pl.BlockSpec((n_constraints, 8, r_pad),
                          lambda i, g, t: (0, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, doc_block), lambda i, g, t: (i, g)),
-        out_shape=jax.ShapeDtypeStruct((s, padded_d), jnp.int32),
+        out_specs=out_specs,
+        out_shape=out_shape,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(pts_p, rows_p, cov)
-    return bits[:, :num_docs] == full
+    bits = outs[0]
+    mask = bits[:, :num_docs] == full
+    if with_first_hits:
+        return mask, outs[1][:, :, :num_docs], outs[2][:, :, :num_docs]
+    return mask
 
 
 @functools.partial(jax.jit, static_argnames=("num_docs", "point_block",
-                                             "doc_block", "interpret"))
+                                             "doc_block", "interpret",
+                                             "with_first_hits"))
 def refine_tracks(pts: jnp.ndarray, rows: jnp.ndarray, cov: jnp.ndarray,
                   num_docs: int, point_block: int = DEFAULT_POINT_BLOCK,
                   doc_block: int = DEFAULT_DOC_BLOCK,
-                  interpret: bool = False):
+                  interpret: bool = False, with_first_hits: bool = False):
     """Single-shard refine: pts [4, P], rows [P], cov [C, 8, R] →
-    hit mask [num_docs] bool."""
-    return refine_tracks_batched(pts[None], rows[None], cov, num_docs,
-                                 point_block=point_block,
-                                 doc_block=doc_block,
-                                 interpret=interpret)[0]
+    hit mask [num_docs] bool (+ uint32 first-hit word tables
+    [C, num_docs] × 2 under ``with_first_hits``)."""
+    out = refine_tracks_batched(pts[None], rows[None], cov, num_docs,
+                                point_block=point_block,
+                                doc_block=doc_block,
+                                interpret=interpret,
+                                with_first_hits=with_first_hits)
+    if with_first_hits:
+        mask, fh_hi, fh_lo = out
+        return mask[0], fh_hi[0], fh_lo[0]
+    return out[0]

@@ -12,7 +12,9 @@ through region A during time window T1 and region B during T2" (§2, §6):
     refine pass, itself a fused device op (``refine_tracks_batched`` →
     the Pallas ``refine`` kernel over the shard's resident CSR track
     buffers; see ``Flow.tesseract``, ``repro.core.planner`` and
-    ``repro.exec.refine``),
+    ``repro.exec.refine``).  ``then()`` / ``before()`` add *ordering*
+    edges (A **then** B), resolved in the same fused pass via
+    per-constraint first-hit timestamps,
   * :func:`tesseract_stats` — index-probe candidates vs. exact survivors,
     the pruning-ratio report the benchmarks track.
 """

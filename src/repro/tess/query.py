@@ -7,7 +7,15 @@ constraint builder —
     tess = Tesseract(region_a, t0, t1).also(region_b, t2, t3)
     trips = fdb("Trips").tesseract(tess).collect()
 
-Each constraint becomes one :class:`~repro.core.exprs.InSpaceTime` conjunct.
+and ``then()`` / ``before()`` add *ordering* edges — "through region A
+during T1 **and then** region B during T2" — which ride the same refine
+pass: the kernel also min-reduces a per-(doc × constraint) **first-hit**
+packed timestamp, and the ordering DAG is a strict-less compare over that
+table, applied device-side before the mask feeds ``compact_masks``.
+
+Each unordered constraint becomes one
+:class:`~repro.core.exprs.InSpaceTime` conjunct (ordered builders compile
+to a single :class:`~repro.core.exprs.InSpaceTimeSeq` node).
 The planner compiles every conjunct into a ``spacetime`` index probe *and*
 a :class:`~repro.core.planner.RefineSpec`: per shard, all constraint
 postings bitmaps are stacked into **one** batched ``bitset`` kernel launch
@@ -28,14 +36,21 @@ from __future__ import annotations
 
 from typing import Any, Dict, List, Optional, Tuple
 
-from ..core.exprs import ExprProxy, FieldRef, InSpaceTime
+from ..core.exprs import ExprProxy, FieldRef, InSpaceTime, InSpaceTimeSeq
 from ..geo.areatree import AreaTree
 
 __all__ = ["Tesseract", "tesseract_stats"]
 
 
 class Tesseract:
-    """Immutable builder of space-time constraints (AND semantics)."""
+    """Immutable builder of space-time constraints (AND semantics).
+
+    ``also()`` adds an unordered constraint; ``then()`` adds a *sequenced*
+    one — the trip's first hit of the previous constraint must be strictly
+    before its first hit of the new one (A **then** B).  ``before(i, j)``
+    is the general form: an ordering edge between any two constraints by
+    index, so arbitrary ordering DAGs compose on top of ``also()``.
+    """
 
     def __init__(self, region: AreaTree, t0: float, t1: float,
                  field: str = "track"):
@@ -44,22 +59,61 @@ class Tesseract:
         self.field = field
         self.constraints: Tuple[Tuple[AreaTree, float, float], ...] = (
             (region, float(t0), float(t1)),)
+        self.order_edges: Tuple[Tuple[int, int], ...] = ()
+
+    def _copy(self) -> "Tesseract":
+        out = Tesseract.__new__(Tesseract)
+        out.field = self.field
+        out.constraints = self.constraints
+        out.order_edges = self.order_edges
+        return out
 
     def also(self, region: AreaTree, t0: float, t1: float) -> "Tesseract":
         """Add another constraint: ... AND through ``region`` during
-        ``[t0, t1]``."""
+        ``[t0, t1]`` (no ordering between this and other constraints)."""
         if t1 < t0:
             raise ValueError("Tesseract window with t1 < t0")
-        out = Tesseract.__new__(Tesseract)
-        out.field = self.field
+        out = self._copy()
         out.constraints = self.constraints + ((region, float(t0),
                                                float(t1)),)
         return out
 
+    def then(self, region: AreaTree, t0: float, t1: float) -> "Tesseract":
+        """Add a *sequenced* constraint: ... AND THEN through ``region``
+        during ``[t0, t1]`` — the trip's first hit of the previous
+        constraint must be strictly before its first hit of this one.
+        Equal first-hit timestamps do not count as before (tie ⇒ no
+        match).  Chains compose: ``A.then(B).then(C)`` requires
+        first(A) < first(B) < first(C)."""
+        out = self.also(region, t0, t1)
+        k = len(out.constraints) - 1
+        out.order_edges = self.order_edges + ((k - 1, k),)
+        return out
+
+    def before(self, i: int, j: int) -> "Tesseract":
+        """Ordering edge between two existing constraints by index: the
+        first hit of constraint ``i`` must be strictly before the first
+        hit of constraint ``j`` — ``then()`` is sugar for
+        ``also(...).before(k-1, k)``."""
+        n = len(self.constraints)
+        if not (0 <= i < n and 0 <= j < n):
+            raise ValueError(f"before({i}, {j}) with {n} constraints")
+        if i == j:
+            raise ValueError("before() needs two distinct constraints")
+        out = self._copy()
+        out.order_edges = self.order_edges + ((int(i), int(j)),)
+        return out
+
     def expr(self, field: Optional[str] = None) -> ExprProxy:
-        """The WFL predicate: AND of per-constraint ``InSpaceTime`` nodes —
-        usable directly in ``find()`` and composable with other conjuncts."""
+        """The WFL predicate — usable directly in ``find()`` and composable
+        with other conjuncts.  Unordered constraints compile to an AND of
+        per-constraint ``InSpaceTime`` nodes; any ordering edge promotes
+        the whole builder to a single ``InSpaceTimeSeq`` node so the edges
+        travel with the constraint list into the planner."""
         fr = FieldRef(field or self.field)
+        if self.order_edges:
+            return ExprProxy(InSpaceTimeSeq(fr, self.constraints,
+                                            self.order_edges))
         out: Optional[ExprProxy] = None
         for region, t0, t1 in self.constraints:
             e = ExprProxy(InSpaceTime(fr, region, t0, t1))
@@ -68,7 +122,8 @@ class Tesseract:
 
     def __repr__(self):
         return (f"Tesseract({self.field!r}, "
-                f"{len(self.constraints)} constraints)")
+                f"{len(self.constraints)} constraints, "
+                f"{len(self.order_edges)} ordering edges)")
 
 
 def tesseract_stats(db, tess: Tesseract, backend=None,
@@ -106,7 +161,7 @@ def tesseract_stats(db, tess: Tesseract, backend=None,
         ids_list = be.compact_masks(cand_masks)
         refined_masks = be.refine_tracks_batched(
             [sh.batch for sh in shards], tess.field, tess.constraints,
-            cand_masks)
+            cand_masks, edges=tess.order_edges)
         keeps = be.compact_masks(refined_masks)
         for sid, sh, ids, keep in zip(sids, shards, ids_list, keeps):
             per_shard.append({"shard": sid, "docs": sh.n,

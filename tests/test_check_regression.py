@@ -1,0 +1,92 @@
+"""The bench-regression gate script: pass/fail semantics, the --suite
+multi-pair mode, and the readable row-set-mismatch diff (regression:
+missing rows used to be silently informational; as a blocking CI gate
+they must fail instead — and never crash with a KeyError)."""
+import json
+
+import pytest
+
+from benchmarks import check_regression
+
+
+def _write(path, rows, suite="backends"):
+    path.write_text(json.dumps({"suite": suite, "scale": 0.05,
+                                "rows": rows}))
+    return str(path)
+
+
+def _row(name, us, **kw):
+    return {"name": name, "us_per_call": us, "derived": "", **kw}
+
+
+def test_pass_and_threshold_fail(tmp_path, capsys):
+    base = _write(tmp_path / "base.json",
+                  [_row("q1", 1000.0), _row("q2", 2000.0)])
+    ok = _write(tmp_path / "ok.json",
+                [_row("q1", 1400.0), _row("q2", 1000.0)])
+    assert check_regression.main(["--current", ok, "--baseline",
+                                  base]) == 0
+    slow = _write(tmp_path / "slow.json",
+                  [_row("q1", 1600.0), _row("q2", 2000.0)])
+    assert check_regression.main(["--current", slow, "--baseline",
+                                  base]) == 1
+    assert "REGRESSION" in capsys.readouterr().out
+
+
+def test_min_us_rows_are_informational(tmp_path):
+    base = _write(tmp_path / "base.json", [_row("tiny", 10.0)])
+    cur = _write(tmp_path / "cur.json", [_row("tiny", 400.0)])
+    assert check_regression.main(["--current", cur, "--baseline",
+                                  base]) == 0
+
+
+def test_missing_row_fails_with_readable_diff(tmp_path, capsys):
+    """A query on one side only must fail with a two-column diff (not
+    crash, not silently pass) — either direction."""
+    base = _write(tmp_path / "base.json",
+                  [_row("q1", 1000.0), _row("gone", 1000.0)])
+    cur = _write(tmp_path / "cur.json",
+                 [_row("q1", 1000.0), _row("new", 1000.0)])
+    assert check_regression.main(["--current", cur, "--baseline",
+                                  base]) == 1
+    err = capsys.readouterr().err
+    assert "row-set mismatch" in err
+    assert "- gone" in err and "missing from current run" in err
+    assert "+ new" in err and "missing from baseline" in err
+
+
+def test_non_numeric_rows_never_match(tmp_path):
+    """Parity-summary rows (us_per_call == \"\") stay out of the row-set
+    comparison entirely."""
+    base = _write(tmp_path / "base.json",
+                  [_row("q1", 1000.0), _row("parity_all", "")])
+    cur = _write(tmp_path / "cur.json", [_row("q1", 1000.0)])
+    assert check_regression.main(["--current", cur, "--baseline",
+                                  base]) == 0
+
+
+def test_suite_mode(tmp_path, capsys):
+    """--suite a,b resolves BENCH_<s>.json in both dirs and fails if any
+    pair fails or a file is missing."""
+    cur_dir, base_dir = tmp_path / "cur", tmp_path / "base"
+    cur_dir.mkdir(), base_dir.mkdir()
+    for d in (cur_dir, base_dir):
+        _write(d / "BENCH_a.json", [_row("qa", 1000.0)], suite="a")
+        _write(d / "BENCH_b.json", [_row("qb", 1000.0)], suite="b")
+    args = ["--current-dir", str(cur_dir), "--baseline-dir", str(base_dir)]
+    assert check_regression.main(["--suite", "a,b", *args]) == 0
+    _write(cur_dir / "BENCH_b.json", [_row("qb", 9000.0)], suite="b")
+    assert check_regression.main(["--suite", "a,b", *args]) == 1
+    assert check_regression.main(["--suite", "a", *args]) == 0
+    assert check_regression.main(["--suite", "a,missing", *args]) == 1
+    assert "MISSING FILE" in capsys.readouterr().err
+
+
+def test_arg_validation():
+    with pytest.raises(SystemExit):
+        check_regression.main([])
+    with pytest.raises(SystemExit):
+        check_regression.main(["--suite", "a", "--current", "x",
+                               "--baseline", "y"])
+    with pytest.raises(SystemExit):
+        check_regression.main(["--current", "x"])

@@ -223,6 +223,61 @@ def test_refine_tracks_batched(impl):
         assert not got[i, n:].any()              # padding never hits
 
 
+@pytest.mark.parametrize("n_docs,max_len,c", [(1, 5, 1), (31, 10, 2),
+                                              (300, 12, 3)])
+def test_refine_tracks_first_hits(n_docs, max_len, c):
+    """The first-hit (hi, lo) word tables: interpret ≡ reference ≡ the
+    numpy host oracle's packed uint64 min, sentinel where a constraint
+    never hits — and the mask output is unchanged by requesting them."""
+    from repro.exec.refine import refine_tracks_host
+    rng = np.random.default_rng(n_docs * 13 + c)
+    track, cons, pts, rows, cov = _refine_case(rng, n_docs, max_len, c,
+                                               empty_every=4)
+    lat, lng, t, splits = track
+    _, want_table = refine_tracks_host(lat, lng, t, splits, n_docs, cons,
+                                       with_first_hits=True)
+    plain = np.asarray(ops.refine_tracks(pts, rows, cov, n_docs,
+                                         impl="reference"))
+    for impl in ("interpret", "reference"):
+        m, hi, lo = ops.refine_tracks(pts, rows, cov, n_docs, impl=impl,
+                                      with_first_hits=True)
+        m, hi, lo = np.asarray(m), np.asarray(hi), np.asarray(lo)
+        got = ((hi.astype(np.uint64) << np.uint64(32))
+               | lo.astype(np.uint64)).T
+        assert np.array_equal(m, plain), impl
+        assert np.array_equal(got, want_table), impl
+        # batched single-shard path agrees word for word
+        mb, hib, lob = ops.refine_tracks_batched(
+            pts[None], rows[None], cov, n_docs, impl=impl,
+            with_first_hits=True)
+        assert np.array_equal(np.asarray(mb)[0], m), impl
+        assert np.array_equal(np.asarray(hib)[0], hi), impl
+        assert np.array_equal(np.asarray(lob)[0], lo), impl
+
+
+@pytest.mark.parametrize("impl", ["interpret", "reference"])
+def test_refine_tracks_first_hits_empty_inputs(impl):
+    """Zero docs / zero points / empty shards return all-sentinel tables
+    of the right shape."""
+    from repro.exec.refine import FIRST_HIT_NONE, pack_constraints
+    from repro.geo.areatree import AreaTree
+    cov = jnp.asarray(pack_constraints([(AreaTree.empty(), 0.0, 1.0),
+                                        (AreaTree.everything(), 0.0, 1.0)]))
+    pts0 = jnp.zeros((4, 0), jnp.uint32)
+    rows0 = jnp.zeros((0,), jnp.int32)
+    m, hi, lo = ops.refine_tracks(pts0, rows0, cov, 5, impl=impl,
+                                  with_first_hits=True)
+    table = ((np.asarray(hi).astype(np.uint64) << np.uint64(32))
+             | np.asarray(lo).astype(np.uint64))
+    assert table.shape == (2, 5) and (table == FIRST_HIT_NONE).all()
+    assert not np.asarray(m).any()
+    mb, hib, lob = ops.refine_tracks_batched(
+        jnp.zeros((0, 4, 0), jnp.uint32), jnp.zeros((0, 0), jnp.int32),
+        cov, 5, impl=impl, with_first_hits=True)
+    assert np.asarray(mb).shape == (0, 5)
+    assert np.asarray(hib).shape == (0, 2, 5)
+
+
 @pytest.mark.parametrize("impl", ["interpret", "reference"])
 def test_refine_tracks_empty_inputs(impl):
     """Zero docs, zero points, empty cover region."""

@@ -208,6 +208,203 @@ def test_track_pack_cache_lifecycle():
     assert len(be.device_cache) == 0
 
 
+# ------------------------------------------------------- ordered constraints
+
+PA, PB, PC = (37.40, -122.40), (37.60, -122.20), (37.90, -121.90)
+
+
+def _pt_region(latlng, d=100_000):
+    ix, iy = M.latlng_to_xy(*latlng)
+    return AreaTree.from_box(int(ix) - d, int(iy) - d,
+                             int(ix) + d, int(iy) + d, max_level=7)
+
+
+def _track(*pts):
+    """[(latlng, t), …] → track record field."""
+    return {"lat": [p[0][0] for p in pts], "lng": [p[0][1] for p in pts],
+            "t": [float(p[1]) for p in pts]}
+
+
+#: handcrafted ordering verdicts for A.then(B): id → (track, A-then-B?)
+#: (every case the first-hit semantics must decide: order, reverse order,
+#: exact tie, missing hit, minimal strict gap, empty track, and an early
+#: B revisited later — first-hit compares the *first* hits, so a later
+#: B hit cannot resurrect the doc)
+_AB_CASES = [
+    (_track((PA, 100.0), (PB, 200.0)), True),     # A then B
+    (_track((PB, 100.0), (PA, 200.0)), False),    # B before A
+    (_track((PA, 150.0), (PB, 150.0)), False),    # tie ⇒ not-before
+    (_track((PA, 100.0)), False),                 # B never hit
+    (_track((PA, 100.0), (PB, 100.0000001)), True),  # strict, minimal gap
+    (_track(), False),                            # empty track
+    (_track((PB, 50.0), (PA, 100.0), (PB, 300.0)), False),  # first(B)<first(A)
+]
+
+
+@pytest.fixture(scope="module")
+def ordered_db():
+    """_AB_CASES plus random filler, sharded at word-boundary sizes (and
+    one empty shard) so the bitset/table pad paths are exercised."""
+    recs = [{"id": i, "track": tr} for i, (tr, _) in enumerate(_AB_CASES)]
+    rng = np.random.default_rng(23)
+    # empty_every=10 keeps the last shard's lone doc (id 63) non-empty so
+    # every wave issues a real refine launch (the launch-contract test)
+    for r in _walks(len(recs) + 57, rng, empty_every=10)[len(recs):]:
+        recs.append(r)
+    sizes = [32, 0, 31, 1]
+    bounds = np.cumsum([0] + sizes)
+    key = lambda r: int(np.searchsorted(bounds, r["id"], "right") - 1)
+    db = build_fdb("Ordered", _track_schema(), recs,
+                   num_shards=len(sizes), shard_key=key)
+    assert [s.n for s in db.shards] == sizes
+    return db
+
+
+def _ab_tess():
+    return Tesseract(_pt_region(PA), 0.0, 1000.0).then(
+        _pt_region(PB), 0.0, 1000.0)
+
+
+def test_ordered_refine_semantics_and_parity(ordered_db):
+    """Handcrafted first-hit verdicts hold, byte-identically across
+    backends, per-shard and wave-batched."""
+    cat = Catalog()
+    cat.register(ordered_db)
+    tess = _ab_tess()
+    want = sorted(i for i, (_, ok) in enumerate(_AB_CASES) if ok)
+    ids = {}
+    for bname in ("numpy", "jax"):
+        res = AdHocEngine(cat, num_servers=2, backend=bname,
+                          wave=3).collect(fdb("Ordered").tesseract(tess))
+        got = sorted(x for x in res.batch["id"].values.tolist()
+                     if x < len(_AB_CASES))
+        ids[bname] = sorted(res.batch["id"].values.tolist())
+        assert got == want, bname
+    assert ids["numpy"] == ids["jax"]
+    # per-shard (wave=1 path) agrees too
+    res1 = AdHocEngine(cat, num_servers=2, backend="jax", wave=1).collect(
+        fdb("Ordered").tesseract(tess))
+    assert sorted(res1.batch["id"].values.tolist()) == ids["jax"]
+
+
+def test_ordered_chain_of_three(ordered_db):
+    """then().then() chains: every pairwise edge must hold — an
+    out-of-order middle leg kills the doc even when the outer pair is
+    ordered correctly."""
+    recs = [
+        {"id": 0, "track": _track((PA, 100.0), (PB, 200.0), (PC, 300.0))},
+        {"id": 1, "track": _track((PA, 100.0), (PC, 150.0), (PB, 200.0))},
+        {"id": 2, "track": _track((PB, 90.0), (PA, 100.0), (PB, 200.0),
+                                  (PC, 300.0))},
+        {"id": 3, "track": _track((PA, 100.0), (PB, 200.0), (PC, 200.0))},
+    ]
+    db = build_fdb("Chain", _track_schema(), recs, num_shards=2)
+    cat = Catalog()
+    cat.register(db)
+    tess = (Tesseract(_pt_region(PA), 0.0, 1000.0)
+            .then(_pt_region(PB), 0.0, 1000.0)
+            .then(_pt_region(PC), 0.0, 1000.0))
+    for bname in ("numpy", "jax"):
+        res = AdHocEngine(cat, num_servers=2, backend=bname).collect(
+            fdb("Chain").tesseract(tess))
+        # 1: C before B; 2: first(B) < first(A); 3: B/C tie
+        assert sorted(res.batch["id"].values.tolist()) == [0], bname
+
+
+def test_ordered_first_hit_table_parity(ordered_db, walks_db):
+    """The per-(doc × constraint) first-hit table itself is byte-equal
+    across backends — full-shard and candidate-restricted — on both the
+    handcrafted and the random word-boundary DBs."""
+    from repro.exec.refine import FIRST_HIT_NONE
+    npb, jxb = get_backend("numpy"), get_backend("jax")
+    rng = np.random.default_rng(3)
+    cons = [(_pt_region(PA), 0.0, 1000.0), (_pt_region(PB), 0.0, 1000.0)]
+    for db, cs in ((ordered_db, cons),
+                   (walks_db, [(_region(rng), 0.0, 2 * 86400.0),
+                               (_region(rng), 43200.0, 3 * 86400.0)])):
+        jxb.prime_fdb(db)
+        batches = [s.batch for s in db.shards]
+        cands = [rng.random(b.n) < 0.8 for b in batches]
+        for cand_list in (None, cands):
+            m_n, t_n = npb.refine_tracks_batched(
+                batches, "track", cs, cand_list, with_first_hits=True)
+            m_j, t_j = jxb.refine_tracks_batched(
+                batches, "track", cs, cand_list, with_first_hits=True)
+            for a, b in zip(m_n, m_j):
+                assert np.array_equal(a, b)
+            for a, b in zip(t_n, t_j):
+                assert a.dtype == np.uint64 and b.dtype == np.uint64
+                assert np.array_equal(a, b)
+    # handcrafted table spot checks (shard 0 holds the _AB_CASES docs)
+    _, tables = npb.refine_tracks_batched(
+        [ordered_db.shards[0].batch], "track", cons, with_first_hits=True)
+    tab = tables[0]
+    from repro.exec.refine import f64_sort_key
+    assert tab[0, 0] == f64_sort_key(100.0) and \
+        tab[0, 1] == f64_sort_key(200.0)
+    assert tab[2, 0] == tab[2, 1] == f64_sort_key(150.0)   # exact tie
+    assert tab[3, 1] == FIRST_HIT_NONE                     # B never hit
+    assert tab[5, 0] == tab[5, 1] == FIRST_HIT_NONE        # empty track
+    assert tab[6, 1] == f64_sort_key(50.0)                 # first B hit
+
+
+def test_ordered_launch_contract(ordered_db):
+    """Ordering rides the same fused refine launches: still ⌈shards/wave⌉
+    refine_tracks_batched dispatches per query, zero per-shard ops."""
+    cat = Catalog()
+    cat.register(ordered_db)
+    flow = fdb("Ordered").tesseract(_ab_tess())
+    wave = 3
+    eng = AdHocEngine(cat, num_servers=2, backend="jax", wave=wave)
+    eng.collect(flow)                          # warm
+    ops.reset_launch_counts()
+    eng.collect(flow)
+    lc = ops.launch_counts()
+    waves = math.ceil(ordered_db.num_shards / wave)
+    assert lc.get("refine_tracks_batched") == waves
+    assert lc.get("compact_batched") == waves
+    assert lc.get("refine_tracks", 0) == 0
+    assert lc.get("compact", 0) == 0
+
+
+def test_ordered_without_spacetime_index():
+    """Ordered constraints over an unindexed track still run through the
+    refine op (full scan + first-hit pass) and match across backends."""
+    schema = Schema("PlainSeq", [
+        Field("id", INT, indexes=("tag",)),
+        Field("track", MESSAGE, fields=[
+            Field("lat", DOUBLE, repeated=True),
+            Field("lng", DOUBLE, repeated=True),
+            Field("t", DOUBLE, repeated=True)])])
+    recs = [{"id": i, "track": tr} for i, (tr, _) in enumerate(_AB_CASES)]
+    cat = Catalog()
+    cat.register(build_fdb("PlainSeq", schema, recs, num_shards=3))
+    from repro.core.planner import plan_flow
+    tess = _ab_tess()
+    flow = fdb("PlainSeq").find(tess.expr())
+    plan = plan_flow(flow, cat)
+    assert plan.probes == [] and len(plan.refines) == 1
+    assert plan.refines[0].edges == [(0, 1)]
+    want = sorted(i for i, (_, ok) in enumerate(_AB_CASES) if ok)
+    for bname in ("numpy", "jax"):
+        res = AdHocEngine(cat, num_servers=2, backend=bname).collect(flow)
+        assert sorted(res.batch["id"].values.tolist()) == want, bname
+
+
+def test_ordered_tesseract_stats(ordered_db):
+    """tesseract_stats threads the ordering edges: refined counts shrink
+    to the ordered survivors while candidates stay index-driven."""
+    plain = Tesseract(_pt_region(PA), 0.0, 1000.0).also(
+        _pt_region(PB), 0.0, 1000.0)
+    for bname in ("numpy", "jax"):
+        s_plain = tesseract_stats(ordered_db, plain, backend=bname)
+        s_ord = tesseract_stats(ordered_db, _ab_tess(), backend=bname)
+        assert s_ord["candidates"] == s_plain["candidates"]
+        assert s_ord["refined"] <= s_plain["refined"]
+        assert s_ord["refined"] == \
+            sum(1 for _, ok in _AB_CASES if ok)
+
+
 # ------------------------------------------------- device-side ragged gather
 
 def test_device_ragged_gather_parity(walks_db):

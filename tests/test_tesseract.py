@@ -212,6 +212,115 @@ def test_tesseract_window_validation():
     with pytest.raises(ValueError):
         Tesseract(AreaTree.everything(), 0.0, 1.0).also(
             AreaTree.everything(), 10.0, 5.0)
+    with pytest.raises(ValueError):
+        Tesseract(AreaTree.everything(), 0.0, 1.0).then(
+            AreaTree.everything(), 10.0, 5.0)
+
+
+# ----------------------------------------------------- ordered constraints
+
+def test_then_before_builder():
+    """then() = also() + edge(prev, new); before() adds arbitrary edges;
+    builders stay immutable (no edge leaks into the parent)."""
+    ev = AreaTree.everything()
+    base = Tesseract(ev, 0.0, 1.0).also(ev, 2.0, 3.0)
+    assert base.order_edges == ()
+    chained = Tesseract(ev, 0.0, 1.0).then(ev, 2.0, 3.0).then(ev, 4.0, 5.0)
+    assert chained.order_edges == ((0, 1), (1, 2))
+    assert base.order_edges == ()                 # parent untouched
+    dag = base.also(ev, 4.0, 5.0).before(0, 2).before(1, 2)
+    assert dag.order_edges == ((0, 2), (1, 2))
+    with pytest.raises(ValueError):
+        base.before(0, 5)                         # out of range
+    with pytest.raises(ValueError):
+        base.before(1, 1)                         # self-edge
+    assert "2 ordering edges" in repr(chained)
+    # unordered builders keep compiling to plain InSpaceTime conjuncts
+    from repro.core.exprs import InSpaceTimeSeq
+    assert isinstance(chained.expr()._expr, InSpaceTimeSeq)
+    assert not isinstance(base.expr()._expr, InSpaceTimeSeq)
+
+
+def test_planner_compiles_ordered_refine(trips_catalog, two_leg_tess):
+    """Ordered constraints compile to per-constraint spacetime probes plus
+    ONE RefineSpec carrying the edges — and merging with plain InSpaceTime
+    conjuncts offsets the edges to the merged indices."""
+    sf_t, bk_t = window(6, 12), window(6, 14)
+    ordered = (Tesseract(city_region("SF"), *sf_t)
+               .then(city_region("Berkeley"), *bk_t))
+    plan = plan_flow(fdb("Trips").tesseract(ordered), trips_catalog)
+    assert [p.kind for p in plan.probes] == ["spacetime", "spacetime"]
+    assert plan.residual is None
+    assert len(plan.refines) == 1
+    assert plan.refines[0].constraints and plan.refines[0].edges == [(0, 1)]
+    assert "ordering edges" in plan.describe()
+    # plain conjunct ahead of the ordered node: edges shift past it
+    plain = Tesseract(city_region("LA"), *window(0, 23)).expr()
+    plan2 = plan_flow(fdb("Trips").find(plain & ordered.expr()),
+                      trips_catalog)
+    assert len(plan2.refines) == 1
+    assert len(plan2.refines[0].constraints) == 3
+    assert plan2.refines[0].edges == [(1, 2)]
+
+
+def brute_force_ordered_ids(trips, tess):
+    """Reference ordered semantics straight off the record dicts: every
+    constraint hits AND first-hit(i) strictly before first-hit(j) per
+    edge (first hit = min t among the constraint's satisfying points)."""
+    out = []
+    for tr in trips:
+        keys = M.latlng_to_morton(np.asarray(tr["track"]["lat"]),
+                                  np.asarray(tr["track"]["lng"]))
+        ts = np.asarray(tr["track"]["t"])
+        firsts, ok = [], True
+        for region, t0, t1 in tess.constraints:
+            hit = region.contains(keys) & (ts >= t0) & (ts <= t1)
+            if not np.any(hit):
+                ok = False
+                break
+            firsts.append(ts[hit].min())
+        if ok:
+            for i, j in tess.order_edges:
+                if not firsts[i] < firsts[j]:
+                    ok = False
+                    break
+        if ok:
+            out.append(tr["id"])
+    return sorted(out)
+
+
+def test_ordered_query_matches_brute_force(trips_world, trips_catalog):
+    """Acceptance: ordered trip-id sets byte-identical across backends on
+    ≥10 shards, and both match reference semantics — with ordering a
+    strict subset of the unordered result on this world."""
+    sf_t, bk_t = window(6, 12), window(6, 14)
+    ordered = (Tesseract(city_region("SF"), *sf_t)
+               .then(city_region("Berkeley"), *bk_t))
+    unordered = (Tesseract(city_region("SF"), *sf_t)
+                 .also(city_region("Berkeley"), *bk_t))
+    want = brute_force_ordered_ids(trips_world["trips"], ordered)
+    ids = {}
+    for b in ("numpy", "jax"):
+        res = AdHocEngine(trips_catalog, num_servers=4,
+                          backend=b).collect(
+            fdb("Trips").tesseract(ordered))
+        ids[b] = sorted(res.batch["id"].values.tolist())
+    assert ids["numpy"] == ids["jax"] == want
+    plain = set(brute_force_ids(trips_world["trips"], unordered))
+    assert set(want) <= plain
+
+
+def test_ordered_flume_matches_adhoc(trips_catalog, tmp_path):
+    ordered = (Tesseract(city_region("SF"), *window(6, 12))
+               .then(city_region("Berkeley"), *window(6, 14)))
+    flow = (fdb("Trips").tesseract(ordered)
+            .map(lambda p: proto(id=p.id)))
+    ref = AdHocEngine(trips_catalog, num_servers=4,
+                      backend="numpy").collect(flow)
+    fl = FlumeEngine(trips_catalog, ckpt_dir=str(tmp_path), max_workers=4,
+                     backend="jax").collect(flow)
+    assert sorted(ref.batch["id"].values.tolist()) \
+        == sorted(fl.batch["id"].values.tolist())
 
 
 def test_spacetime_index_rejects_overflowing_level():
