@@ -2,11 +2,16 @@
 
 Extends the per-kernel microbenchmarks (bench_kernels) to the full query
 path: every Q1–Q5 benchmark query runs under both registered backends —
-the jax side through the **batched** multi-shard wave path (stacked-shard
-kernel launches, device-resident columns) — and the report shows per-query
-wall time, speedup, kernel-launch counts, and a byte-level parity verdict
-against the numpy per-shard oracle — the contract every future lowering
-(GPU, sharded meshes) must keep.
+the jax side through the **fused** wave path (one ``run_wave_fused``
+dispatch per ⌈shards/wave⌉ wave chaining probe → compact → segment-agg,
+device-resident columns; ``REPRO_EXEC_FUSED=0`` restores the legacy
+per-primitive wave launches) — and the report shows per-query wall time,
+speedup, kernel-launch counts, and a byte-level parity verdict against
+the numpy per-shard oracle — the contract every future lowering (GPU,
+sharded meshes) must keep.  Timing blocks on the last device output
+before the clock stops (jax dispatch is async).  With
+``benchmarks.run --profile`` each query row adds a per-stage
+(upload/probe/refine/compact/agg) device-time breakdown.
 
 On CPU the jax backend resolves to the ``reference`` kernel impl, so the
 timing column measures dispatch overhead, not TPU speedup; run with
@@ -17,11 +22,13 @@ any suite reports a false one (the CI bench smoke gate).
 """
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
 
 from repro.exec import AdHocEngine, get_backend
+from repro.kernels import fused as fused_kernels
 from repro.fdb.index import bitmap_from_ids, bitmap_full
 from repro.kernels import ops as kernel_ops
 
@@ -49,12 +56,23 @@ def batches_identical(a, b) -> bool:
     return True
 
 
+def _sync(out):
+    """jax dispatch is async: block on any device values reachable from
+    ``out`` so the clock stops at completion, not at enqueue."""
+    try:
+        import jax
+        jax.block_until_ready(out)
+    except Exception:
+        pass
+    return out
+
+
 def _time(fn, repeats=3):
-    fn()                                     # warm (jit compile etc.)
+    _sync(fn())                              # warm (jit compile etc.)
     best = float("inf")
     for _ in range(repeats):
         t0 = time.perf_counter()
-        out = fn()
+        out = _sync(fn())
         best = min(best, time.perf_counter() - t0)
     return out, best * 1e3                   # ms
 
@@ -88,6 +106,11 @@ def _bench_primitives(rows, print_fn):
 
 def run(scale: float = 0.5, print_fn=print, raise_on_mismatch: bool = True):
     rows: list = []
+    # REPRO_EXEC_PROFILE=1 (benchmarks.run --profile): the fused pipeline
+    # runs its stages eagerly with per-stage device sync so each query row
+    # carries a "stages" timing breakdown (diagnostic mode — the fused
+    # single-dispatch timing above is the real number)
+    profile = os.environ.get("REPRO_EXEC_PROFILE") == "1"
     _bench_primitives(rows, print_fn)
 
     cat = build_catalog(scale=scale)
@@ -98,16 +121,28 @@ def run(scale: float = 0.5, print_fn=print, raise_on_mismatch: bool = True):
     for qname, (cities, months) in QUERIES.items():
         flow = q_variability(cities, months)
         results, times = {}, {}
+        stages, launches = None, 0
         for bname, eng in engines.items():
             if bname == "jax":
                 kernel_ops.reset_launch_counts()
             res, ms = _time(lambda e=eng: e.collect(flow), repeats=2)
             results[bname], times[bname] = res, ms
-        # kernel dispatches per collect on the batched jax path: launch
-        # counts are deterministic, so the 3 timed calls (warm + 2
-        # repeats) divide evenly; the contract is ⌈shards/wave⌉ launches
-        # per primitive, not per shard
-        launches = sum(kernel_ops.launch_counts().values()) // 3
+            if bname != "jax":
+                continue
+            # kernel dispatches per collect on the batched jax path:
+            # launch counts are deterministic, so the 3 timed calls
+            # (warm + 2 repeats) divide evenly.  On the fused path the
+            # whole query is ⌈shards/wave⌉ ``run_wave_fused`` dispatches
+            # total; with REPRO_EXEC_FUSED=0 it is ⌈shards/wave⌉ per
+            # primitive
+            launches = sum(kernel_ops.launch_counts().values()) // 3
+            if profile:
+                # per-stage device ms (upload/probe/refine/compact/agg)
+                # for ONE post-warm collect, so compile time stays out
+                fused_kernels.reset_stage_times()
+                _sync(eng.collect(flow))
+                stages = {k: round(v, 3)
+                          for k, v in fused_kernels.stage_times().items()}
         parity = batches_identical(results["numpy"].batch,
                                    results["jax"].batch) \
             and results["numpy"].profile.rows_selected \
@@ -118,6 +153,7 @@ def run(scale: float = 0.5, print_fn=print, raise_on_mismatch: bool = True):
             "name": f"backend_e2e_{qname}",
             "us_per_call": round(times["jax"] * 1e3, 1),
             "parity": 1 if parity else 0,
+            **({"stages": stages} if stages else {}),
             "derived": (f"numpy={times['numpy']:.1f}ms "
                         f"jax={times['jax']:.1f}ms "
                         f"speedup={speedup:.2f}x "
@@ -125,7 +161,8 @@ def run(scale: float = 0.5, print_fn=print, raise_on_mismatch: bool = True):
                         f"launches={launches} "
                         f"shards={n_shards} wave={wave} "
                         f"parity={'OK' if parity else 'MISMATCH'}")})
-        print_fn(f"  {qname}: {rows[-1]['derived']}")
+        print_fn(f"  {qname}: {rows[-1]['derived']}"
+                 + (f" stages={stages}" if stages else ""))
     rows.append({"name": "backend_parity_all",
                  "us_per_call": "",
                  "parity": 1 if all_parity else 0,

@@ -10,17 +10,19 @@ For each trip query the report shows
   * a byte-level parity verdict between the backends' trip-id sets *and*
     between their per-shard candidate/refined counts (the
     ``refine_tracks`` op parity gate), and
-  * the refine launch count on the jax path: the exact pass is
-    ⌈shards/wave⌉ fused ``refine_tracks_batched`` device launches per
-    query — the per-shard host refine is gone from the hot loop (zero
-    ``refine_tracks`` single-shard dispatches).
+  * the launch count on the jax path: the whole selection (probe →
+    exact refine → compact) is ⌈shards/wave⌉ fused ``run_wave_fused``
+    device dispatches per query — the per-shard host refine and the
+    per-primitive launches are gone from the hot loop (with
+    ``REPRO_EXEC_FUSED=0`` the evidence reverts to ⌈shards/wave⌉
+    ``refine_tracks_batched`` launches, still zero per-shard ops).
 
 Q8–Q9 are the *ordered* (A-then-B) variants of Q6–Q7: the same legs
 sequenced with ``Tesseract.then()``.  Their parity verdict additionally
 compares the per-(doc × constraint) **first-hit timestamp tables** across
 backends byte-for-byte (the table the ordering DAG is resolved against),
-and their launch evidence shows ordering rides the same fused refine
-launches — no extra dispatches.
+and their launch evidence shows ordering rides the same fused wave
+dispatches — no extra launches.
 
 The pruning ratio is the subsystem's reason to exist: for selective
 regions the index must prune ≥ 90 % of trips before the exact pass.
@@ -34,6 +36,7 @@ import numpy as np
 
 from repro.data.synthetic import generate_world
 from repro.exec import AdHocEngine, Catalog, get_backend
+from repro.exec.batched import fused_enabled
 from repro.fdb import build_fdb
 from repro.kernels import ops
 from repro.tess import tesseract_stats
@@ -55,12 +58,23 @@ def _first_hit_parity(db, tess) -> bool:
     return all(np.array_equal(a, b) for a, b in zip(tab_n, tab_j))
 
 
+def _sync(out):
+    """jax dispatch is async: block on any device values reachable from
+    ``out`` so the clock stops at completion, not at enqueue."""
+    try:
+        import jax
+        jax.block_until_ready(out)
+    except Exception:
+        pass
+    return out
+
+
 def _time(fn, repeats=3):
-    fn()                                     # warm (jit compile etc.)
+    _sync(fn())                              # warm (jit compile etc.)
     best = float("inf")
     for _ in range(repeats):
         t0 = time.perf_counter()
-        out = fn()
+        out = _sync(fn())
         best = min(best, time.perf_counter() - t0)
     return out, best * 1e3                   # ms
 
@@ -100,15 +114,24 @@ def run(scale: float = 0.5, print_fn=print, raise_on_mismatch: bool = True):
         refine_parity = stats["per_shard"] == stats_j["per_shard"]
         if ordered:
             refine_parity &= _first_hit_parity(db, tess)
-        # launch evidence: the exact pass is ⌈shards/wave⌉ fused device
-        # launches per query — no per-shard host refine remains
+        # launch evidence: the whole selection (probe → refine → compact)
+        # is ⌈shards/wave⌉ ``run_wave_fused`` dispatches per query — no
+        # per-primitive or per-shard launches remain.  REPRO_EXEC_FUSED=0
+        # restores the legacy contract: ⌈shards/wave⌉ batched refine
+        # launches, still zero per-shard host refines.
         ops.reset_launch_counts()
         engines["jax"].collect(flow)
         lc = ops.launch_counts()
         waves = math.ceil(db.num_shards / engines["jax"].wave)
-        refine_launches = lc.get("refine_tracks_batched", 0)
-        fused = (refine_launches == waves
-                 and lc.get("refine_tracks", 0) == 0)
+        if fused_enabled():
+            refine_launches = lc.get("run_wave_fused", 0)
+            fused = (refine_launches == waves
+                     and lc.get("refine_tracks_batched", 0) == 0
+                     and lc.get("refine_tracks", 0) == 0)
+        else:
+            refine_launches = lc.get("refine_tracks_batched", 0)
+            fused = (refine_launches == waves
+                     and lc.get("refine_tracks", 0) == 0)
         parity = bool(np.array_equal(ids["numpy"], ids["jax"])) \
             and results["numpy"].profile.rows_selected \
             == results["jax"].profile.rows_selected \
@@ -127,7 +150,9 @@ def run(scale: float = 0.5, print_fn=print, raise_on_mismatch: bool = True):
                         f"refined={stats['refined']} "
                         f"pruning={stats['pruning']:.3f} "
                         f"ordered={1 if ordered else 0} "
-                        f"refine_launches={refine_launches}/{waves}waves "
+                        + ("fused_launches" if fused_enabled()
+                           else "refine_launches")
+                        + f"={refine_launches}/{waves}waves "
                         f"parity={'OK' if parity else 'MISMATCH'}")})
         print_fn(f"  {qname}: {rows[-1]['derived']}")
         if stats["pruning"] < 0.9:

@@ -33,6 +33,7 @@ def _write_json(suite: str, rows: list, scale: float, out_dir: str) -> str:
              "us_per_call": r.get("us_per_call",
                                   r.get("exec_ms", r.get("compute_ms"))),
              **({"parity": r["parity"]} if "parity" in r else {}),
+             **({"stages": r["stages"]} if "stages" in r else {}),
              **({"error": r["error"]} if "error" in r else {}),
              "derived": r.get("derived") or ",".join(
                  f"{k}={v}" for k, v in r.items()
@@ -58,7 +59,16 @@ def main() -> None:
                          "(wall time + parity bit)")
     ap.add_argument("--json-dir", default=".",
                     help="directory for --json output files")
+    ap.add_argument("--profile", action="store_true",
+                    help="run the fused wave pipeline stage-by-stage with "
+                         "per-stage device sync and add a per-stage "
+                         "(upload/probe/refine/compact/agg) ms breakdown "
+                         "to each backend query row (diagnostic: stages "
+                         "run eagerly, so wall times are not the fused "
+                         "single-dispatch numbers)")
     args = ap.parse_args()
+    if args.profile:
+        os.environ["REPRO_EXEC_PROFILE"] = "1"
 
     from . import (bench_backends, bench_fig11, bench_fig12,
                    bench_flume_overhead, bench_kernels, bench_table2,

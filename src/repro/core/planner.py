@@ -50,7 +50,10 @@ class IndexProbe:
     def needs_refine(self) -> bool:
         return self.kind in self.REFINE_KINDS
 
-    def run(self, shard: Shard) -> np.ndarray:
+    def run(self, shard: Shard, backend=None) -> np.ndarray:
+        """Probe bitmap for this conjunct.  ``backend`` (when given)
+        lowers index tails that run behind the exec seam — currently the
+        spacetime postings OR + span prune (``postings_bitmap``)."""
         idx = shard.index(self.path, self.kind)
         if idx is None:
             raise RuntimeError(f"missing index {self.kind} on {self.path}")
@@ -67,7 +70,7 @@ class IndexProbe:
             return idx.lookup_region(self.args[0])
         if self.kind == "spacetime":
             region, t0, t1 = self.args
-            return idx.lookup(region, t0, t1)
+            return idx.lookup(region, t0, t1, backend=backend)
         raise ValueError(self.kind)
 
 
@@ -272,8 +275,9 @@ def probe_shard(shard: Shard, probes: Sequence[IndexProbe],
     them with the ``bitset`` kernel (``kernels.ops.bitmap_intersect``).
     """
     from ..exec.backend import as_backend   # lazy: exec imports this module
-    return as_backend(backend).intersect_bitmaps(
-        shard.all_bitmap(), [p.run(shard) for p in probes])
+    be = as_backend(backend)
+    return be.intersect_bitmaps(
+        shard.all_bitmap(), [p.run(shard, backend=be) for p in probes])
 
 
 # --------------------------------------------------------------------------

@@ -173,11 +173,17 @@ class AdHocEngine:
         retry/drop path (best-effort contract unchanged)."""
         partials: List[_ShardPartial] = []
         retry: List[int] = []
+        waves = partition_waves(plan.shard_ids, self.wave)
         with ThreadPoolExecutor(max_workers=grant) as pool:
+            # each wave names its successor so a fused backend can stage
+            # wave k+1's device buffers while wave k computes
             futs = [pool.submit(run_wave_task, db, plan, wave, tables,
                                 self.catalog, fault_plan,
-                                backend=self.backend)
-                    for wave in partition_waves(plan.shard_ids, self.wave)]
+                                backend=self.backend,
+                                prefetch_sids=(waves[i + 1]
+                                               if i + 1 < len(waves)
+                                               else None))
+                    for i, wave in enumerate(waves)]
             for f in as_completed(futs):
                 done, failed = f.result()
                 partials.extend(done)

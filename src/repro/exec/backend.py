@@ -48,6 +48,26 @@ hot loop runs behind the seam too.  Ordered queries hand the op an
 applied device-side before the mask comes back — byte-parity extends to
 the first-hit table itself (``with_first_hits``).
 
+**Fused wave dispatch.**  ``run_wave_fused`` collapses a whole wave's
+probe → refine → compact → segment-agg chain into ONE device dispatch
+(:mod:`repro.kernels.fused`): the numpy base class is the loop-over-stages
+oracle, the jax override one jitted multi-stage pipeline with zero host
+syncs between stages.  On the fused path the launch contract tightens from
+⌈shards/wave⌉ launches *per primitive* to ⌈shards/wave⌉ **total** fused
+dispatches per query.  Engines fall back to the per-primitive path when
+the op declines or is ineligible: ``REPRO_EXEC_FUSED=0``, a backend
+without ``batched_dispatch``, a residual filter (needs gathered columns
+host-side), more than one refine spec, a refine spec with zero or more
+than 30 constraints, a shard without a packed track, or a wave whose
+tracks are all empty.  The fused *aggregation* stage additionally requires
+a single dense int-key group-by with only count/sum/avg/std_dev over dense
+numeric columns (``exec.batched.fused_agg_plan``) — other aggregate plans
+still run the fused selection stages and aggregate host-side from the
+gathered columns.  ``prefetch_wave`` stages wave *k+1*'s stacked buffers
+(refine point stacks, offset group codes, value stacks) through the
+``DeviceCache`` keyed entries while wave *k* computes — the async-prefetch
+half of the paper's pipelined evaluation.
+
 The jax backend additionally keeps stable per-FDb buffers (column values,
 valid-doc bitmaps, spacetime postings, packed track points) device-resident
 across queries — ``prime_fdb`` / :mod:`repro.exec.device_cache` — so the
@@ -67,7 +87,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from ..fdb.index import (bitmap_stack, ids_from_bitmap, mask_from_bitmap)
+from ..fdb.index import (bitmap_from_ids, bitmap_stack, ids_from_bitmap,
+                         mask_from_bitmap)
 from .refine import (FIRST_HIT_NONE, pack_constraints, pack_track_points,
                      refine_tracks_host)
 
@@ -183,6 +204,63 @@ class ExecBackend:
             return [m for m, _ in outs], [t for _, t in outs]
         return outs
 
+    # -------------------------------------------------- fused wave pipeline
+    def postings_bitmap(self, ids: np.ndarray, t_min: np.ndarray,
+                        t_max: np.ndarray, t0: float, t1: float,
+                        n_docs: int) -> np.ndarray:
+        """OR doc ``ids`` into a word bitmap and prune docs whose track
+        span ``[t_min, t_max]`` misses ``[t0, t1]`` — the tail of
+        ``SpaceTimeIndex.lookup`` behind the seam (host reference)."""
+        bm = bitmap_from_ids(np.asarray(ids, dtype=np.int64), n_docs)
+        overlap = (t_min <= t1) & (t_max >= t0)
+        return bm & bitmap_from_ids(
+            np.nonzero(overlap)[0].astype(np.int64), n_docs)
+
+    def run_wave_fused(self, shards, probes, refine=None, agg=None,
+                       prefetch_shards=None):
+        """Whole-wave probe → refine → compact → (segment-agg) as one
+        logical dispatch.  Returns ``(n_cands, ids_list, seg)``: per-shard
+        pre-refine candidate counts, selected doc ids, and — when ``agg``
+        (an ``exec.batched.FusedAggPlan``) is given — per-shard
+        ``(group_keys, [(count, sum, sumsq) per value slot])`` partials
+        over each shard's full group space.  May return ``None`` to
+        decline, in which case the engine runs the per-primitive path.
+
+        This base implementation is the loop-over-stages oracle the fused
+        overrides must match byte-for-byte; ``prefetch_shards`` is a hint
+        only (no-op on host backends)."""
+        shards = list(shards)
+        if not shards:
+            return [], [], ([] if agg is not None else None)
+        bms = self.probe_shards([sh.all_bitmap() for sh in shards], probes)
+        masks = [mask_from_bitmap(bm, sh.n) for bm, sh in zip(bms, shards)]
+        n_cands = [int(m.sum()) for m in masks]
+        if refine is not None:
+            masks = self.refine_tracks_batched(
+                [sh.batch for sh in shards], refine.path,
+                refine.constraints, masks, edges=refine.edges)
+        ids_list = self.compact_masks(masks)
+        seg = None
+        if agg is not None:
+            seg = []
+            for sh, ids in zip(shards, ids_list):
+                uniq, codes, g = agg.factorize(sh, backend=self)
+                if g == 0:
+                    seg.append((uniq, []))
+                    continue
+                csel = codes[ids]
+                slots = []
+                for vp in (agg.value_paths or [None]):
+                    vals = (sh.batch[vp].values[ids] if vp is not None
+                            else np.zeros(ids.size))
+                    slots.append(self.segment_aggregate(csel, vals, g))
+                seg.append((uniq, slots))
+        return n_cands, ids_list, seg
+
+    def prefetch_wave(self, shards, refine=None, agg=None) -> None:
+        """Stage a wave's stacked buffers ahead of compute (no-op on host
+        backends — there is nothing to upload)."""
+
     def gather_columns(self, batch, paths: Sequence[str],
                        ids: np.ndarray):
         """Selective column read of ``ids`` rows (host reference)."""
@@ -246,11 +324,17 @@ class JaxBackend(ExecBackend):
     def __init__(self, impl: Optional[str] = None):
         import jax  # container ships the jax_pallas toolchain
         import jax.numpy as jnp
+        from ..kernels import fused as fused_mod
         from ..kernels import ops
         from .device_cache import DeviceCache
         self._jax, self._jnp, self._ops = jax, jnp, ops
+        self._fused = fused_mod
         self.impl = impl
         self.device_cache = DeviceCache(jax)
+        #: when set to a list, the fused path appends ("prefetch", n) /
+        #: ("wave_done", shard_ids) markers — the prefetch-ordering tests'
+        #: evidence that wave k+1 staged before wave k finished
+        self.trace_events: Optional[list] = None
         # weak: a collected FDb drops out, so a new FDb reusing the same
         # address still primes, and a finalizer evicts its buffers.
         # Buffers are refcounted across FDbs — StreamingFDb snapshots
@@ -651,6 +735,220 @@ class JaxBackend(ExecBackend):
                     vals = np.asarray(dev[flat])
                 cols[p] = Column(vals, new_splits, c.vocab)
         return ColumnBatch(sub.schema, cols, ids.size)
+
+    # ----------------------------------------------------- fused wave path
+    def postings_bitmap(self, ids, t_min, t_max, t0, t1, n_docs):
+        """Postings OR + span prune as one device pass over the resident
+        ``t_min``/``t_max`` buffers (see ``kernels.fused``)."""
+        with self._jax.experimental.enable_x64():
+            tmin_d, tmax_d = self._dev(t_min), self._dev(t_max)
+        bm = self._ops.postings_bitmap(np.asarray(ids, dtype=np.int64),
+                                       tmin_d, tmax_d, float(t0), float(t1),
+                                       n_docs, impl=self._impl())
+        return np.asarray(bm, dtype=np.uint32)
+
+    def _refine_stack(self, shards, packs, path: str):
+        """Wave-stacked (pts [S, 4, P], rows [S, P]) device buffers for
+        the fused refine stage, keyed in the DeviceCache per wave
+        partition — resident per-shard packs are stacked once per
+        partition instead of re-stacked every query.  Only cached when
+        every source buffer is primed (the per-FDb finalizer then owns
+        eviction); padding matches ``refine_tracks_batched``."""
+        jnp = self._jnp
+        p_max = max(p.shape[1] for p, _ in packs)
+        src = tuple(id(sh.batch[path + ".lat"].values) for sh in shards)
+        keyed_ok = all(k in self._primed_refs for k in src)
+        key = ("refine_stack",) + src
+        if keyed_ok:
+            hit = self.device_cache.get_keyed(key)
+            if hit is not None:
+                return hit
+        pts_pad, rows_pad = [], []
+        for pts, rows in packs:
+            p = pts.shape[1]
+            dp, dr = self._dev(pts), self._dev(rows)
+            if p < p_max:
+                dp = jnp.zeros((4, p_max), jnp.uint32).at[:, :p].set(dp)
+                dr = jnp.full((p_max,), -1, jnp.int32).at[:p].set(dr)
+            pts_pad.append(dp)
+            rows_pad.append(dr)
+        out = (jnp.stack(pts_pad), jnp.stack(rows_pad))
+        if keyed_ok:
+            self.device_cache.put_keyed(key, out)
+        return out
+
+    def _agg_stacks(self, shards, agg, impl: str, n_max: int):
+        """Offset-coded group-code stack [S, n_max] (−1 pad) plus one
+        value stack per aggregated column for the fused segment stage,
+        keyed in the DeviceCache per wave partition.  Value stacks are
+        float64 under ``reference`` (bit-parity accumulation) and float32
+        otherwise — the same cast ``_segment_dispatch`` applies."""
+        jnp = self._jnp
+        facts = [agg.factorize(sh, backend=self) for sh in shards]
+        offsets = np.concatenate(
+            [[0], np.cumsum([g for _, _, g in facts])]).astype(np.int64)
+        total = int(offsets[-1])
+        if total == 0:
+            return facts, offsets, None, (), 0
+        src = tuple(id(sh.batch[agg.key_path].values) for sh in shards)
+        keyed_ok = all(k in self._primed_refs for k in src)
+        ckey = ("agg_codes", n_max) + src
+        codes_dev = self.device_cache.get_keyed(ckey) if keyed_ok else None
+        if codes_dev is None:
+            codes = np.full((len(shards), n_max), -1, dtype=np.int32)
+            for i, (sh, (_, c, g)) in enumerate(zip(shards, facts)):
+                if g:
+                    codes[i, :sh.n] = c + np.int32(offsets[i])
+            codes_dev = jnp.asarray(codes)
+            if keyed_ok:
+                self.device_cache.put_keyed(ckey, codes_dev)
+        ftag = "f64" if impl == "reference" else "f32"
+        dt = np.float64 if impl == "reference" else np.float32
+        vals_dev = []
+        for vp in (agg.value_paths or [None]):
+            if vp is None:
+                # count-only plan: a zeros stack so the segment stage
+                # still returns per-group row counts
+                with self._jax.experimental.enable_x64():
+                    vals_dev.append(jnp.zeros((len(shards), n_max), dt))
+                continue
+            vsrc = tuple(id(sh.batch[vp].values) for sh in shards)
+            vok = keyed_ok and all(k in self._primed_refs for k in vsrc)
+            vkey = ("agg_vals", ftag, n_max) + vsrc
+            dv = self.device_cache.get_keyed(vkey) if vok else None
+            if dv is None:
+                stack = np.zeros((len(shards), n_max), dtype=dt)
+                for i, sh in enumerate(shards):
+                    if sh.n:
+                        stack[i, :sh.n] = np.asarray(sh.batch[vp].values,
+                                                     dt)
+                with self._jax.experimental.enable_x64():
+                    dv = jnp.asarray(stack)
+                if vok:
+                    self.device_cache.put_keyed(vkey, dv)
+            vals_dev.append(dv)
+        return facts, offsets, codes_dev, tuple(vals_dev), total
+
+    def run_wave_fused(self, shards, probes, refine=None, agg=None,
+                       prefetch_shards=None):
+        """One fused dispatch for the whole wave (``kernels.fused``), or
+        ``None`` to decline to the per-primitive path: a refine spec with
+        zero or >30 constraints, a shard without a packed track, or a
+        wave whose tracks are all empty (the legacy path's host shortcut
+        already covers that case).  ``prefetch_shards`` — the next wave's
+        shards — are staged *before* this wave's outputs sync back to the
+        host, overlapping upload with compute."""
+        import time as _time
+        shards = list(shards)
+        probes = [list(ps) for ps in probes]
+        if not shards:
+            return [], [], ([] if agg is not None else None)
+        packs = None
+        edges: Tuple = ()
+        if refine is not None:
+            cons = list(refine.constraints)
+            edges = tuple(tuple(e) for e in refine.edges)
+            if not cons or len(cons) > 30:
+                return None
+            packs = [self._track_pack(sh.batch, refine.path)
+                     for sh in shards]
+            if any(p is None for p, _ in packs):
+                return None
+        ns = [sh.n for sh in shards]
+        n_max = max(ns)
+        fulls = [sh.all_bitmap() for sh in shards]
+        w = max(f.size for f in fulls)
+        if n_max == 0 or w == 0:
+            # all-empty wave: nothing to compute, but it still counts one
+            # fused dispatch so the ⌈shards/wave⌉ total-launch contract
+            # stays exact
+            self._ops.record_launch("run_wave_fused")
+            if prefetch_shards:
+                self.prefetch_wave(prefetch_shards, refine, agg)
+            seg = ([(np.zeros(0, dtype=np.int64), []) for _ in shards]
+                   if agg is not None else None)
+            return ([0] * len(shards),
+                    [np.zeros(0, dtype=np.int64) for _ in shards], seg)
+        if refine is not None and max(p.shape[1] for p, _ in packs) == 0:
+            return None
+        impl = self._impl()
+        profile = os.environ.get("REPRO_EXEC_PROFILE") == "1"
+        t_up = _time.perf_counter()
+        k = 1 + max((len(ps) for ps in probes), default=0)
+        stack = np.zeros((len(shards), k, w), dtype=np.uint32)
+        for i, (f, ps) in enumerate(zip(fulls, probes)):
+            stack[i, 0, :f.size] = f
+            for j, b in enumerate(ps):
+                stack[i, j + 1, :b.size] = b
+            for j in range(len(ps) + 1, k):
+                stack[i, j, :f.size] = f
+        probe_dev = self._jnp.asarray(stack)
+        ns_dev = self._jnp.asarray(np.asarray(ns, dtype=np.int32))
+        pts_stack = rows_stack = cov_dev = None
+        if refine is not None:
+            pts_stack, rows_stack = self._refine_stack(shards, packs,
+                                                       refine.path)
+            cov_dev = self._jnp.asarray(pack_constraints(cons))
+        codes_dev, vals_dev, total = None, (), 0
+        facts, offsets = [], None
+        if agg is not None:
+            facts, offsets, codes_dev, vals_dev, total = \
+                self._agg_stacks(shards, agg, impl, n_max)
+        if profile:
+            self._jax.block_until_ready(probe_dev)
+            self._fused.record_stage(
+                "upload", (_time.perf_counter() - t_up) * 1e3)
+        cand, sel_idx, sel_counts, segs = self._ops.run_wave_fused(
+            probe_dev, ns_dev, pts_stack, rows_stack, cov_dev, codes_dev,
+            vals_dev, num_docs=n_max, edges=edges, total_groups=total,
+            impl=impl, profile=profile)
+        # stage wave k+1's buffers before wave k's outputs sync to host
+        if prefetch_shards:
+            self.prefetch_wave(prefetch_shards, refine, agg)
+        idx_h = np.asarray(sel_idx)
+        counts_h = np.asarray(sel_counts)
+        n_cands = [int(c) for c in np.asarray(cand)]
+        ids_list = [idx_h[i, :int(counts_h[i])].astype(np.int64)
+                    for i in range(len(shards))]
+        seg = None
+        if agg is not None:
+            slot_host = [(np.rint(np.asarray(cnt)).astype(np.int64),
+                          np.asarray(s, dtype=np.float64),
+                          np.asarray(s2, dtype=np.float64))
+                         for cnt, s, s2 in (segs or [])]
+            seg = []
+            for i, (uniq, _c, g) in enumerate(facts):
+                off = int(offsets[i])
+                # g == 0 → (uniq, []) exactly like the base-class oracle
+                seg.append((uniq,
+                            [(cnt[off:off + g], s[off:off + g],
+                              s2[off:off + g])
+                             for cnt, s, s2 in slot_host] if g else []))
+        return n_cands, ids_list, seg
+
+    def prefetch_wave(self, shards, refine=None, agg=None) -> None:
+        """Double-buffered async prefetch: build (or re-find) the next
+        wave's keyed stacked buffers — refine point stacks, offset group
+        codes, value stacks — so its fused dispatch starts from resident
+        device memory.  Device puts are non-blocking; nothing here syncs."""
+        shards = list(shards)
+        if not shards:
+            return
+        if self.trace_events is not None:
+            self.trace_events.append(("prefetch", len(shards)))
+        n_max = max(sh.n for sh in shards)
+        if n_max == 0:
+            return
+        if refine is not None:
+            cons = list(refine.constraints)
+            if cons and len(cons) <= 30:
+                packs = [self._track_pack(sh.batch, refine.path)
+                         for sh in shards]
+                if all(p is not None for p, _ in packs) and \
+                        max(p.shape[1] for p, _ in packs) > 0:
+                    self._refine_stack(shards, packs, refine.path)
+        if agg is not None:
+            self._agg_stacks(shards, agg, self._impl(), n_max)
 
 
 # --------------------------------------------------------------------------

@@ -17,6 +17,16 @@ Device puts run under ``jax.experimental.enable_x64`` so int64/float64/
 uint64 buffers keep their width — the parity contract is byte-identical
 results against the numpy oracle, and a silent f64→f32 truncation at put
 time would break it.
+
+On top of the identity-keyed buffers the cache holds **keyed derived
+entries** (:meth:`put_keyed` / :meth:`get_keyed`): wave-stacked buffers the
+fused pipeline derives from several primed arrays at once — stacked refine
+track words per (FDb, wave partition), offset-coded group-code stacks,
+value stacks, factorize results.  Keys are flat tuples whose int elements
+are the ``id``s of the primed source arrays, so :meth:`drop` evicts every
+derived entry alongside its sources when an FDb is collected.  Keyed
+entries do not count toward ``len()`` / ``stats()["buffers"]`` — those
+remain the primed-buffer census the priming tests assert.
 """
 from __future__ import annotations
 
@@ -35,8 +45,11 @@ class DeviceCache:
         self._jnp = jax_module.numpy
         # id(host array) → (host array pin, device buffer)
         self._buffers: Dict[int, Tuple[np.ndarray, object]] = {}
+        # flat tuple key (tag, *source ids, ...) → derived stacked value
+        self._keyed: Dict[tuple, object] = {}
         self.hits = 0
         self.misses = 0
+        self.keyed_hits = 0
 
     def __len__(self) -> int:
         return len(self._buffers)
@@ -67,17 +80,39 @@ class DeviceCache:
         self.misses += 1
         return None
 
+    def put_keyed(self, key: tuple, value) -> None:
+        """Store a derived wave-stacked entry under a flat tuple key whose
+        int elements are primed-source ``id``s (see module docstring)."""
+        self._keyed[key] = value
+
+    def get_keyed(self, key: tuple):
+        """Derived entry for ``key`` if staged, else None (hits counted —
+        the prefetch tests read ``keyed_hits``)."""
+        hit = self._keyed.get(key)
+        if hit is not None:
+            self.keyed_hits += 1
+        return hit
+
     def drop(self, keys) -> None:
         """Evict entries by key id (used by per-FDb finalizers so buffers
-        of a collected FDb do not stay pinned forever)."""
+        of a collected FDb do not stay pinned forever).  Derived keyed
+        entries referencing a dropped source id go with it."""
+        dropped = set(keys)
         for key in keys:
             self._buffers.pop(key, None)
+        if self._keyed:
+            self._keyed = {
+                k: v for k, v in self._keyed.items()
+                if not any(isinstance(e, int) and e in dropped for e in k)}
 
     def clear(self) -> None:
         self._buffers.clear()
+        self._keyed.clear()
         self.hits = 0
         self.misses = 0
+        self.keyed_hits = 0
 
     def stats(self) -> Dict[str, int]:
         return {"buffers": len(self._buffers), "nbytes": self.nbytes(),
-                "hits": self.hits, "misses": self.misses}
+                "keyed": len(self._keyed), "hits": self.hits,
+                "misses": self.misses, "keyed_hits": self.keyed_hits}

@@ -99,9 +99,9 @@ class FlumeEngine:
         workers = min(self.max_workers, max(1, len(plan.shard_ids)))
         wave_fn = None
         if fault_plan is None:
-            wave_fn = lambda sids: run_wave_task(
+            wave_fn = lambda sids, nxt=None: run_wave_task(
                 db, plan, sids, tables, self.catalog, None,
-                stage="server", backend=self.backend)
+                stage="server", backend=self.backend, prefetch_sids=nxt)
         partials = self._run_stage(
             stage="server", job_dir=job_dir, task_ids=plan.shard_ids,
             fn=lambda sid: run_shard_task(db, plan, sid, tables,
@@ -158,8 +158,12 @@ class FlumeEngine:
             waves = partition_waves(todo, self.wave)
             with ThreadPoolExecutor(
                     max_workers=min(workers, len(waves))) as pool:
-                futs = [(pool.submit(wave_fn, wave), wave)
-                        for wave in waves]
+                # successor hint: a fused backend prefetches wave k+1's
+                # buffers while wave k computes
+                futs = [(pool.submit(wave_fn, wave,
+                                     waves[i + 1] if i + 1 < len(waves)
+                                     else None), wave)
+                        for i, wave in enumerate(waves)]
                 for fut, wave in futs:
                     try:
                         done, failed = fut.result()

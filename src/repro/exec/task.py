@@ -6,6 +6,13 @@ exact track refine (Tesseract constraints, behind the backend's
 record-parallel ops → (aggregate_produce | pre-sorted batch).  Both
 engines schedule it; they differ only in what happens when it fails or
 lags (§4.3.5 vs §4.3.6).
+
+Healthy shards normally run through the *fused* wave path instead
+(``run_wave_task`` → ``backend.run_wave_fused``, one dispatch per wave);
+this per-shard task remains the retry/recovery unit and the per-primitive
+oracle the fused results are parity-tested against.  The index probe here
+goes through ``probe_shard``, which also lowers the spacetime postings OR
+behind the backend seam (``postings_bitmap``).
 """
 from __future__ import annotations
 

@@ -1,0 +1,247 @@
+"""Fused per-wave pipeline: probe → refine → compact → segment-agg in ONE
+dispatch (paper §4: pipelined evaluation; the flash-attention kernel is the
+in-repo exemplar of a fused multi-stage pass).
+
+The legacy batched path issues one launch *per primitive* per wave and
+round-trips host↔device between stages.  :func:`run_wave_fused` chains the
+same stage math inside a single ``jax.jit`` composition — the stacked
+bitmap AND, the exact track refine (with the ordered-query first-hit edge
+compare), mask compaction, and the offset-coded segment aggregation — so a
+wave of shards costs one dispatch and zero intermediate host syncs.  Under
+``impl="pallas"``/``"interpret"`` each stage lowers to its Pallas kernel
+inside the jit; under ``"reference"`` the pure-jnp oracles compose (and the
+whole call runs under ``enable_x64`` so aggregation accumulates float64 in
+row order, bit-equal to the numpy oracle).
+
+Inputs are the wave-stacked buffers the backend seam already builds:
+
+* ``probe_stack`` [S, K, W] uint32 — row 0 the shard's valid-doc bitmap,
+  rows 1.. the probe bitmaps, pad rows copies of row 0 (identity for AND).
+* ``ns`` [S] int32 — per-shard doc counts (rows beyond are padding).
+* ``pts``/``rows``/``cov`` — packed ragged tracks + constraint cover, or
+  ``None`` when the plan has no refine stage.
+* ``codes`` [S, N] int32 — per-row group codes already offset into the
+  wave-global group space (−1 = padding), or ``None`` without aggregation.
+* ``vals`` — tuple of [S, N] float value stacks, one per distinct
+  aggregated column (a single zeros stack for count-only plans).
+
+Returns ``(cand [S], sel_idx [S, N], sel_counts [S], segs)`` with ``cand``
+the pre-refine candidate counts, ``sel_idx``/``sel_counts`` the compacted
+survivor row ids, and ``segs`` a list of ``(count, sum, sumsq)`` triples
+over the wave-global group space (``None`` without aggregation).
+
+``profile=True`` runs the same stage math eagerly with a device sync after
+each stage and records wall-clock per stage into :func:`stage_times` —
+the ``--profile`` bench flag's data source.  This module never imports
+``kernels.ops`` (ops wraps *it* and owns launch counting).
+"""
+from __future__ import annotations
+
+import functools
+import threading
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bitset as _bitset
+from . import compact as _compact
+from . import ref as _ref
+from . import refine as _refine
+from . import segment_agg as _seg
+
+__all__ = ["run_wave_fused", "postings_bitmap",
+           "record_stage", "stage_times", "reset_stage_times"]
+
+
+# --------------------------------------------------------------------------
+# Per-stage wall-clock (bench --profile); engines run in worker threads.
+# --------------------------------------------------------------------------
+
+_STAGE_MS: Dict[str, float] = {}
+_STAGE_LOCK = threading.Lock()
+
+
+def record_stage(name: str, ms: float) -> None:
+    """Accumulate ``ms`` milliseconds of wall-clock under stage ``name``."""
+    with _STAGE_LOCK:
+        _STAGE_MS[name] = _STAGE_MS.get(name, 0.0) + ms
+
+
+def stage_times() -> Dict[str, float]:
+    """Snapshot of accumulated per-stage milliseconds since last reset."""
+    with _STAGE_LOCK:
+        return dict(_STAGE_MS)
+
+
+def reset_stage_times() -> None:
+    with _STAGE_LOCK:
+        _STAGE_MS.clear()
+
+
+# --------------------------------------------------------------------------
+# Stage bodies (shared by the jitted composition and the profiled path)
+# --------------------------------------------------------------------------
+
+def _probe_stage(impl: str, probe_stack):
+    if impl == "reference":
+        bm, _ = _ref.bitmap_intersect_batched_ref(probe_stack)
+    else:
+        bm, _ = _bitset.bitmap_intersect_batched(
+            probe_stack, interpret=(impl == "interpret"))
+    return bm
+
+
+def _mask_stage(bm, ns, num_docs: int):
+    """Word bitmaps [S, W] → per-doc bool masks [S, num_docs]."""
+    docs = jnp.arange(num_docs, dtype=jnp.int32)
+    words = bm[:, docs >> 5]
+    bits = (words >> (docs & 31).astype(jnp.uint32)) & jnp.uint32(1)
+    return (bits != 0) & (docs[None, :] < ns[:, None])
+
+
+def _refine_stage(impl: str, pts, rows, cov, num_docs: int,
+                  edges: Tuple[Tuple[int, int], ...]):
+    wf = bool(edges)
+    if impl == "reference":
+        r = _ref.refine_tracks_batched_ref(pts, rows, cov,
+                                           num_docs=num_docs,
+                                           with_first_hits=wf)
+    else:
+        r = _refine.refine_tracks_batched(pts, rows, cov, num_docs,
+                                          interpret=(impl == "interpret"),
+                                          with_first_hits=wf)
+    if not wf:
+        return r
+    out, fh_hi, fh_lo = r
+    for i, j in edges:               # A-then-B: first hit of i before j's
+        a_hi, a_lo = fh_hi[:, i, :], fh_lo[:, i, :]
+        b_hi, b_lo = fh_hi[:, j, :], fh_lo[:, j, :]
+        out = out & ((a_hi < b_hi) | ((a_hi == b_hi) & (a_lo < b_lo)))
+    return out
+
+
+def _compact_stage(impl: str, mask):
+    if impl == "reference":
+        return _ref.compact_batched_ref(mask)
+    return _compact.compact_batched(mask, interpret=(impl == "interpret"))
+
+
+def _agg_stage(impl: str, mask, codes, vals, total_groups: int):
+    gc = jnp.where(mask, codes, jnp.int32(-1)).reshape(-1)
+    segs = []
+    for v in vals:
+        vv = v.reshape(-1)
+        if impl == "reference":
+            segs.append(_ref.segment_agg_ref(gc, vv, total_groups))
+        else:
+            segs.append(_seg.segment_agg(gc, vv, total_groups,
+                                         interpret=(impl == "interpret")))
+    return segs
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_fn(impl: str, num_docs: int,
+              edges: Tuple[Tuple[int, int], ...], total_groups: int,
+              has_refine: bool):
+    """One jitted end-to-end wave pipeline for a static stage config."""
+
+    def fn(probe_stack, ns, pts, rows, cov, codes, vals):
+        mask = _mask_stage(_probe_stage(impl, probe_stack), ns, num_docs)
+        cand = mask.sum(axis=1).astype(jnp.int32)
+        if has_refine:
+            mask = mask & _refine_stage(impl, pts, rows, cov, num_docs,
+                                        edges)
+        sel_idx, sel_counts = _compact_stage(impl, mask)
+        segs = None
+        if total_groups > 0:
+            segs = _agg_stage(impl, mask, codes, vals, total_groups)
+        return cand, sel_idx, sel_counts, segs
+
+    # Donating the probe stack lets XLA reuse its buffer for the stage
+    # intermediates on TPU; CPU donation only emits warnings.
+    donate = (0,) if jax.default_backend() == "tpu" else ()
+    return jax.jit(fn, donate_argnums=donate)
+
+
+def _profiled(impl, probe_stack, ns, pts, rows, cov, codes, vals,
+              num_docs, edges, total_groups, has_refine):
+    """Same math, eager stage-by-stage with a sync + timer per stage."""
+    t = time.perf_counter
+    t0 = t()
+    mask = _mask_stage(_probe_stage(impl, probe_stack), ns, num_docs)
+    cand = jax.block_until_ready(mask.sum(axis=1).astype(jnp.int32))
+    t1 = t()
+    record_stage("probe", (t1 - t0) * 1e3)
+    if has_refine:
+        mask = jax.block_until_ready(
+            mask & _refine_stage(impl, pts, rows, cov, num_docs, edges))
+        t2 = t()
+        record_stage("refine", (t2 - t1) * 1e3)
+        t1 = t2
+    sel_idx, sel_counts = jax.block_until_ready(_compact_stage(impl, mask))
+    t2 = t()
+    record_stage("compact", (t2 - t1) * 1e3)
+    segs = None
+    if total_groups > 0:
+        segs = jax.block_until_ready(
+            _agg_stage(impl, mask, codes, vals, total_groups))
+        record_stage("agg", (t() - t2) * 1e3)
+    return cand, sel_idx, sel_counts, segs
+
+
+def run_wave_fused(probe_stack, ns, pts=None, rows=None, cov=None,
+                   codes=None, vals=(), *, num_docs: int,
+                   edges=(), total_groups: int = 0,
+                   impl: str = "reference", profile: bool = False):
+    """Run one wave through the fused pipeline (see module docstring)."""
+    edges = tuple(tuple(e) for e in edges)
+    vals = tuple(vals)
+    has_refine = pts is not None
+    if impl == "reference":
+        # f64 value stacks + f64 accumulation, bit-equal to the host oracle
+        with jax.experimental.enable_x64():
+            if profile:
+                return _profiled(impl, probe_stack, ns, pts, rows, cov,
+                                 codes, vals, num_docs, edges,
+                                 total_groups, has_refine)
+            return _fused_fn(impl, num_docs, edges, total_groups,
+                             has_refine)(probe_stack, ns, pts, rows, cov,
+                                         codes, vals)
+    if profile:
+        return _profiled(impl, probe_stack, ns, pts, rows, cov, codes,
+                         vals, num_docs, edges, total_groups, has_refine)
+    return _fused_fn(impl, num_docs, edges, total_groups, has_refine)(
+        probe_stack, ns, pts, rows, cov, codes, vals)
+
+
+# --------------------------------------------------------------------------
+# Postings OR — SpaceTimeIndex.lookup's tail lowered behind the seam
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n_docs",))
+def _postings_bitmap(ids, t_min, t_max, t0, t1, n_docs: int):
+    nw = (n_docs + 31) // 32
+    hit = jnp.zeros((nw * 32,), jnp.bool_).at[ids].set(True, mode="drop")
+    overlap = jnp.zeros((nw * 32,), jnp.bool_).at[:n_docs].set(
+        (t_min <= t1) & (t_max >= t0))
+    bits = (hit & overlap).reshape(nw, 32).astype(jnp.uint32)
+    # doc 32·w + b → word w, bit b: the bitmap_from_ids word layout
+    return (bits << jnp.arange(32, dtype=jnp.uint32)[None, :]).sum(
+        axis=1, dtype=jnp.uint32)
+
+
+def postings_bitmap(ids, t_min, t_max, t0, t1, n_docs: int):
+    """OR doc ``ids`` into a word bitmap and prune docs whose ``[t_min,
+    t_max]`` track span misses ``[t0, t1]`` — the host tail of
+    ``SpaceTimeIndex.lookup`` as one device pass (pure-jnp lowering under
+    every ``impl``; scatter-OR has no Pallas kernel).  Runs under
+    ``enable_x64`` so the float64 span compare matches the host exactly.
+    """
+    if n_docs <= 0:
+        return jnp.zeros((0,), jnp.uint32)
+    with jax.experimental.enable_x64():
+        return _postings_bitmap(jnp.asarray(ids), t_min, t_max,
+                                jnp.float64(t0), jnp.float64(t1), n_docs)

@@ -16,6 +16,11 @@ selected ``impl`` — a call is one logical kernel dispatch, which is what
 the batched execution path amortizes (one ``*_batched`` launch per wave of
 shards instead of one launch per shard).  Tests and benchmarks use the
 counter to assert the ⌈shards/wave⌉ dispatch contract.
+
+:func:`run_wave_fused` is one logical dispatch covering *all* stages of a
+wave (probe → refine → compact → segment-agg fused in a single jit; see
+``kernels.fused``) — on the fused path the contract tightens to
+⌈shards/wave⌉ **total** dispatches per query, not per primitive.
 """
 from __future__ import annotations
 
@@ -29,6 +34,7 @@ import jax
 from . import bitset as _bitset
 from . import compact as _compact
 from . import flash_attention as _fa
+from . import fused as _fused
 from . import ref as _ref
 from . import refine as _refine
 from . import segment_agg as _seg
@@ -37,6 +43,7 @@ from . import ssm_scan as _ssm
 __all__ = ["default_impl", "bitmap_binary", "bitmap_intersect",
            "bitmap_intersect_batched", "compact", "compact_batched",
            "segment_agg", "refine_tracks", "refine_tracks_batched",
+           "run_wave_fused", "postings_bitmap",
            "flash_attention", "ssm_scan",
            "launch_counts", "reset_launch_counts", "record_launch"]
 
@@ -173,6 +180,34 @@ def refine_tracks_batched(pts, rows, cov, num_docs: int,
     return _refine.refine_tracks_batched(pts, rows, cov, num_docs,
                                          interpret=(impl == "interpret"),
                                          with_first_hits=with_first_hits)
+
+
+def run_wave_fused(probe_stack, ns, pts=None, rows=None, cov=None,
+                   codes=None, vals=(), *, num_docs: int, edges=(),
+                   total_groups: int = 0, impl: Optional[str] = None,
+                   profile: bool = False):
+    """Whole-wave fused pipeline (probe → refine → compact → segment-agg)
+    in ONE dispatch — see ``kernels.fused``.  Counts as a single launch:
+    the fused path's ⌈shards/wave⌉ *total*-dispatch contract hangs off
+    this counter.  Each stage lowers to its Pallas kernel under
+    ``pallas``/``interpret`` and to the jnp oracle under ``reference``."""
+    impl = _resolve(impl)
+    record_launch("run_wave_fused")
+    return _fused.run_wave_fused(probe_stack, ns, pts, rows, cov, codes,
+                                 vals, num_docs=num_docs, edges=edges,
+                                 total_groups=total_groups, impl=impl,
+                                 profile=profile)
+
+
+def postings_bitmap(ids, t_min, t_max, t0, t1, n_docs: int,
+                    impl: Optional[str] = None):
+    """Spacetime postings OR + track-span prune on device (the tail of
+    ``SpaceTimeIndex.lookup``).  Scatter-OR is a pure-jnp lowering under
+    every ``impl`` — there is no Pallas scatter kernel — but it still
+    counts one launch."""
+    _resolve(impl)                    # validate; lowering is impl-agnostic
+    record_launch("postings_bitmap")
+    return _fused.postings_bitmap(ids, t_min, t_max, t0, t1, n_docs)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window=None,

@@ -170,7 +170,8 @@ class SpaceTimeIndex:
         return (int(np.clip(b0, 0, MAX_BUCKET)),
                 int(np.clip(b1, 0, MAX_BUCKET)))
 
-    def lookup(self, region: AreaTree, t0: float, t1: float) -> np.ndarray:
+    def lookup(self, region: AreaTree, t0: float, t1: float,
+               backend=None) -> np.ndarray:
         """Candidate docs with a track point in a cell covering ``region``
         during a bucket overlapping ``[t0, t1]`` (superset of exact).
 
@@ -179,6 +180,11 @@ class SpaceTimeIndex:
         *all* ranges are collected at once (bucket post-filter included)
         and their CSR doc lists concatenated without any per-key Python
         loop — the key-fan-out cost is one vectorized gather.
+
+        ``backend`` (an ``ExecBackend``) lowers the tail — the doc-id OR
+        into a word bitmap plus the ``[t_min, t_max]`` span prune — behind
+        the exec seam (``postings_bitmap``), running it on device over the
+        primed span buffers; ``None`` keeps the host math.
         """
         if region.is_empty or t1 < t0 or self.keys.size == 0:
             return bitmap_zeros(self.n_docs)
@@ -202,6 +208,9 @@ class SpaceTimeIndex:
             return bitmap_zeros(self.n_docs)
         ids = self.doc_ids[span_indices(self.splits[kidx],
                                         self.splits[kidx + 1])]
+        if backend is not None:
+            return backend.postings_bitmap(ids, self.t_min, self.t_max,
+                                           t0, t1, self.n_docs)
         bm = bitmap_from_ids(ids, self.n_docs)
         # IntervalSet-style span prune: drop docs whose whole track misses
         # the window (kills same-place-different-time false positives).

@@ -132,7 +132,10 @@ def _tess(rng):
         _region(rng), 43200.0, 3 * 86400.0)
 
 
-def test_engine_refine_parity_and_launch_contract(walks_db):
+def test_engine_refine_parity_and_launch_contract(walks_db, monkeypatch):
+    # pin the legacy per-primitive path: this test asserts the pre-fused
+    # launch contract (the fused one lives in tests/test_fused.py)
+    monkeypatch.setenv("REPRO_EXEC_FUSED", "0")
     cat = Catalog(server_slots=8)
     cat.register(walks_db)
     rng = np.random.default_rng(11)
@@ -348,9 +351,11 @@ def test_ordered_first_hit_table_parity(ordered_db, walks_db):
     assert tab[6, 1] == f64_sort_key(50.0)                 # first B hit
 
 
-def test_ordered_launch_contract(ordered_db):
-    """Ordering rides the same fused refine launches: still ⌈shards/wave⌉
-    refine_tracks_batched dispatches per query, zero per-shard ops."""
+def test_ordered_launch_contract(ordered_db, monkeypatch):
+    """Ordering rides the same batched refine launches: still ⌈shards/wave⌉
+    refine_tracks_batched dispatches per query, zero per-shard ops (the
+    legacy path — the fused single-dispatch contract is in test_fused)."""
+    monkeypatch.setenv("REPRO_EXEC_FUSED", "0")
     cat = Catalog()
     cat.register(ordered_db)
     flow = fdb("Ordered").tesseract(_ab_tess())
