@@ -1,0 +1,218 @@
+"""Serve-layer benchmark: coalesced multi-query throughput + result cache.
+
+The serving tier's reason to exist is amortization: Q compatible
+concurrent queries ride ⌈shards/wave⌉ ``run_wave_fused_multi`` device
+dispatches *total* instead of Q×⌈shards/wave⌉ single-query dispatches.
+The report shows
+
+  * p50/p99 latency and QPS for N ∈ {1, 8, 64} concurrent trip queries
+    served through the coalescing scheduler,
+  * the same pool served strictly one query at a time (the N=1
+    sequential baseline) and the resulting **coalesce speedup** — the
+    acceptance gate is coalesced N=8 QPS > 2× the sequential baseline,
+  * launch evidence: one coalesced batch of Q compatible queries costs
+    exactly ⌈shards/wave⌉ ``run_wave_fused_multi`` dispatches,
+  * cold vs warm TTL-cache service of an identical pool (warm must be
+    pure cache hits), and
+  * a byte-parity verdict: every coalesced result equals the
+    single-query numpy-oracle rows for the same flow.
+"""
+from __future__ import annotations
+
+import math
+import time
+
+import numpy as np
+
+from repro.core import fdb
+from repro.data.synthetic import generate_world
+from repro.exec import AdHocEngine, Catalog
+from repro.exec.batched import fused_enabled
+from repro.fdb import build_fdb
+from repro.kernels import ops
+from repro.serve import QueryServer
+
+from .queries import TRIP_QUERIES, tesseract_for
+
+__all__ = ["run"]
+
+
+def _pool(n: int):
+    """``n`` compatible-but-distinct trip flows: the Q6/Q7 legs with the
+    hour windows jittered, so the pool shares one coalescing key (same
+    FDb, same shards, same refine path) while every query keeps its own
+    constraints and its own cache key.  No per-record lambdas — the
+    flows stay hashable for the result cache."""
+    base = list(TRIP_QUERIES.values())
+    flows = []
+    for k in range(n):
+        legs = base[k % len(base)]
+        jit = 0.25 * ((k // len(base)) % 8)
+        legs = tuple((cities, h0 + jit, h1 + jit)
+                     for cities, h0, h1 in legs)
+        flows.append(fdb("Trips").tesseract(tesseract_for(legs)))
+    return flows
+
+
+def _serve_once(srv: QueryServer, flows, coalesced: bool = True):
+    """Submit the pool, drain it, return (wall_s, sorted per-query
+    latencies).  ``coalesced=False`` drains after every submit — the
+    strictly-sequential baseline on the same machinery."""
+    lat: list = []
+    futs = []
+    t0 = time.perf_counter()
+    for f in flows:
+        ts = time.perf_counter()
+        fut = srv.submit(f)
+        fut.add_done_callback(
+            lambda _f, ts=ts: lat.append(time.perf_counter() - ts))
+        futs.append(fut)
+        if not coalesced:
+            srv.run_pending()
+    if coalesced:
+        srv.run_pending()
+    for f in futs:
+        f.result(300)
+    return time.perf_counter() - t0, sorted(lat)
+
+
+def _pcts(lat):
+    p50 = lat[int(0.50 * (len(lat) - 1))]
+    p99 = lat[int(0.99 * (len(lat) - 1))]
+    return p50 * 1e3, p99 * 1e3
+
+
+def run(scale: float = 0.5, print_fn=print, raise_on_mismatch: bool = True):
+    rows: list = []
+    # same floor as bench_tesseract: below ~0.2 the synthetic week holds
+    # so few trips that the queries select nothing and parity is vacuous
+    scale = max(scale, 0.2)
+    world = generate_world(scale=scale)
+    cat = Catalog(server_slots=64)
+    cat.register(build_fdb("Trips", world["trips_schema"], world["trips"],
+                           num_shards=10))
+    db = cat.get("Trips")
+
+    def server(**kw):
+        kw.setdefault("cache", False)
+        srv = QueryServer(catalog=cat, backend="jax", start=False,
+                          max_pending=256, **kw)
+        return srv
+
+    # ---- correctness: coalesced rows ≡ single-query numpy oracle rows
+    pool8 = _pool(8)
+    np_eng = AdHocEngine(cat, backend="numpy")
+    oracle = [np.sort(np_eng.collect(f).batch["id"].values) for f in pool8]
+    srv = server()
+    futs = [srv.submit(f) for f in pool8]
+    srv.run_pending()
+    parity = all(
+        np.array_equal(np.sort(f.result(300).batch["id"].values), o)
+        for f, o in zip(futs, oracle))
+    if srv.stats()["coalesced_queries"] != len(pool8):
+        parity = False
+
+    # ---- launch evidence: Q coalesced queries ⇒ ⌈shards/wave⌉ multi
+    #      dispatches total (REPRO_EXEC_FUSED=0 falls back to per-query
+    #      per-primitive launches — still served, evidence informational)
+    for f in pool8:
+        srv.submit(f)
+    srv.run_pending()                          # warm: prime + jit
+    for f in pool8:
+        srv.submit(f)
+    ops.reset_launch_counts()
+    srv.run_pending()
+    lc = dict(ops.launch_counts())
+    waves = math.ceil(db.num_shards / srv.engine.wave)
+    if fused_enabled():
+        launches_ok = lc == {"run_wave_fused_multi": waves}
+    else:
+        launches_ok = lc.get("run_wave_fused", 0) == 0 \
+            and lc.get("run_wave_fused_multi", 0) == 0
+    parity &= launches_ok
+    rows.append({"name": "serve_launch_evidence", "us_per_call": "",
+                 "parity": 1 if launches_ok else 0,
+                 "derived": (f"launches={lc} waves={waves} "
+                             f"q={len(pool8)} "
+                             f"fused={1 if fused_enabled() else 0}")})
+    print_fn(f"  launch evidence: {rows[-1]['derived']}")
+
+    # ---- throughput: coalesced N ∈ {1, 8, 64}
+    qps = {}
+    for n in (1, 8, 64):
+        flows = _pool(n)
+        srv = server()
+        _serve_once(srv, flows)                # warm (jit per batch shape)
+        best = None
+        for _ in range(2):
+            wall, lat = _serve_once(srv, flows)
+            if best is None or wall < best[0]:
+                best = (wall, lat)
+        wall, lat = best
+        p50, p99 = _pcts(lat)
+        qps[n] = n / wall
+        st = srv.stats()
+        rows.append({
+            "name": f"serve_coalesced_n{n}",
+            "us_per_call": round(wall / n * 1e6, 1),
+            "parity": 1,
+            "derived": (f"qps={qps[n]:.1f} p50_ms={p50:.1f} "
+                        f"p99_ms={p99:.1f} "
+                        f"coalesced={st['coalesced_queries']} "
+                        f"fallback={st['fallback_queries']}")})
+        print_fn(f"  coalesced n={n}: {rows[-1]['derived']}")
+
+    # ---- sequential baseline (one query per drain) + speedup gate
+    flows = _pool(8)
+    srv = server(max_coalesce=1)
+    _serve_once(srv, flows, coalesced=False)   # warm
+    wall_seq = min(_serve_once(srv, flows, coalesced=False)[0]
+                   for _ in range(2))
+    qps_seq = len(flows) / wall_seq
+    speedup = qps[8] / max(qps_seq, 1e-9)
+    gate = speedup > 2.0
+    parity &= gate
+    rows.append({"name": "serve_sequential_n1",
+                 "us_per_call": round(wall_seq / len(flows) * 1e6, 1),
+                 "parity": 1,
+                 "derived": f"qps={qps_seq:.1f}"})
+    rows.append({"name": "serve_coalesce_speedup", "us_per_call": "",
+                 "parity": 1 if gate else 0,
+                 "derived": (f"speedup={speedup:.2f}x "
+                             f"coalesced_qps={qps[8]:.1f} "
+                             f"sequential_qps={qps_seq:.1f} "
+                             f"gate={'OK' if gate else 'MISS(<2x)'}")})
+    print_fn(f"  sequential: qps={qps_seq:.1f}; "
+             f"coalesce speedup: {rows[-1]['derived']}")
+
+    # ---- cache: cold serve, then the identical pool warm (pure hits)
+    flows = _pool(8)
+    srv = server(cache=None)                   # default TTL ResultCache
+    _serve_once(srv, flows)                    # jit warm (cache cleared)
+    srv.cache.clear()
+    wall_cold, _ = _serve_once(srv, flows)
+    wall_warm, _ = _serve_once(srv, flows)
+    st = srv.stats()
+    warm_hits = st["cache_hits"] >= len(flows)
+    parity &= warm_hits
+    rows.append({"name": "serve_cache_cold",
+                 "us_per_call": round(wall_cold / len(flows) * 1e6, 1),
+                 "parity": 1,
+                 "derived": f"qps={len(flows) / wall_cold:.1f}"})
+    rows.append({"name": "serve_cache_warm",
+                 "us_per_call": round(wall_warm / len(flows) * 1e6, 1),
+                 "parity": 1 if warm_hits else 0,
+                 "derived": (f"qps={len(flows) / wall_warm:.1f} "
+                             f"hits={st['cache_hits']} "
+                             f"errors={st['cache_errors']} "
+                             f"speedup={wall_cold / max(wall_warm, 1e-9):.1f}x")})
+    print_fn(f"  cache: cold {wall_cold * 1e3:.1f}ms → warm "
+             f"{wall_warm * 1e3:.1f}ms ({rows[-1]['derived']})")
+
+    rows.append({"name": "serve_parity_all", "us_per_call": "",
+                 "parity": 1 if parity else 0,
+                 "derived": "OK" if parity else "MISMATCH"})
+    print_fn(f"  serve parity + gates: {'OK' if parity else 'MISMATCH'}")
+    if not parity and raise_on_mismatch:
+        raise AssertionError("serve coalescing parity/gate violated")
+    return rows

@@ -54,6 +54,14 @@ class Session:
     def __getitem__(self, name: str) -> Any:
         return self.vars[name]
 
+    def serve(self, **kw):
+        """A :class:`~repro.serve.QueryServer` bound to this session's
+        engine: concurrent submits against the session's resident FDbs
+        coalesce into shared multi-query wave dispatches, with admission
+        bounds and a TTL result cache (see :mod:`repro.serve`)."""
+        from ..serve import QueryServer
+        return QueryServer(engine=self.engine, **kw)
+
     # ---------------------------------------------------------- completion
     def complete(self, text: str, limit: int = 20) -> List[str]:
         # value completion: "Db.path=prefix"

@@ -82,6 +82,7 @@ picks it up.
 from __future__ import annotations
 
 import os
+import threading
 import weakref
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -89,8 +90,26 @@ import numpy as np
 
 from ..fdb.index import (bitmap_from_ids, bitmap_stack, ids_from_bitmap,
                          mask_from_bitmap)
-from .refine import (FIRST_HIT_NONE, pack_constraints, pack_track_points,
+from .refine import (FIRST_HIT_NONE, pack_constraints,
+                     pack_constraints_multi, pack_track_points,
                      refine_tracks_host)
+
+
+def _segment_minmax_host(codes: np.ndarray, values: np.ndarray,
+                         num_groups: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Host per-group (min, max) float64 — the oracle for the fused agg
+    tail's min/max slots.  Groups with no rows keep ±inf fills (dropped by
+    the ``count > 0`` keep-filter downstream)."""
+    codes = np.asarray(codes, dtype=np.int64)
+    keep = codes >= 0
+    if not keep.all():
+        codes, values = codes[keep], np.asarray(values)[keep]
+    v = np.asarray(values, dtype=np.float64)
+    mn = np.full(num_groups, np.inf)
+    mx = np.full(num_groups, -np.inf)
+    np.minimum.at(mn, codes, v)
+    np.maximum.at(mx, codes, v)
+    return mn, mx
 
 __all__ = ["ExecBackend", "NumpyBackend", "JaxBackend", "register_backend",
            "backend_names", "get_backend", "as_backend"]
@@ -204,6 +223,55 @@ class ExecBackend:
             return [m for m, _ in outs], [t for _, t in outs]
         return outs
 
+    # -------------------------------------------- multi-query (coalesced)
+    # The query-serving layer coalesces Q compatible in-flight queries
+    # against ONE resident wave of shards.  Base-class implementations
+    # loop query-by-query over the single-query ops — the oracle the
+    # stacked overrides must match byte-for-byte per query.
+
+    def probe_shards_multi(self, fulls: Sequence[np.ndarray],
+                           probes_multi) -> List[List[np.ndarray]]:
+        """Per-query wave probes: ``probes_multi[q][s]`` is query q's
+        probe-bitmap list for shard s.  Returns one ``probe_shards``
+        result list per query."""
+        return [self.probe_shards(fulls, probes) for probes in probes_multi]
+
+    def refine_tracks_multi(self, batches, path: str, constraints_list,
+                            candidates_lists=None, edges_list=None,
+                            with_first_hits: bool = False):
+        """Per-query wave refine: Q queries' constraint lists against one
+        wave's shared tracks.  Returns one ``refine_tracks_batched``
+        result per query (mask list, or ``(masks, tables)`` under
+        ``with_first_hits``)."""
+        batches = list(batches)
+        n_q = len(constraints_list)
+        if candidates_lists is None:
+            candidates_lists = [None] * n_q
+        if edges_list is None:
+            edges_list = [()] * n_q
+        return [self.refine_tracks_batched(batches, path, cons, cands,
+                                           edges=edges,
+                                           with_first_hits=with_first_hits)
+                for cons, cands, edges in zip(constraints_list,
+                                              candidates_lists, edges_list)]
+
+    def run_wave_fused_multi(self, shards, probes_multi, refines,
+                             prefetch_shards=None):
+        """Q coalesced *selection* queries (no aggregation tail) through
+        one wave: returns a per-query list of ``(n_cands, ids_list)``
+        pairs, or ``None`` to decline (the server then runs each query
+        through the single-query path).  Base implementation is the
+        loop-over-queries oracle the stacked override must match
+        byte-for-byte per query."""
+        out = []
+        for probes, rf in zip(probes_multi, refines):
+            r = self.run_wave_fused(shards, probes, refine=rf, agg=None)
+            if r is None:
+                return None
+            n_cands, ids_list, _seg = r
+            out.append((n_cands, ids_list))
+        return out
+
     # -------------------------------------------------- fused wave pipeline
     def postings_bitmap(self, ids: np.ndarray, t_min: np.ndarray,
                         t_max: np.ndarray, t0: float, t1: float,
@@ -242,6 +310,7 @@ class ExecBackend:
         ids_list = self.compact_masks(masks)
         seg = None
         if agg is not None:
+            mm = tuple(getattr(agg, "minmax", ()) or ())
             seg = []
             for sh, ids in zip(shards, ids_list):
                 uniq, codes, g = agg.factorize(sh, backend=self)
@@ -250,10 +319,14 @@ class ExecBackend:
                     continue
                 csel = codes[ids]
                 slots = []
-                for vp in (agg.value_paths or [None]):
+                for k, vp in enumerate(agg.value_paths or [None]):
                     vals = (sh.batch[vp].values[ids] if vp is not None
                             else np.zeros(ids.size))
-                    slots.append(self.segment_aggregate(csel, vals, g))
+                    slot = self.segment_aggregate(csel, vals, g)
+                    if k < len(mm) and mm[k]:
+                        slot = (*slot,
+                                *_segment_minmax_host(csel, vals, g))
+                    slots.append(slot)
                 seg.append((uniq, slots))
         return n_cands, ids_list, seg
 
@@ -347,6 +420,12 @@ class JaxBackend(ExecBackend):
         # once per shard at prime time (see exec.refine.pack_track_points)
         self._track_packs: Dict[int, Tuple[np.ndarray, np.ndarray,
                                            np.ndarray]] = {}
+        # The query server opens/closes FDbs from many threads at once:
+        # priming, finalizer release, and the pack cache share one lock so
+        # refcounts stay consistent and eviction can never interleave with
+        # a prime of the same buffers.  Reentrant because prime_fdb calls
+        # _track_pack while holding it.
+        self._prime_lock = threading.RLock()
 
     def _impl(self) -> str:
         return self.impl or self._ops.default_impl()
@@ -426,6 +505,38 @@ class JaxBackend(ExecBackend):
         bms = np.asarray(bms, dtype=np.uint32)
         return [bms[i, :fulls[i].size].copy() for i in range(n_shards)]
 
+    def probe_shards_multi(self, fulls, probes_multi):
+        """Q queries' wave probes in ONE ``bitmap_intersect_batched``
+        launch: the query axis is folded into the stacked shard axis
+        ([Q·S, K, W]) — the AND-reduce is row-independent, so per-query
+        slices are byte-equal to the loop-over-queries oracle."""
+        fulls = list(fulls)
+        probes_multi = [[list(ps) for ps in probes]
+                        for probes in probes_multi]
+        n_q, n_shards = len(probes_multi), len(fulls)
+        if n_q == 0:
+            return []
+        if n_shards == 0:
+            return [[] for _ in range(n_q)]
+        w = max(f.size for f in fulls)
+        if w == 0:
+            return [[f.copy() for f in fulls] for _ in range(n_q)]
+        k = 1 + max(len(ps) for probes in probes_multi for ps in probes)
+        stack = np.zeros((n_q * n_shards, k, w), dtype=np.uint32)
+        for q, probes in enumerate(probes_multi):
+            for i, (f, ps) in enumerate(zip(fulls, probes)):
+                row = q * n_shards + i
+                stack[row, 0, :f.size] = f
+                for j, b in enumerate(ps):
+                    stack[row, j + 1, :b.size] = b
+                for j in range(len(ps) + 1, k):
+                    stack[row, j, :f.size] = f
+        bms, _counts = self._ops.bitmap_intersect_batched(
+            self._jnp.asarray(stack), impl=self._impl())
+        bms = np.asarray(bms, dtype=np.uint32)
+        return [[bms[q * n_shards + i, :fulls[i].size].copy()
+                 for i in range(n_shards)] for q in range(n_q)]
+
     def compact_masks(self, masks):
         """One ``compact_batched`` launch for the whole wave (False-pad)."""
         masks = [np.asarray(m, dtype=bool) for m in masks]
@@ -478,49 +589,54 @@ class JaxBackend(ExecBackend):
     # ---------------------------------------------------- device residence
     def _release_primed(self, keys) -> None:
         """Finalizer: drop a dead FDb's buffer refs; evict at zero."""
-        for key in keys:
-            n = self._primed_refs.get(key, 0) - 1
-            if n <= 0:
-                self._primed_refs.pop(key, None)
-                self.device_cache.drop((key,))
-                self._track_packs.pop(key, None)
-            else:
-                self._primed_refs[key] = n
+        with self._prime_lock:
+            for key in keys:
+                n = self._primed_refs.get(key, 0) - 1
+                if n <= 0:
+                    self._primed_refs.pop(key, None)
+                    self.device_cache.drop((key,))
+                    self._track_packs.pop(key, None)
+                else:
+                    self._primed_refs[key] = n
 
     def prime_fdb(self, db) -> int:
         """Put ``db``'s stable buffers on device once (idempotent per FDb):
         column values/row_splits, valid-doc bitmaps, spacetime postings.
         A finalizer releases the buffers when the FDb is collected; shared
-        buffers (snapshots sharing Shards) survive until their last FDb."""
-        if db in self._primed_fdbs:
-            return 0
-        before = len(self.device_cache)
-        primed: List[np.ndarray] = []
-        for shard in db.shards:
-            primed.append(shard.all_bitmap())
-            for col in shard.batch.columns.values():
-                primed.append(col.values)
-                if col.row_splits is not None:
-                    primed.append(col.row_splits)
-            for (path, kind), idx in shard.indexes.items():
-                if kind == "spacetime":
-                    primed.extend((idx.keys, idx.splits, idx.doc_ids,
-                                   idx.t_min, idx.t_max))
-                    # packed refine-kernel form of the ragged track —
-                    # stable per shard, so pack once and keep resident
-                    pts, rows = self._track_pack(shard.batch, path,
-                                                 pin=True)
-                    if pts is not None:
-                        primed.extend((pts, rows))
-        keys = set()
-        for arr in primed:
-            self.device_cache.put(arr)
-            keys.add(id(arr))
-        for key in keys:
-            self._primed_refs[key] = self._primed_refs.get(key, 0) + 1
-        self._primed_fdbs.add(db)
-        weakref.finalize(db, self._release_primed, tuple(keys))
-        return len(self.device_cache) - before
+        buffers (snapshots sharing Shards) survive until their last FDb.
+        Thread-safe: concurrent primes/releases of the same FDb (the query
+        server's many sessions) serialize on the prime lock, so refcounts
+        balance and eviction never fires mid-prime."""
+        with self._prime_lock:
+            if db in self._primed_fdbs:
+                return 0
+            before = len(self.device_cache)
+            primed: List[np.ndarray] = []
+            for shard in db.shards:
+                primed.append(shard.all_bitmap())
+                for col in shard.batch.columns.values():
+                    primed.append(col.values)
+                    if col.row_splits is not None:
+                        primed.append(col.row_splits)
+                for (path, kind), idx in shard.indexes.items():
+                    if kind == "spacetime":
+                        primed.extend((idx.keys, idx.splits, idx.doc_ids,
+                                       idx.t_min, idx.t_max))
+                        # packed refine-kernel form of the ragged track —
+                        # stable per shard, so pack once and keep resident
+                        pts, rows = self._track_pack(shard.batch, path,
+                                                     pin=True)
+                        if pts is not None:
+                            primed.extend((pts, rows))
+            keys = set()
+            for arr in primed:
+                self.device_cache.put(arr)
+                keys.add(id(arr))
+            for key in keys:
+                self._primed_refs[key] = self._primed_refs.get(key, 0) + 1
+            self._primed_fdbs.add(db)
+            weakref.finalize(db, self._release_primed, tuple(keys))
+            return len(self.device_cache) - before
 
     # --------------------------------------------------------- track refine
     def _track_pack(self, batch, path: str, pin: bool = False):
@@ -542,8 +658,9 @@ class JaxBackend(ExecBackend):
         pts, rows = pack_track_points(lat.values, batch[path + ".lng"].values,
                                       batch[path + ".t"].values,
                                       lat.row_splits)
-        if pin or id(lat.values) in self._primed_refs:
-            self._track_packs[id(lat.values)] = (lat.values, pts, rows)
+        with self._prime_lock:
+            if pin or id(lat.values) in self._primed_refs:
+                self._track_packs[id(lat.values)] = (lat.values, pts, rows)
         return pts, rows
 
     def _dev(self, arr: np.ndarray):
@@ -689,6 +806,92 @@ class JaxBackend(ExecBackend):
             if cand is not None:
                 m &= np.asarray(cand, dtype=bool)
         return (masks, tables) if with_first_hits else masks
+
+    def refine_tracks_multi(self, batches, path, constraints_list,
+                            candidates_lists=None, edges_list=None,
+                            with_first_hits: bool = False):
+        """Q coalesced queries' refine in ONE ``refine_tracks_multi``
+        launch: the wave's track buffers are stacked once and shared, the
+        per-query constraint tables ride a leading query axis (padded to
+        common C/R — see ``exec.refine.pack_constraints_multi``).  Falls
+        back to the loop-over-queries oracle when any query has 0/>30
+        constraints or a shard lacks a packed track."""
+        batches = list(batches)
+        constraints_list = [list(c) for c in constraints_list]
+        n_q = len(constraints_list)
+        if candidates_lists is None:
+            candidates_lists = [None] * n_q
+        if edges_list is None:
+            edges_list = [()] * n_q
+        edges_list = [tuple(tuple(e) for e in es) for es in edges_list]
+
+        def fallback():
+            return super(JaxBackend, self).refine_tracks_multi(
+                batches, path, constraints_list, candidates_lists,
+                edges_list, with_first_hits=with_first_hits)
+
+        if n_q == 0 or not batches:
+            return fallback()
+        if any(not c or len(c) > 30 for c in constraints_list):
+            return fallback()
+        packs = [self._track_pack(b, path) for b in batches]
+        if any(pts is None for pts, _ in packs):
+            return fallback()
+        ns = [b.n for b in batches]
+        n_max = max(ns)
+        p_max = max(pts.shape[1] for pts, _ in packs)
+        if n_max == 0 or p_max == 0:
+            return fallback()
+        jnp = self._jnp
+        pts_pad, rows_pad = [], []
+        for pts, rows in packs:
+            p = pts.shape[1]
+            dp, dr = self._dev(pts), self._dev(rows)
+            if p < p_max:
+                dp = jnp.zeros((4, p_max), jnp.uint32).at[:, :p].set(dp)
+                dr = jnp.full((p_max,), -1, jnp.int32).at[:p].set(dr)
+            pts_pad.append(dp)
+            rows_pad.append(dr)
+        pts_stack = jnp.stack(pts_pad)
+        rows_stack = jnp.stack(rows_pad)
+        cov = pack_constraints_multi(constraints_list)
+        need_fh = with_first_hits or any(edges_list)
+        if need_fh:
+            out_d, fh_hi, fh_lo = self._ops.refine_tracks_multi(
+                pts_stack, rows_stack, jnp.asarray(cov), n_max,
+                impl=self._impl(), with_first_hits=True)
+            masked = []
+            for q, edges in enumerate(edges_list):
+                m = out_d[q]
+                for i, j in edges:
+                    m = m & self._order_ok(fh_hi[q], fh_lo[q], i, j)
+                masked.append(m)
+            out = np.asarray(jnp.stack(masked), dtype=bool)
+        else:
+            out = np.asarray(self._ops.refine_tracks_multi(
+                pts_stack, rows_stack, jnp.asarray(cov), n_max,
+                impl=self._impl()), dtype=bool)
+        if with_first_hits:
+            hi_h, lo_h = np.asarray(fh_hi), np.asarray(fh_lo)
+        results = []
+        for q in range(n_q):
+            cands = candidates_lists[q]
+            if cands is None:
+                cands = [None] * len(batches)
+            masks = [out[q, i, :n].copy() for i, n in enumerate(ns)]
+            for m, cand in zip(masks, cands):
+                if cand is not None:
+                    m &= np.asarray(cand, dtype=bool)
+            if with_first_hits:
+                # only the query's real constraints (pad rows sliced off)
+                c_q = len(constraints_list[q])
+                tables = [self._fh_table(hi_h[q, i, :c_q, :n],
+                                         lo_h[q, i, :c_q, :n], cand)
+                          for i, (n, cand) in enumerate(zip(ns, cands))]
+                results.append((masks, tables))
+            else:
+                results.append(masks)
+        return results
 
     def gather_columns(self, batch, paths, ids):
         """Selective read from device-resident buffers when primed: dense
@@ -898,10 +1101,12 @@ class JaxBackend(ExecBackend):
             self._jax.block_until_ready(probe_dev)
             self._fused.record_stage(
                 "upload", (_time.perf_counter() - t_up) * 1e3)
+        minmax = tuple(getattr(agg, "minmax", ()) or ()) \
+            if agg is not None else ()
         cand, sel_idx, sel_counts, segs = self._ops.run_wave_fused(
             probe_dev, ns_dev, pts_stack, rows_stack, cov_dev, codes_dev,
             vals_dev, num_docs=n_max, edges=edges, total_groups=total,
-            impl=impl, profile=profile)
+            impl=impl, profile=profile, minmax=minmax)
         # stage wave k+1's buffers before wave k's outputs sync to host
         if prefetch_shards:
             self.prefetch_wave(prefetch_shards, refine, agg)
@@ -912,19 +1117,110 @@ class JaxBackend(ExecBackend):
                     for i in range(len(shards))]
         seg = None
         if agg is not None:
-            slot_host = [(np.rint(np.asarray(cnt)).astype(np.int64),
-                          np.asarray(s, dtype=np.float64),
-                          np.asarray(s2, dtype=np.float64))
-                         for cnt, s, s2 in (segs or [])]
+            # slots are (count, sum, sumsq) triples, or 5-tuples with the
+            # per-group min/max planes appended for flagged value slots
+            slot_host = []
+            for st in (segs or []):
+                slot = (np.rint(np.asarray(st[0])).astype(np.int64),
+                        np.asarray(st[1], dtype=np.float64),
+                        np.asarray(st[2], dtype=np.float64))
+                if len(st) == 5:
+                    slot = (*slot, np.asarray(st[3], dtype=np.float64),
+                            np.asarray(st[4], dtype=np.float64))
+                slot_host.append(slot)
             seg = []
             for i, (uniq, _c, g) in enumerate(facts):
                 off = int(offsets[i])
                 # g == 0 → (uniq, []) exactly like the base-class oracle
                 seg.append((uniq,
-                            [(cnt[off:off + g], s[off:off + g],
-                              s2[off:off + g])
-                             for cnt, s, s2 in slot_host] if g else []))
+                            [tuple(a[off:off + g] for a in slot)
+                             for slot in slot_host] if g else []))
         return n_cands, ids_list, seg
+
+    def run_wave_fused_multi(self, shards, probes_multi, refines,
+                             prefetch_shards=None):
+        """Q coalesced selection queries through one wave in ONE
+        ``run_wave_fused_multi`` dispatch: per-query probe stacks ride a
+        leading query axis folded into the stacked probe/compact kernels,
+        the per-query constraint tables a leading axis on the multi refine
+        kernel, and the wave's track buffers are shared.  Declines
+        (``None``) on the same conditions as the single-query fused path —
+        the server then falls back to per-query execution."""
+        shards = list(shards)
+        probes_multi = [[list(ps) for ps in probes]
+                        for probes in probes_multi]
+        n_q = len(probes_multi)
+        if n_q == 0:
+            return []
+        if not shards:
+            return [([], []) for _ in range(n_q)]
+        refines = list(refines)
+        has_refine = any(r is not None for r in refines)
+        path = None
+        packs = None
+        if has_refine:
+            if not all(r is not None for r in refines):
+                return None              # mixed refine/no-refine group
+            if len({r.path for r in refines}) != 1:
+                return None
+            path = refines[0].path
+            cons_list = [list(r.constraints) for r in refines]
+            if any(not c or len(c) > 30 for c in cons_list):
+                return None
+            packs = [self._track_pack(sh.batch, path) for sh in shards]
+            if any(p is None for p, _ in packs):
+                return None
+        ns = [sh.n for sh in shards]
+        n_max = max(ns)
+        fulls = [sh.all_bitmap() for sh in shards]
+        w = max(f.size for f in fulls)
+        if n_max == 0 or w == 0:
+            # all-empty wave: still one fused dispatch so the coalesced
+            # ⌈shards/wave⌉ total-launch contract stays exact
+            self._ops.record_launch("run_wave_fused_multi")
+            if prefetch_shards:
+                self.prefetch_wave(prefetch_shards,
+                                   refines[0] if has_refine else None)
+            return [([0] * len(shards),
+                     [np.zeros(0, dtype=np.int64) for _ in shards])
+                    for _ in range(n_q)]
+        if has_refine and max(p.shape[1] for p, _ in packs) == 0:
+            return None
+        k = 1 + max((len(ps) for probes in probes_multi for ps in probes),
+                    default=0)
+        stack = np.zeros((n_q, len(shards), k, w), dtype=np.uint32)
+        for q, probes in enumerate(probes_multi):
+            for i, (f, ps) in enumerate(zip(fulls, probes)):
+                stack[q, i, 0, :f.size] = f
+                for j, b in enumerate(ps):
+                    stack[q, i, j + 1, :b.size] = b
+                for j in range(len(ps) + 1, k):
+                    stack[q, i, j, :f.size] = f
+        probe_dev = self._jnp.asarray(stack)
+        ns_dev = self._jnp.asarray(np.asarray(ns, dtype=np.int32))
+        pts_stack = rows_stack = cov_dev = None
+        edges_multi = tuple(() for _ in range(n_q))
+        if has_refine:
+            pts_stack, rows_stack = self._refine_stack(shards, packs, path)
+            cov_dev = self._jnp.asarray(pack_constraints_multi(cons_list))
+            edges_multi = tuple(tuple(tuple(e) for e in r.edges)
+                                for r in refines)
+        cand, sel_idx, sel_counts = self._ops.run_wave_fused_multi(
+            probe_dev, ns_dev, pts_stack, rows_stack, cov_dev,
+            num_docs=n_max, edges_multi=edges_multi, impl=self._impl())
+        if prefetch_shards:
+            self.prefetch_wave(prefetch_shards,
+                               refines[0] if has_refine else None)
+        cand_h = np.asarray(cand)
+        idx_h = np.asarray(sel_idx)
+        counts_h = np.asarray(sel_counts)
+        out = []
+        for q in range(n_q):
+            n_cands = [int(c) for c in cand_h[q]]
+            ids_list = [idx_h[q, i, :int(counts_h[q, i])].astype(np.int64)
+                        for i in range(len(shards))]
+            out.append((n_cands, ids_list))
+        return out
 
     def prefetch_wave(self, shards, refine=None, agg=None) -> None:
         """Double-buffered async prefetch: build (or re-find) the next

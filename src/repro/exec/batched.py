@@ -24,7 +24,7 @@ runs through ``backend.run_wave_fused`` — probe → refine → compact →
 (segment-agg) as ONE device dispatch (``kernels.fused``), tightening the
 contract to ⌈shards/wave⌉ **total** launches per query.  Plans whose
 aggregation is a single dense int-key group-by with only
-count/sum/avg/std_dev (``fused_agg_plan``) skip the column gather
+count/sum/avg/std_dev/min/max (``fused_agg_plan``) skip the column gather
 entirely: the fused dispatch returns per-group partial sums and
 ``_fused_agg_finalize`` reproduces the host aggregation byte-for-byte.
 Other plans run the fused selection stages and keep the legacy
@@ -113,6 +113,9 @@ class FusedAggPlan:
     key_path: str
     value_paths: List[str]
     slot_of: List[Optional[int]]
+    #: per value slot: True when some min/max agg reads that column, so
+    #: the fused dispatch extends the slot with segment min/max planes
+    minmax: Tuple[bool, ...] = ()
 
     def factorize(self, shard, backend=None):
         """``(group_keys, row_codes int32, num_groups)`` over the shard's
@@ -147,9 +150,10 @@ def fused_agg_plan(plan: Plan, shards) -> Optional[FusedAggPlan]:
         no residual (both need gathered/derived columns host-side),
       * exactly one group key, a plain field ref to a dense non-vocab
         int-like column on every shard,
-      * only count/sum/avg/std_dev aggs (min/max/approx_distinct need the
+      * only count/sum/avg/std_dev/min/max aggs (approx_distinct needs the
         selected rows themselves), each over a plain field ref to a dense
-        non-vocab numeric column,
+        non-vocab numeric column — min/max ride as extra segment planes on
+        their value slot,
       * every read-set column dense, so ``bytes_read`` stays exact without
         gathering (ragged nbytes depends on the selected rows' spans).
     """
@@ -176,23 +180,29 @@ def fused_agg_plan(plan: Plan, shards) -> Optional[FusedAggPlan]:
         return None
     value_paths: List[str] = []
     slot_of: List[Optional[int]] = []
+    minmax_slots: set = set()
     for kind, _name, e in spec.aggs:
         if kind == "count" and e is None:
             slot_of.append(None)
             continue
-        if kind not in ("sum", "avg", "std_dev") \
+        if kind not in ("sum", "avg", "std_dev", "min", "max") \
                 or not isinstance(e, FieldRef) or not dense(e.path):
             return None
         if e.path not in value_paths:
             value_paths.append(e.path)
-        slot_of.append(value_paths.index(e.path))
+        slot = value_paths.index(e.path)
+        slot_of.append(slot)
+        if kind in ("min", "max"):
+            minmax_slots.add(slot)
     for sh in shards:
         paths = [p for p in plan.source_paths if p in sh.batch.columns]
         if not paths:
             paths = sh.batch.paths()
         if any(sh.batch[p].row_splits is not None for p in paths):
             return None
-    return FusedAggPlan(spec, key_path, value_paths, slot_of)
+    return FusedAggPlan(spec, key_path, value_paths, slot_of,
+                        tuple(i in minmax_slots
+                              for i in range(len(value_paths))))
 
 
 def _fused_agg_finalize(agg: FusedAggPlan, uniq: np.ndarray,
@@ -220,6 +230,10 @@ def _fused_agg_finalize(agg: FusedAggPlan, uniq: np.ndarray,
         elif kind == "avg":
             per_agg.append([(float(x), int(c))
                             for x, c in zip(s, counts)])
+        elif kind == "min":
+            per_agg.append([float(x) for x in slots[slot][3][keep]])
+        elif kind == "max":
+            per_agg.append([float(x) for x in slots[slot][4][keep]])
         else:                                            # std_dev
             s2 = slots[slot][2][keep]
             per_agg.append([(float(x), float(y), int(c))

@@ -30,6 +30,7 @@ remain the primed-buffer census the priming tests assert.
 """
 from __future__ import annotations
 
+import threading
 from typing import Dict, Optional, Tuple
 
 import numpy as np
@@ -38,11 +39,20 @@ __all__ = ["DeviceCache"]
 
 
 class DeviceCache:
-    """Identity-keyed host→device buffer cache (insert via :meth:`put`)."""
+    """Identity-keyed host→device buffer cache (insert via :meth:`put`).
+
+    All mutations run under one RLock: the serve layer opens and closes
+    FDbs from worker threads while the scheduler primes waves, so put /
+    drop / clear race without it.  The device put itself (host→device
+    copy) stays outside the lock — only dict bookkeeping is guarded, and
+    a duplicate concurrent put of the same array is harmless (last write
+    wins; both device buffers alias the same bytes).
+    """
 
     def __init__(self, jax_module):
         self._jax = jax_module
         self._jnp = jax_module.numpy
+        self._lock = threading.RLock()
         # id(host array) → (host array pin, device buffer)
         self._buffers: Dict[int, Tuple[np.ndarray, object]] = {}
         # flat tuple key (tag, *source ids, ...) → derived stacked value
@@ -52,67 +62,79 @@ class DeviceCache:
         self.keyed_hits = 0
 
     def __len__(self) -> int:
-        return len(self._buffers)
+        with self._lock:
+            return len(self._buffers)
 
     def nbytes(self) -> int:
         """Host-side bytes of everything resident (device mirror is 1:1)."""
-        return sum(a.nbytes for a, _ in self._buffers.values())
+        with self._lock:
+            return sum(a.nbytes for a, _ in self._buffers.values())
 
     def put(self, arr: Optional[np.ndarray]):
         """Make ``arr`` device-resident; returns the device buffer."""
         if arr is None:
             return None
         key = id(arr)
-        hit = self._buffers.get(key)
+        with self._lock:
+            hit = self._buffers.get(key)
         if hit is not None:
             return hit[1]
         with self._jax.experimental.enable_x64():
             dev = self._jnp.asarray(arr)
-        self._buffers[key] = (arr, dev)
+        with self._lock:
+            self._buffers[key] = (arr, dev)
         return dev
 
     def get(self, arr: np.ndarray):
         """Device buffer for ``arr`` if primed, else None (and count it)."""
-        hit = self._buffers.get(id(arr))
-        if hit is not None:
-            self.hits += 1
-            return hit[1]
-        self.misses += 1
-        return None
+        with self._lock:
+            hit = self._buffers.get(id(arr))
+            if hit is not None:
+                self.hits += 1
+                return hit[1]
+            self.misses += 1
+            return None
 
     def put_keyed(self, key: tuple, value) -> None:
         """Store a derived wave-stacked entry under a flat tuple key whose
         int elements are primed-source ``id``s (see module docstring)."""
-        self._keyed[key] = value
+        with self._lock:
+            self._keyed[key] = value
 
     def get_keyed(self, key: tuple):
         """Derived entry for ``key`` if staged, else None (hits counted —
         the prefetch tests read ``keyed_hits``)."""
-        hit = self._keyed.get(key)
-        if hit is not None:
-            self.keyed_hits += 1
-        return hit
+        with self._lock:
+            hit = self._keyed.get(key)
+            if hit is not None:
+                self.keyed_hits += 1
+            return hit
 
     def drop(self, keys) -> None:
         """Evict entries by key id (used by per-FDb finalizers so buffers
         of a collected FDb do not stay pinned forever).  Derived keyed
         entries referencing a dropped source id go with it."""
         dropped = set(keys)
-        for key in keys:
-            self._buffers.pop(key, None)
-        if self._keyed:
-            self._keyed = {
-                k: v for k, v in self._keyed.items()
-                if not any(isinstance(e, int) and e in dropped for e in k)}
+        with self._lock:
+            for key in keys:
+                self._buffers.pop(key, None)
+            if self._keyed:
+                self._keyed = {
+                    k: v for k, v in self._keyed.items()
+                    if not any(isinstance(e, int) and e in dropped for e in k)}
 
     def clear(self) -> None:
-        self._buffers.clear()
-        self._keyed.clear()
-        self.hits = 0
-        self.misses = 0
-        self.keyed_hits = 0
+        with self._lock:
+            self._buffers.clear()
+            self._keyed.clear()
+            self.hits = 0
+            self.misses = 0
+            self.keyed_hits = 0
 
     def stats(self) -> Dict[str, int]:
-        return {"buffers": len(self._buffers), "nbytes": self.nbytes(),
-                "keyed": len(self._keyed), "hits": self.hits,
-                "misses": self.misses, "keyed_hits": self.keyed_hits}
+        with self._lock:
+            return {"buffers": len(self._buffers),
+                    "nbytes": sum(a.nbytes
+                                  for a, _ in self._buffers.values()),
+                    "keyed": len(self._keyed), "hits": self.hits,
+                    "misses": self.misses, "keyed_hits": self.keyed_hits}

@@ -32,7 +32,8 @@ from ..fdb.columnar import span_indices
 from ..geo import mercator as M
 
 __all__ = ["f64_sort_key", "pack_track_points", "pack_constraints",
-           "refine_tracks_host", "FIRST_HIT_NONE"]
+           "pack_constraints_multi", "refine_tracks_host",
+           "FIRST_HIT_NONE"]
 
 _U32 = np.uint64(0xFFFFFFFF)
 _SHIFT32 = np.uint64(32)
@@ -110,6 +111,47 @@ def pack_constraints(constraints: Sequence[Tuple[object, float, float]]
         cov[c, 6, :] = w1_hi
         cov[c, 7, :] = w1_lo
     return cov
+
+
+def pack_constraints_multi(constraints_list) -> np.ndarray:
+    """Q queries' constraint lists → one uint32 ``[Q, C_max, 8, R_max]``
+    table for the multi-query refine kernel.
+
+    Per-query tables (:func:`pack_constraints`) are padded to a common
+    shape: the range axis with the never-hit empty range, the constraint
+    axis with **always-hit** pad constraints — one range slot covering the
+    whole key space ``[0, 2^64)`` with a ``[0, 2^64)`` window, satisfied
+    by any doc that has at least one point.  Padding is sound because
+    every query carries ≥1 real constraint (the coalescer guarantees it):
+    a doc passing its real constraints necessarily has a point, so the pad
+    bit is set too; a doc with no points fails its real constraints
+    anyway.  Pad constraints never appear in ordering edges.
+    """
+    covs = [pack_constraints(list(cons)) for cons in constraints_list]
+    if not covs:
+        return np.zeros((0, 0, 8, 128), dtype=np.uint32)
+    c_max = max(c.shape[0] for c in covs)
+    r_max = max(c.shape[2] for c in covs)
+    out = np.zeros((len(covs), c_max, 8, r_max), dtype=np.uint32)
+    # never-hit default for every slot of every (possibly padded) row
+    out[:, :, 0, :] = 0xFFFFFFFF
+    out[:, :, 1, :] = 0xFFFFFFFF
+    for q, cov in enumerate(covs):
+        c, _, r = cov.shape
+        out[q, :c, :, :r] = cov
+        # re-assert never-hit on the R pad of real constraints (the copy
+        # above overwrote columns [:r] only; [r:] keeps the default) and
+        # fill the C pad rows with the always-hit constraint
+        for cp in range(c, c_max):
+            out[q, cp, 0, 0] = 0        # key >= 0
+            out[q, cp, 1, 0] = 0
+            out[q, cp, 2, 0] = 0xFFFFFFFF   # key < 2^64−1 (keys are 60-bit)
+            out[q, cp, 3, 0] = 0xFFFFFFFF
+            out[q, cp, 4, :] = 0        # window [0, 2^64−1]: always true
+            out[q, cp, 5, :] = 0
+            out[q, cp, 6, :] = 0xFFFFFFFF
+            out[q, cp, 7, :] = 0xFFFFFFFF
+    return out
 
 
 def refine_tracks_host(lat: np.ndarray, lng: np.ndarray, t: np.ndarray,

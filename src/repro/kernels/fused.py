@@ -52,7 +52,7 @@ from . import ref as _ref
 from . import refine as _refine
 from . import segment_agg as _seg
 
-__all__ = ["run_wave_fused", "postings_bitmap",
+__all__ = ["run_wave_fused", "run_wave_fused_multi", "postings_bitmap",
            "record_stage", "stage_times", "reset_stage_times"]
 
 
@@ -129,23 +129,42 @@ def _compact_stage(impl: str, mask):
     return _compact.compact_batched(mask, interpret=(impl == "interpret"))
 
 
-def _agg_stage(impl: str, mask, codes, vals, total_groups: int):
+def _agg_stage(impl: str, mask, codes, vals, total_groups: int,
+               minmax: Tuple[bool, ...] = ()):
+    """Per-value-slot segment partials.  Slots flagged in ``minmax`` grow
+    per-group min/max reductions in the same pass — pure-jnp
+    ``segment_min``/``segment_max`` under every impl (min/max commute with
+    the f64→f32 staging cast, so interpret/pallas stay allclose and
+    ``reference`` f64 is exact/order-independent); those slots return
+    5-tuples ``(count, sum, sumsq, min, max)``, the rest the usual
+    triples.  Groups with count 0 carry ±inf fills and are dropped by the
+    backend's ``count > 0`` keep-filter."""
     gc = jnp.where(mask, codes, jnp.int32(-1)).reshape(-1)
+    valid = gc >= 0
+    gid = jnp.where(valid, gc, 0)
     segs = []
-    for v in vals:
+    for k, v in enumerate(vals):
         vv = v.reshape(-1)
         if impl == "reference":
-            segs.append(_ref.segment_agg_ref(gc, vv, total_groups))
+            seg = _ref.segment_agg_ref(gc, vv, total_groups)
         else:
-            segs.append(_seg.segment_agg(gc, vv, total_groups,
-                                         interpret=(impl == "interpret")))
+            seg = _seg.segment_agg(gc, vv, total_groups,
+                                   interpret=(impl == "interpret"))
+        if k < len(minmax) and minmax[k]:
+            inf = jnp.asarray(jnp.inf, vv.dtype)
+            mn = jax.ops.segment_min(jnp.where(valid, vv, inf), gid,
+                                     num_segments=total_groups)
+            mx = jax.ops.segment_max(jnp.where(valid, vv, -inf), gid,
+                                     num_segments=total_groups)
+            seg = (*seg, mn, mx)
+        segs.append(seg)
     return segs
 
 
 @functools.lru_cache(maxsize=None)
 def _fused_fn(impl: str, num_docs: int,
               edges: Tuple[Tuple[int, int], ...], total_groups: int,
-              has_refine: bool):
+              has_refine: bool, minmax: Tuple[bool, ...] = ()):
     """One jitted end-to-end wave pipeline for a static stage config."""
 
     def fn(probe_stack, ns, pts, rows, cov, codes, vals):
@@ -157,7 +176,8 @@ def _fused_fn(impl: str, num_docs: int,
         sel_idx, sel_counts = _compact_stage(impl, mask)
         segs = None
         if total_groups > 0:
-            segs = _agg_stage(impl, mask, codes, vals, total_groups)
+            segs = _agg_stage(impl, mask, codes, vals, total_groups,
+                              minmax)
         return cand, sel_idx, sel_counts, segs
 
     # Donating the probe stack lets XLA reuse its buffer for the stage
@@ -167,7 +187,7 @@ def _fused_fn(impl: str, num_docs: int,
 
 
 def _profiled(impl, probe_stack, ns, pts, rows, cov, codes, vals,
-              num_docs, edges, total_groups, has_refine):
+              num_docs, edges, total_groups, has_refine, minmax=()):
     """Same math, eager stage-by-stage with a sync + timer per stage."""
     t = time.perf_counter
     t0 = t()
@@ -187,7 +207,7 @@ def _profiled(impl, probe_stack, ns, pts, rows, cov, codes, vals,
     segs = None
     if total_groups > 0:
         segs = jax.block_until_ready(
-            _agg_stage(impl, mask, codes, vals, total_groups))
+            _agg_stage(impl, mask, codes, vals, total_groups, minmax))
         record_stage("agg", (t() - t2) * 1e3)
     return cand, sel_idx, sel_counts, segs
 
@@ -195,10 +215,14 @@ def _profiled(impl, probe_stack, ns, pts, rows, cov, codes, vals,
 def run_wave_fused(probe_stack, ns, pts=None, rows=None, cov=None,
                    codes=None, vals=(), *, num_docs: int,
                    edges=(), total_groups: int = 0,
-                   impl: str = "reference", profile: bool = False):
-    """Run one wave through the fused pipeline (see module docstring)."""
+                   impl: str = "reference", profile: bool = False,
+                   minmax=()):
+    """Run one wave through the fused pipeline (see module docstring).
+    ``minmax`` flags which value slots also reduce per-group min/max
+    (5-tuple partials) — same dispatch, no extra launches."""
     edges = tuple(tuple(e) for e in edges)
     vals = tuple(vals)
+    minmax = tuple(bool(m) for m in minmax)
     has_refine = pts is not None
     if impl == "reference":
         # f64 value stacks + f64 accumulation, bit-equal to the host oracle
@@ -206,15 +230,94 @@ def run_wave_fused(probe_stack, ns, pts=None, rows=None, cov=None,
             if profile:
                 return _profiled(impl, probe_stack, ns, pts, rows, cov,
                                  codes, vals, num_docs, edges,
-                                 total_groups, has_refine)
+                                 total_groups, has_refine, minmax)
             return _fused_fn(impl, num_docs, edges, total_groups,
-                             has_refine)(probe_stack, ns, pts, rows, cov,
-                                         codes, vals)
+                             has_refine, minmax)(probe_stack, ns, pts,
+                                                 rows, cov, codes, vals)
     if profile:
         return _profiled(impl, probe_stack, ns, pts, rows, cov, codes,
-                         vals, num_docs, edges, total_groups, has_refine)
-    return _fused_fn(impl, num_docs, edges, total_groups, has_refine)(
-        probe_stack, ns, pts, rows, cov, codes, vals)
+                         vals, num_docs, edges, total_groups, has_refine,
+                         minmax)
+    return _fused_fn(impl, num_docs, edges, total_groups, has_refine,
+                     minmax)(probe_stack, ns, pts, rows, cov, codes, vals)
+
+
+# --------------------------------------------------------------------------
+# Multi-query fused wave — the serve layer's coalesced dispatch
+# --------------------------------------------------------------------------
+
+def _refine_multi_stage(impl: str, pts, rows, cov, num_docs: int,
+                        edges_multi):
+    """Query-axis refine: cov [Q, C, 8, R] → masks [Q, S, num_docs], with
+    each query's ordering edges applied against its own slice of the
+    first-hit tables (static per-query compare chain, zero launches)."""
+    wf = any(len(e) > 0 for e in edges_multi)
+    if impl == "reference":
+        r = _ref.refine_tracks_multi_ref(pts, rows, cov,
+                                         num_docs=num_docs,
+                                         with_first_hits=wf)
+    else:
+        r = _refine.refine_tracks_multi(pts, rows, cov, num_docs,
+                                        interpret=(impl == "interpret"),
+                                        with_first_hits=wf)
+    if not wf:
+        return r
+    out, fh_hi, fh_lo = r
+    per_q = []
+    for qi, edges in enumerate(edges_multi):
+        m = out[qi]
+        for i, j in edges:           # A-then-B: first hit of i before j's
+            a_hi, a_lo = fh_hi[qi, :, i, :], fh_lo[qi, :, i, :]
+            b_hi, b_lo = fh_hi[qi, :, j, :], fh_lo[qi, :, j, :]
+            m = m & ((a_hi < b_hi) | ((a_hi == b_hi) & (a_lo < b_lo)))
+        per_q.append(m)
+    return jnp.stack(per_q)
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_multi_fn(impl: str, num_docs: int, edges_multi, has_refine):
+    """One jitted multi-query wave pipeline (probe → refine → compact).
+    The query axis is folded into the shard axis for the probe and compact
+    stages (the stacked kernels are shape-agnostic in S) and kept leading
+    through the refine kernel's per-query constraint tables."""
+
+    def fn(probe_stacks, ns, pts, rows, cov):
+        q, s = probe_stacks.shape[0], probe_stacks.shape[1]
+        flat = probe_stacks.reshape((q * s,) + probe_stacks.shape[2:])
+        ns_flat = jnp.tile(ns, q)                     # [(Q·S)]
+        mask = _mask_stage(_probe_stage(impl, flat), ns_flat, num_docs)
+        mask = mask.reshape(q, s, num_docs)
+        cand = mask.sum(axis=2).astype(jnp.int32)
+        if has_refine:
+            mask = mask & _refine_multi_stage(impl, pts, rows, cov,
+                                              num_docs, edges_multi)
+        sel_idx, sel_counts = _compact_stage(
+            impl, mask.reshape(q * s, num_docs))
+        return (cand, sel_idx.reshape(q, s, num_docs),
+                sel_counts.reshape(q, s))
+
+    return jax.jit(fn)
+
+
+def run_wave_fused_multi(probe_stacks, ns, pts=None, rows=None, cov=None,
+                         *, num_docs: int, edges_multi=(),
+                         impl: str = "reference"):
+    """Q coalesced queries through one wave in ONE dispatch.
+
+    ``probe_stacks`` [Q, S, K, W] uint32 — each query's wave-stacked probe
+    bitmaps (pad rows AND-identity as in the single-query path); ``cov``
+    [Q, C, 8, R] uint32 — per-query constraint tables padded to common
+    C/R (always-hit constraints / never-hit range slots); track buffers
+    are shared.  ``edges_multi`` is one edge tuple per query.  Returns
+    ``(cand [Q, S], sel_idx [Q, S, N], sel_counts [Q, S])``.
+    """
+    edges_multi = tuple(tuple(tuple(e) for e in es) for es in edges_multi)
+    has_refine = pts is not None
+    fn = _fused_multi_fn(impl, num_docs, edges_multi, has_refine)
+    if impl == "reference":
+        with jax.experimental.enable_x64():
+            return fn(probe_stacks, ns, pts, rows, cov)
+    return fn(probe_stacks, ns, pts, rows, cov)
 
 
 # --------------------------------------------------------------------------

@@ -43,7 +43,8 @@ from . import ssm_scan as _ssm
 __all__ = ["default_impl", "bitmap_binary", "bitmap_intersect",
            "bitmap_intersect_batched", "compact", "compact_batched",
            "segment_agg", "refine_tracks", "refine_tracks_batched",
-           "run_wave_fused", "postings_bitmap",
+           "refine_tracks_multi",
+           "run_wave_fused", "run_wave_fused_multi", "postings_bitmap",
            "flash_attention", "ssm_scan",
            "launch_counts", "reset_launch_counts", "record_launch"]
 
@@ -63,28 +64,58 @@ def _resolve(impl: Optional[str]) -> str:
 
 
 # --------------------------------------------------------------------------
-# Launch counting — engines dispatch from worker threads, hence the lock.
+# Launch counting — engines (and now the query server) dispatch from many
+# worker threads concurrently.  Each thread owns a lock-free thread-local
+# counter; the aggregate view the launch-contract tests read is the
+# lock-protected process-wide sum.  ``scope="thread"`` exposes the calling
+# thread's private counts (a dispatch attributed to another thread never
+# leaks in), with an epoch stamp so a global reset invalidates every
+# thread's stale view.
 # --------------------------------------------------------------------------
 
 _LAUNCHES: Counter = Counter()
 _LAUNCH_LOCK = threading.Lock()
+_LAUNCH_EPOCH = 0
+_TL = threading.local()
+
+
+def _thread_counter() -> Counter:
+    """The calling thread's private counter for the current epoch."""
+    if getattr(_TL, "epoch", None) != _LAUNCH_EPOCH:
+        _TL.epoch = _LAUNCH_EPOCH
+        _TL.counts = Counter()
+    return _TL.counts
 
 
 def record_launch(op: str) -> None:
     """Count one logical kernel dispatch under ``op``."""
+    _thread_counter()[op] += 1          # thread-local: no lock needed
     with _LAUNCH_LOCK:
         _LAUNCHES[op] += 1
 
 
-def launch_counts() -> Dict[str, int]:
-    """Snapshot of per-op dispatch counts since the last reset."""
+def launch_counts(scope: str = "aggregate") -> Dict[str, int]:
+    """Snapshot of per-op dispatch counts since the last reset.
+
+    ``scope="aggregate"`` (default) sums dispatches across all threads —
+    what the ⌈shards/wave⌉ contract tests assert, since engines dispatch
+    from pool threads.  ``scope="thread"`` returns only dispatches
+    recorded by the *calling* thread."""
+    if scope == "thread":
+        return dict(_thread_counter())
+    if scope != "aggregate":
+        raise ValueError(f"unknown launch_counts scope {scope!r}")
     with _LAUNCH_LOCK:
         return dict(_LAUNCHES)
 
 
 def reset_launch_counts() -> None:
+    """Zero the aggregate counter and invalidate every thread's local
+    view (their next record/read starts a fresh epoch)."""
+    global _LAUNCH_EPOCH
     with _LAUNCH_LOCK:
         _LAUNCHES.clear()
+        _LAUNCH_EPOCH += 1
 
 
 # --------------------------------------------------------------------------
@@ -182,21 +213,57 @@ def refine_tracks_batched(pts, rows, cov, num_docs: int,
                                          with_first_hits=with_first_hits)
 
 
+def refine_tracks_multi(pts, rows, cov, num_docs: int,
+                        impl: Optional[str] = None,
+                        with_first_hits: bool = False):
+    """Query-axis refine: Q coalesced queries' constraint tables
+    [Q, C, 8, R] against one wave's shared track buffers [S, 4, P] →
+    hit masks [Q, S, num_docs] bool in ONE launch (+ first-hit word
+    tables [Q, S, C, num_docs] × 2 under ``with_first_hits``)."""
+    impl = _resolve(impl)
+    record_launch("refine_tracks_multi")
+    if impl == "reference":
+        return _ref.refine_tracks_multi_ref(pts, rows, cov,
+                                            num_docs=num_docs,
+                                            with_first_hits=with_first_hits)
+    return _refine.refine_tracks_multi(pts, rows, cov, num_docs,
+                                       interpret=(impl == "interpret"),
+                                       with_first_hits=with_first_hits)
+
+
 def run_wave_fused(probe_stack, ns, pts=None, rows=None, cov=None,
                    codes=None, vals=(), *, num_docs: int, edges=(),
                    total_groups: int = 0, impl: Optional[str] = None,
-                   profile: bool = False):
+                   profile: bool = False, minmax=()):
     """Whole-wave fused pipeline (probe → refine → compact → segment-agg)
     in ONE dispatch — see ``kernels.fused``.  Counts as a single launch:
     the fused path's ⌈shards/wave⌉ *total*-dispatch contract hangs off
     this counter.  Each stage lowers to its Pallas kernel under
-    ``pallas``/``interpret`` and to the jnp oracle under ``reference``."""
+    ``pallas``/``interpret`` and to the jnp oracle under ``reference``.
+    ``minmax`` flags value slots that also reduce per-group min/max in the
+    same dispatch."""
     impl = _resolve(impl)
     record_launch("run_wave_fused")
     return _fused.run_wave_fused(probe_stack, ns, pts, rows, cov, codes,
                                  vals, num_docs=num_docs, edges=edges,
                                  total_groups=total_groups, impl=impl,
-                                 profile=profile)
+                                 profile=profile, minmax=minmax)
+
+
+def run_wave_fused_multi(probe_stacks, ns, pts=None, rows=None, cov=None, *,
+                         num_docs: int, edges_multi=(),
+                         impl: Optional[str] = None):
+    """Multi-query fused wave (probe → refine → compact) for Q coalesced
+    queries against ONE resident wave of shards, in ONE dispatch.  The
+    query axis leads every per-query table (``probe_stacks`` [Q, S, K, W],
+    ``cov`` [Q, C, 8, R]); track buffers (``pts``/``rows``) are shared.
+    Counts as a single launch: Q coalesced queries still cost
+    ⌈shards/wave⌉ **total** dispatches — the serve-layer contract."""
+    impl = _resolve(impl)
+    record_launch("run_wave_fused_multi")
+    return _fused.run_wave_fused_multi(probe_stacks, ns, pts, rows, cov,
+                                       num_docs=num_docs,
+                                       edges_multi=edges_multi, impl=impl)
 
 
 def postings_bitmap(ids, t_min, t_max, t0, t1, n_docs: int,

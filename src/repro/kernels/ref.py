@@ -17,8 +17,8 @@ __all__ = ["bitset_and_ref", "bitset_or_ref", "bitset_andnot_ref",
            "popcount_ref", "bitmap_intersect_ref",
            "bitmap_intersect_batched_ref", "compact_ref",
            "compact_batched_ref", "segment_agg_ref", "refine_tracks_ref",
-           "refine_tracks_batched_ref", "flash_attention_ref",
-           "ssm_scan_ref", "decode_attention_ref"]
+           "refine_tracks_batched_ref", "refine_tracks_multi_ref",
+           "flash_attention_ref", "ssm_scan_ref", "decode_attention_ref"]
 
 
 # ----------------------------------------------------------------- bitsets
@@ -222,6 +222,30 @@ def refine_tracks_batched_ref(pts: jnp.ndarray, rows: jnp.ndarray,
     return jax.vmap(
         lambda pp, rr: refine_tracks_ref(pp, rr, cov, num_docs,
                                          with_first_hits))(pts, rows)
+
+
+@functools.partial(jax.jit, static_argnames=("num_docs",
+                                             "with_first_hits"))
+def refine_tracks_multi_ref(pts: jnp.ndarray, rows: jnp.ndarray,
+                            cov: jnp.ndarray, num_docs: int,
+                            with_first_hits: bool = False):
+    """Multi-query wave refine oracle: cov [Q, C, 8, R] carries Q
+    coalesced queries' constraint tables; pts [S, 4, P] / rows [S, P] are
+    the wave's shared track buffers.  vmap over the query axis of the
+    batched single-query oracle → masks [Q, S, num_docs]
+    (+ first-hit uint32 word tables [Q, S, C, num_docs] × 2)."""
+    n_queries, n_constraints = int(cov.shape[0]), int(cov.shape[1])
+    s = pts.shape[0]
+    if n_queries == 0 or s == 0:
+        out = jnp.zeros((n_queries, s, num_docs), jnp.bool_)
+        if with_first_hits:
+            t = jnp.full((n_queries, s, n_constraints, num_docs),
+                         jnp.uint32(_FH_SENT), jnp.uint32)
+            return out, t, t
+        return out
+    return jax.vmap(
+        lambda cc: refine_tracks_batched_ref(pts, rows, cc, num_docs,
+                                             with_first_hits))(cov)
 
 
 # --------------------------------------------------------- flash attention

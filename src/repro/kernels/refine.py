@@ -48,7 +48,7 @@ from jax.experimental import pallas as pl
 
 from ._compat import CompilerParams
 
-__all__ = ["refine_tracks", "refine_tracks_batched",
+__all__ = ["refine_tracks", "refine_tracks_batched", "refine_tracks_multi",
            "DEFAULT_POINT_BLOCK", "DEFAULT_DOC_BLOCK"]
 
 DEFAULT_POINT_BLOCK = 512
@@ -215,6 +215,141 @@ def refine_tracks_batched(pts: jnp.ndarray, rows: jnp.ndarray,
     mask = bits[:, :num_docs] == full
     if with_first_hits:
         return mask, outs[1][:, :, :num_docs], outs[2][:, :, :num_docs]
+    return mask
+
+
+def _refine_kernel_multi(pts_ref, rows_ref, cov_ref, out_ref, *fh_refs,
+                         doc_block: int, n_constraints: int):
+    """Query-axis variant of ``_refine_kernel``: grid (q, s, g, t), the
+    constraint table block is the q-th query's [C, 8, R] slice, track
+    blocks are shared across queries (indexed by s alone)."""
+    g = pl.program_id(2)
+    t = pl.program_id(3)
+    sent = jnp.uint32(_FH_SENT)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+        for fh in fh_refs:
+            fh[...] = jnp.full_like(fh, sent)
+
+    k_hi = pts_ref[0, 0, :][:, None]               # (T, 1) uint32
+    k_lo = pts_ref[0, 1, :][:, None]
+    t_hi = pts_ref[0, 2, :][:, None]
+    t_lo = pts_ref[0, 3, :][:, None]
+    rows = rows_ref[0, :]                          # (T,) int32
+    docs = g * doc_block + jax.lax.broadcasted_iota(
+        jnp.int32, (1, doc_block), 1)              # (1, D)
+    onehot = rows[:, None] == docs                 # (T, D) bool
+    acc = jnp.zeros((1, doc_block), jnp.int32)
+    for c in range(n_constraints):
+        lo_hi = cov_ref[0, c, 0, :][None, :]       # (1, R)
+        lo_lo = cov_ref[0, c, 1, :][None, :]
+        hi_hi = cov_ref[0, c, 2, :][None, :]
+        hi_lo = cov_ref[0, c, 3, :][None, :]
+        w0_hi = cov_ref[0, c, 4, :][None, :]
+        w0_lo = cov_ref[0, c, 5, :][None, :]
+        w1_hi = cov_ref[0, c, 6, :][None, :]
+        w1_lo = cov_ref[0, c, 7, :][None, :]
+        hit = (_ge(k_hi, k_lo, lo_hi, lo_lo)       # key in [lo, hi)
+               & _lt(k_hi, k_lo, hi_hi, hi_lo)
+               & _ge(t_hi, t_lo, w0_hi, w0_lo)     # t in [w0, w1]
+               & _le(t_hi, t_lo, w1_hi, w1_lo))
+        hit_pt = jnp.any(hit, axis=1)              # (T,)
+        hit2d = onehot & hit_pt[:, None]           # (T, D)
+        contrib = jnp.any(hit2d, axis=0)           # (D,)
+        acc = acc | jnp.left_shift(contrib[None, :].astype(jnp.int32), c)
+        if fh_refs:
+            fh_hi_ref, fh_lo_ref = fh_refs
+            blk_hi = jnp.min(jnp.where(hit2d, t_hi, sent), axis=0)  # (D,)
+            at_min = hit2d & (t_hi == blk_hi[None, :])
+            blk_lo = jnp.min(jnp.where(at_min, t_lo, sent), axis=0)
+            acc_hi = fh_hi_ref[0, 0, c, :]
+            acc_lo = fh_lo_ref[0, 0, c, :]
+            take = (blk_hi < acc_hi) \
+                | ((blk_hi == acc_hi) & (blk_lo < acc_lo))
+            fh_hi_ref[0, 0, c, :] = jnp.where(take, blk_hi, acc_hi)
+            fh_lo_ref[0, 0, c, :] = jnp.where(take, blk_lo, acc_lo)
+    out_ref[...] = out_ref[...] | acc
+
+
+@functools.partial(jax.jit, static_argnames=("num_docs", "point_block",
+                                             "doc_block", "interpret",
+                                             "with_first_hits"))
+def refine_tracks_multi(pts: jnp.ndarray, rows: jnp.ndarray,
+                        cov: jnp.ndarray, num_docs: int,
+                        point_block: int = DEFAULT_POINT_BLOCK,
+                        doc_block: int = DEFAULT_DOC_BLOCK,
+                        interpret: bool = False,
+                        with_first_hits: bool = False):
+    """Multi-query wave refine: Q coalesced queries' constraint tables
+    against ONE wave of shards' track buffers in a single launch.
+
+    pts [S, 4, P] uint32 and rows [S, P] int32 are shared across queries
+    (the wave's resident track buffers, uploaded once); cov [Q, C, 8, R]
+    uint32 carries each query's packed cover-range × window table with a
+    leading query axis (constraint / range counts padded across queries by
+    the caller: never-hit slots on the range axis, always-hit constraints
+    on the C axis).  Returns hit masks [Q, S, num_docs] bool, plus uint32
+    first-hit word tables [Q, S, C, num_docs] × 2 under
+    ``with_first_hits``.
+    """
+    s, _, p = pts.shape
+    n_queries = int(cov.shape[0])
+    n_constraints = int(cov.shape[1])
+    full = jnp.int32((1 << n_constraints) - 1)
+    sent = jnp.uint32(_FH_SENT)
+
+    def empty_table():
+        return jnp.full((n_queries, s, n_constraints, num_docs), sent,
+                        jnp.uint32)
+
+    if n_queries == 0 or s == 0 or num_docs == 0:
+        out = jnp.zeros((n_queries, s, num_docs), jnp.bool_)
+        return (out, empty_table(), empty_table()) if with_first_hits \
+            else out
+    if p == 0 or n_constraints == 0:
+        out = jnp.full((n_queries, s, num_docs), n_constraints == 0)
+        return (out, empty_table(), empty_table()) if with_first_hits \
+            else out
+    cov = jnp.stack([_pad_cov(cov[q]) for q in range(n_queries)])
+    r_pad = cov.shape[3]
+    padded_p = pl.cdiv(p, point_block) * point_block
+    padded_d = pl.cdiv(num_docs, doc_block) * doc_block
+    pts_p = jnp.zeros((s, 4, padded_p), jnp.uint32).at[:, :, :p].set(pts)
+    rows_p = jnp.full((s, padded_p), -1, jnp.int32).at[:, :p].set(rows)
+    out_shape = [jax.ShapeDtypeStruct((n_queries, s, padded_d), jnp.int32)]
+    out_specs = [pl.BlockSpec((1, 1, doc_block),
+                              lambda q, i, g, t: (q, i, g))]
+    if with_first_hits:
+        fh_shape = jax.ShapeDtypeStruct(
+            (n_queries, s, n_constraints, padded_d), jnp.uint32)
+        fh_spec = pl.BlockSpec((1, 1, n_constraints, doc_block),
+                               lambda q, i, g, t: (q, i, 0, g))
+        out_shape += [fh_shape, fh_shape]
+        out_specs += [fh_spec, fh_spec]
+    outs = pl.pallas_call(
+        functools.partial(_refine_kernel_multi, doc_block=doc_block,
+                          n_constraints=n_constraints),
+        grid=(n_queries, s, padded_d // doc_block, padded_p // point_block),
+        in_specs=[
+            pl.BlockSpec((1, 4, point_block),
+                         lambda q, i, g, t: (i, 0, t)),
+            pl.BlockSpec((1, point_block), lambda q, i, g, t: (i, t)),
+            pl.BlockSpec((1, n_constraints, 8, r_pad),
+                         lambda q, i, g, t: (q, 0, 0, 0)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(pts_p, rows_p, cov)
+    bits = outs[0]
+    mask = bits[:, :, :num_docs] == full
+    if with_first_hits:
+        return mask, outs[1][..., :num_docs], outs[2][..., :num_docs]
     return mask
 
 

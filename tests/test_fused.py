@@ -115,6 +115,10 @@ AGG_FLOW = (fdb("FusedAgg").find(BETWEEN(P.hour, 8, 17))
             .aggregate(group(P.road).count("n").avg(m=P.speed)
                        .std_dev(s=P.speed)))
 
+MINMAX_FLOW = (fdb("FusedAgg").find(BETWEEN(P.hour, 8, 17))
+               .aggregate(group(P.road).count("n").min(mn=P.speed)
+                          .max(mx=P.speed).avg(m=P.speed)))
+
 
 def _tess(rng):
     return Tesseract(_region(rng), 0.0, 2 * 86400.0).also(
@@ -133,9 +137,9 @@ def assert_identical(a, b):
 
 # ------------------------------------------------ direct op parity (oracle)
 
-def _agg_call_args(catalog, db):
+def _agg_call_args(catalog, db, flow=AGG_FLOW):
     """(shards, probes, fused_agg) for a direct run_wave_fused call."""
-    plan = plan_flow(AGG_FLOW, catalog)
+    plan = plan_flow(flow, catalog)
     shards = [db.shards[s] for s in plan.shard_ids]
     probes = [[p.run(sh) for p in plan.probes] for sh in shards]
     agg = fused_agg_plan(plan, shards)
@@ -173,14 +177,54 @@ def _assert_fused_equal(want, got, exact=True):
     for (wu, wslots), (gu, gslots) in zip(wseg, gseg):
         assert np.array_equal(gu, wu)
         assert len(gslots) == len(wslots)
-        for (wc, ws, w2), (gc, gs, g2) in zip(wslots, gslots):
-            assert np.array_equal(gc, wc)      # counts always exact
-            if exact:
-                assert np.array_equal(gs, ws)
-                assert np.array_equal(g2, w2)
-            else:
-                assert np.allclose(gs, ws, rtol=1e-5)
-                assert np.allclose(g2, w2, rtol=1e-4)
+        # slots are (count, sum, sumsq[, min, max]) — min/max planes only
+        # on slots a min/max agg reads
+        for wslot, gslot in zip(wslots, gslots):
+            assert len(gslot) == len(wslot)
+            assert np.array_equal(gslot[0], wslot[0])  # counts always exact
+            for k, (wa, ga) in enumerate(zip(wslot[1:], gslot[1:]), 1):
+                if exact:
+                    assert np.array_equal(ga, wa), k
+                else:
+                    assert np.allclose(ga, wa, rtol=1e-4), k
+
+
+@pytest.mark.parametrize("impl", ["reference", "interpret"])
+def test_run_wave_fused_minmax_parity(dense_catalog, dense_db, impl):
+    """min/max lowered into the fused agg tail: the extra segment min/max
+    planes match the host oracle — bit-exact on the reference impl (f64
+    segment reductions are order-independent), allclose on interpret
+    (the monotone f64→f32 value cast commutes with min/max)."""
+    shards, probes, agg = _agg_call_args(dense_catalog, dense_db,
+                                         MINMAX_FLOW)
+    assert agg.minmax == (True,)               # speed slot carries min/max
+    npb = get_backend("numpy")
+    jxb = JaxBackend(impl=impl)
+    jxb.prime_fdb(dense_db)
+    want = npb.run_wave_fused(shards, probes, None, agg)
+    got = jxb.run_wave_fused(shards, probes, None, agg)
+    assert got is not None
+    # min/max planes actually present: 5-wide slots on the flagged slot
+    assert all(len(slot) == 5 for _u, slots in want[2] if slots
+               for slot in slots)
+    _assert_fused_equal(want, got, exact=impl == "reference")
+
+
+def test_fused_launch_contract_minmax(dense_catalog, dense_db,
+                                      monkeypatch):
+    monkeypatch.setenv(FUSED_ENV, "1")
+    """A min/max group-by no longer declines fusion: whole query in
+    ⌈shards/wave⌉ fused dispatches, result identical to the numpy host
+    path."""
+    a = AdHocEngine(dense_catalog, num_servers=2, backend="numpy",
+                    wave=3).collect(MINMAX_FLOW)
+    eng = AdHocEngine(dense_catalog, num_servers=2, backend="jax", wave=3)
+    eng.collect(MINMAX_FLOW)                   # warm
+    ops.reset_launch_counts()
+    b = eng.collect(MINMAX_FLOW)
+    waves = math.ceil(dense_db.num_shards / 3)
+    assert dict(ops.launch_counts()) == {"run_wave_fused": waves}
+    assert_identical(a.batch, b.batch)
 
 
 @pytest.mark.tesseract
@@ -392,19 +436,19 @@ def test_postings_bitmap_lookup_parity(walks_db):
 
 # ---------------------------------------------------- fallback-path parity
 
-@pytest.mark.parametrize("case", ["residual", "minmax", "sortlimit"])
+@pytest.mark.parametrize("case", ["residual", "approx", "sortlimit"])
 def test_fallback_paths_match_numpy(dense_catalog, case, monkeypatch):
     """Queries the fused pipeline must decline (residual filter, agg
-    kinds outside count/sum/avg/std_dev, sort+limit tail) still match the
-    numpy oracle with fusion enabled."""
+    kinds outside count/sum/avg/std_dev/min/max, sort+limit tail) still
+    match the numpy oracle with fusion enabled."""
     monkeypatch.setenv(FUSED_ENV, "1")
     assert fused_enabled()
     base = fdb("FusedAgg").find(BETWEEN(P.hour, 8, 17))
     if case == "residual":
         q = (base.filter(P.speed > 40.0)
              .aggregate(group(P.road).count("n").avg(m=P.speed)))
-    elif case == "minmax":
-        q = base.aggregate(group(P.road).max(mx=P.speed).min(mn=P.speed))
+    elif case == "approx":
+        q = base.aggregate(group(P.road).approx_distinct(d=P.hour))
     else:
         q = base.sort_desc(P.speed).limit(20)
     a = AdHocEngine(dense_catalog, num_servers=2, backend="numpy",
