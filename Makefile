@@ -5,8 +5,8 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: help test test-fast test-tesseract bench bench-backends \
-        bench-tesseract bench-serve ci ci-kernels ci-bench \
-        bench-regression
+        bench-tesseract bench-serve bench-streaming ci ci-kernels \
+        ci-bench bench-regression check-links
 
 help:                 ## list targets (CI runs: ci, ci-kernels, ci-bench)
 	@grep -E '^[a-z][a-zA-Z_-]*:.*##' $(MAKEFILE_LIST) | \
@@ -27,11 +27,14 @@ ci:                   ## CI leg: tier-1 under $REPRO_EXEC_BACKEND (numpy|jax)
 ci-kernels:           ## CI extra: interpret-vs-reference kernel-body sweeps
 	$(PY) -m pytest -x -q tests/test_kernels.py tests/test_refine.py
 
-ci-bench:             ## CI smoke: tiny backends+tesseract+serve suites, exits non-zero on parity fail
-	$(PY) -m benchmarks.run --only backends,tesseract,serve --json --scale 0.05
+ci-bench:             ## CI smoke: tiny backends+tesseract+serve+streaming suites, exits non-zero on parity fail
+	$(PY) -m benchmarks.run --only backends,tesseract,serve,streaming --json --scale 0.05
 
-bench-regression:     ## blocking gate: fresh BENCH_{backends,tesseract,serve}.json vs committed baselines (>1.5x/query fails)
-	$(PY) benchmarks/check_regression.py --suite backends,tesseract,serve
+bench-regression:     ## blocking gate: fresh BENCH_{backends,tesseract,serve,streaming}.json vs committed baselines (>1.5x/query fails)
+	$(PY) benchmarks/check_regression.py --suite backends,tesseract,serve,streaming
+
+check-links:          ## docs hygiene: every relative link in docs/, ROADMAP.md, README-tier files resolves
+	$(PY) tools/check_links.py
 
 bench:                ## full benchmark harness
 	$(PY) -m benchmarks.run
@@ -44,3 +47,6 @@ bench-tesseract:      ## Q6–Q9 trip queries (Q8/Q9 ordered): pruning + backend
 
 bench-serve:          ## concurrent serving: coalesced QPS/latency + cache + launch evidence
 	$(PY) -m benchmarks.run --only serve --json
+
+bench-streaming:      ## live ingestion: ingest→queryable latency, pruning + invalidation evidence
+	$(PY) -m benchmarks.run --only streaming --json

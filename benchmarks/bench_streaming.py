@@ -1,0 +1,230 @@
+"""Streaming-ingestion benchmark: ingest → index → prime → queryable.
+
+Live ingestion is only worth its complexity if new data becomes
+queryable fast and *without* reprocessing old data.  The report shows
+
+  * ingest + incremental index throughput: time-sorted trips appended
+    through the memtable → delta-shard flushes, each flush building only
+    its own ``spacetime`` postings,
+  * time-partition pruning evidence: a Q6 morning-commute window plans
+    a strict subset of the delta shards and the fused launch count
+    shrinks to ⌈kept/wave⌉ (< ⌈total/wave⌉),
+  * byte parity of the live view: Q6 ids on the streaming catalog source
+    match the numpy oracle on the same pinned snapshot,
+  * **ingest-to-queryable latency** — append one crafted probe trip,
+    flush, re-prime (only the new delta buffers upload), and run the
+    first Tesseract query that must contain it; per-stage breakdown,
+  * compaction equivalence: merging the deltas into one sealed shard
+    leaves the Q6 answer byte-identical,
+  * cache invalidation: a live ``QueryServer`` serves Q6 from its
+    ResultCache, an append fires the bound invalidation hook, and the
+    next submit recomputes — the probe id appears, a stale hit would
+    miss it.
+"""
+from __future__ import annotations
+
+import math
+import time
+
+import numpy as np
+
+from repro.core import fdb
+from repro.core.planner import plan_flow
+from repro.data.synthetic import CITIES, generate_world
+from repro.exec import AdHocEngine, Catalog
+from repro.exec.batched import fused_enabled
+from repro.fdb.streaming import StreamingFDb
+from repro.kernels import ops
+from repro.serve import QueryServer, ResultCache
+from repro.tess import Tesseract
+
+from .queries import TRIP_DAY, TRIP_QUERIES, tesseract_for
+
+__all__ = ["run"]
+
+
+def _probe_trip(trip_id: int, minute: int = 0) -> dict:
+    """A trip Q6 must select: through SF-center 7:00–7:10 then
+    Berkeley-center 7:15–7:25 on TRIP_DAY (windows 6–12 / 6–14)."""
+    def center(city):
+        lat0, lng0, dlat, dlng = CITIES[city]
+        return lat0 + dlat / 2.0, lng0 + dlng / 2.0
+    t0 = TRIP_DAY * 86400.0 + 7 * 3600.0 + minute * 60.0
+    lats, lngs = [], []
+    for city in ("SF", "SF", "SF", "Berkeley", "Berkeley", "Berkeley"):
+        lat, lng = center(city)
+        lats.append(lat)
+        lngs.append(lng)
+    ts = [t0 + k * 300.0 for k in range(6)]
+    return {"id": trip_id, "vehicle": 0, "day": TRIP_DAY, "start_hour": 7,
+            "track": {"lat": lats, "lng": lngs, "t": ts},
+            "duration_s": ts[-1] - ts[0]}
+
+
+def _q6_flow():
+    return fdb("Trips").tesseract(tesseract_for(TRIP_QUERIES["Q6"]))
+
+
+def _ids(res) -> list:
+    return sorted(int(v) for v in res.batch["id"].values)
+
+
+def run(scale: float = 0.5, print_fn=print, raise_on_mismatch: bool = True):
+    rows: list = []
+    # same floor as bench_tesseract/bench_serve: below ~0.2 the synthetic
+    # week holds so few trips that Q6 selects nothing and parity is vacuous
+    scale = max(scale, 0.2)
+    world = generate_world(scale=scale)
+    trips = sorted(world["trips"],
+                   key=lambda r: (r["track"]["t"][0]
+                                  if r["track"]["t"] else 0.0))
+    next_id = max(r["id"] for r in trips) + 1
+
+    # time-sorted ingestion into ~12 delta shards ⇒ each delta covers a
+    # disjoint time band (auto-compaction off so the bands survive)
+    flush = max(64, math.ceil(len(trips) / 12))
+    live = StreamingFDb("Trips", world["trips_schema"],
+                        flush_threshold=flush, compact_threshold=0)
+    t0 = time.perf_counter()
+    live.extend(trips)
+    live.flush()
+    ingest_s = time.perf_counter() - t0
+    st = live.stats()
+    rows.append({
+        "name": "streaming_ingest_index",
+        "us_per_call": round(ingest_s / max(len(trips), 1) * 1e6, 2),
+        "parity": 1,
+        "derived": (f"docs={st['docs']} delta_shards={st['delta_shards']} "
+                    f"ingest_ms={ingest_s * 1e3:.1f} "
+                    f"flush_threshold={flush}")})
+    print_fn(f"  ingest+index: {len(trips)} trips in {ingest_s * 1e3:.1f}ms "
+             f"→ {st['delta_shards']} delta shards")
+
+    cat = Catalog(server_slots=64)
+    cat.register(live)
+    wave = 4
+    np_eng = AdHocEngine(cat, backend="numpy", wave=wave)
+    jx_eng = AdHocEngine(cat, backend="jax", wave=wave)
+    flow = _q6_flow()
+
+    # ---- parity: live catalog view, numpy oracle vs jax batched path
+    want = _ids(np_eng.collect(flow))
+    got = _ids(jx_eng.collect(flow))
+    parity = want == got and len(want) > 0
+    rows.append({"name": "streaming_parity", "us_per_call": "",
+                 "parity": 1 if parity else 0,
+                 "derived": f"q6_rows={len(want)} "
+                            f"{'OK' if parity else 'MISMATCH'}"})
+    print_fn(f"  live-view parity: q6_rows={len(want)} "
+             f"{'OK' if parity else 'MISMATCH'}")
+
+    # ---- pruning: Q6's day-2 window plans a subset of the time bands
+    plan = plan_flow(flow, cat)
+    total = cat.get("Trips").num_shards
+    kept = len(plan.shard_ids)
+    pruned_ok = 0 < kept < total
+    ops.reset_launch_counts()
+    jx_eng.collect(flow)
+    lc = dict(ops.launch_counts())
+    if fused_enabled():
+        launches_ok = lc.get("run_wave_fused") == math.ceil(kept / wave)
+    else:
+        launches_ok = lc.get("refine_tracks_batched") == \
+            math.ceil(kept / wave)
+    prune_ok = pruned_ok and launches_ok
+    parity &= prune_ok
+    rows.append({"name": "streaming_prune_launches", "us_per_call": "",
+                 "parity": 1 if prune_ok else 0,
+                 "derived": (f"kept={kept}/{total} "
+                             f"waves={math.ceil(kept / wave)} "
+                             f"full_waves={math.ceil(total / wave)} "
+                             f"launches={lc} "
+                             f"fused={1 if fused_enabled() else 0}")})
+    print_fn(f"  pruning: {rows[-1]['derived']}")
+
+    # ---- ingest-to-queryable: append probe → flush → prime → first
+    #      correct answer (the PR's headline row)
+    probe_id = next_id
+    stages = {}
+    t = time.perf_counter()
+    live.append(_probe_trip(probe_id))
+    stages["append_ms"] = (time.perf_counter() - t) * 1e3
+    t = time.perf_counter()
+    live.flush()                        # freeze + index the delta shard
+    stages["flush_index_ms"] = (time.perf_counter() - t) * 1e3
+    t = time.perf_counter()
+    snap = live.snapshot()
+    new_buffers = jx_eng.backend.prime_fdb(snap)
+    stages["prime_ms"] = (time.perf_counter() - t) * 1e3
+    t = time.perf_counter()
+    res = jx_eng.collect(flow)
+    stages["query_ms"] = (time.perf_counter() - t) * 1e3
+    total_ms = sum(stages.values())
+    found = probe_id in set(_ids(res))
+    oracle_found = probe_id in set(_ids(np_eng.collect(flow)))
+    i2q_ok = found and oracle_found
+    parity &= i2q_ok
+    rows.append({
+        "name": "streaming_ingest_to_queryable",
+        "us_per_call": round(total_ms * 1e3, 1),
+        "parity": 1 if i2q_ok else 0,
+        "stages": {k: round(v, 2) for k, v in stages.items()},
+        "derived": (f"total_ms={total_ms:.1f} "
+                    + " ".join(f"{k}={v:.1f}" for k, v in stages.items())
+                    + f" new_buffers={new_buffers} "
+                    f"probe={'HIT' if i2q_ok else 'MISS'}")})
+    print_fn(f"  ingest→queryable: {rows[-1]['derived']}")
+
+    # ---- compaction equivalence: merged sealed view answers identically
+    before = _ids(np_eng.collect(flow))
+    t = time.perf_counter()
+    compacted = live.compact()
+    compact_ms = (time.perf_counter() - t) * 1e3
+    after_np = _ids(np_eng.collect(flow))
+    after_jx = _ids(jx_eng.collect(flow))
+    comp_ok = compacted and before == after_np == after_jx
+    parity &= comp_ok
+    st = live.stats()
+    rows.append({"name": "streaming_compaction", "us_per_call": "",
+                 "parity": 1 if comp_ok else 0,
+                 "derived": (f"compact_ms={compact_ms:.1f} "
+                             f"sealed={st['sealed_shards']} "
+                             f"delta={st['delta_shards']} "
+                             f"{'OK' if comp_ok else 'MISMATCH'}")})
+    print_fn(f"  compaction: {rows[-1]['derived']}")
+
+    # ---- cache invalidation on a live server: append between submits
+    cache = ResultCache()
+    srv = QueryServer(catalog=cat, backend="jax", cache=cache,
+                      start=False, max_pending=64)
+    srv.engine.wave = wave
+    try:
+        f1 = srv.submit(_q6_flow()); srv.run_pending()
+        r1 = f1.result(300)
+        f2 = srv.submit(_q6_flow()); srv.run_pending()
+        hit = f2.result(300) is r1
+        probe2 = next_id + 1
+        live.append(_probe_trip(probe2, minute=30))
+        live.flush()
+        f3 = srv.submit(_q6_flow()); srv.run_pending()
+        r3 = f3.result(300)
+        inval_ok = (hit and r3 is not r1
+                    and probe2 in set(_ids(r3))
+                    and cache.stats()["invalidations"] >= 1)
+    finally:
+        srv.close()
+    parity &= inval_ok
+    rows.append({"name": "streaming_cache_invalidation", "us_per_call": "",
+                 "parity": 1 if inval_ok else 0,
+                 "derived": (f"warm_hit={1 if hit else 0} "
+                             f"invalidations={cache.stats()['invalidations']} "
+                             f"{'OK' if inval_ok else 'STALE'}")})
+    print_fn(f"  cache invalidation: {rows[-1]['derived']}")
+
+    rows.append({"name": "streaming_parity_all", "us_per_call": "",
+                 "parity": 1 if parity else 0,
+                 "derived": "OK" if parity else "MISMATCH"})
+    print_fn(f"  streaming parity + gates: {'OK' if parity else 'MISMATCH'}")
+    if not parity and raise_on_mismatch:
+        raise AssertionError("streaming ingest parity/gate violated")
+    return rows

@@ -298,11 +298,20 @@ class Plan:
     mixer_ops: List[Op]              # final combine stage
     out_schema: Schema
     stats: Dict[str, Any] = dc_field(default_factory=dict)
+    #: the FDb snapshot this plan was made against, pinned at plan time.
+    #: Engines and the serve tier execute against *this* object — never a
+    #: re-resolved ``catalog.get`` — so a streaming source appending (or
+    #: compacting) between planning and execution cannot tear a query
+    #: across generations: every query sees exactly one snapshot.
+    db: Optional[FDb] = None
 
     def describe(self) -> str:
         lines = [f"plan for {self.source} "
                  f"[{len(self.shard_ids)} shards, sample={self.sample_fraction}]",
                  f"  read columns: {self.source_paths}"]
+        if self.stats.get("pruned_shards"):
+            lines.append(f"  time-partition pruning: "
+                         f"{self.stats['pruned_shards']} shards skipped")
         for p in self.probes:
             lines.append(f"  index probe: {p.kind}({p.path})")
         for r in self.refines:
@@ -347,6 +356,37 @@ def plan_flow(flow: Flow, catalog) -> Plan:
         ops = ops[1:]
     elif any(isinstance(o, FindOp) for o in ops):
         raise ValueError("find() must be the first operator on a source")
+
+    # -- time-partitioned shard pruning (the BigQuery partitioned-table
+    #    discipline): a space-time constraint window can only match docs
+    #    in shards whose track time span overlaps it.  Constraints AND
+    #    per doc, so a shard whose span misses *any* one window holds no
+    #    possible match and is dropped from the enumeration — waves
+    #    shrink, which the launch counter sees.  Shards with an unknown
+    #    span (no spacetime index on the path, empty shard, every track
+    #    empty) are conservatively kept.  Round-robin-built FDbs span the
+    #    whole time range per shard and are never pruned; time-ordered
+    #    streaming ingestion makes delta shards time-partitioned, which
+    #    is where pruning bites.
+    pruned_shards = 0
+    if refines and shard_ids:
+        kept: List[int] = []
+        for sid in shard_ids:
+            shard = db.shards[sid]
+            drop = False
+            for rf in refines:
+                idx = shard.index(rf.path, "spacetime")
+                span = idx.span() if idx is not None else None
+                if span is None:
+                    continue
+                lo, hi = span
+                if any(t1 < lo or t0 > hi for _, t0, t1 in rf.constraints):
+                    drop = True
+                    break
+            if not drop:
+                kept.append(sid)
+        pruned_shards = len(shard_ids) - len(kept)
+        shard_ids = kept
 
     # -- server/mixer split: everything record-parallel runs on servers; the
     #    first global operator (aggregate/sort/limit/distinct without keys)
@@ -408,5 +448,9 @@ def plan_flow(flow: Flow, catalog) -> Plan:
                           and schema.field(x).virtual is None)
 
     out_schema = flow.schema_after(catalog)
+    stats: Dict[str, Any] = {}
+    if pruned_shards:
+        stats["pruned_shards"] = pruned_shards
     return Plan(flow.source, schema, shard_ids, fraction, probes, refines,
-                residual, source_paths, server_ops, mixer_ops, out_schema)
+                residual, source_paths, server_ops, mixer_ops, out_schema,
+                stats=stats, db=db)

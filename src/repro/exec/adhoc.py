@@ -112,9 +112,13 @@ class AdHocEngine:
                 num_servers: Optional[int] = None) -> QueryResult:
         t0 = time.perf_counter()
         plan = plan_flow(flow, self.catalog)
-        db = self.catalog.get(plan.source)
+        # execute against the snapshot the planner pinned: for streaming
+        # sources a concurrent append swaps the catalog's current view,
+        # and a re-resolve here could tear the query across generations
+        db = plan.db if plan.db is not None else self.catalog.get(plan.source)
         # device-resident columns: one-time put per FDb (no-op on host
-        # backends), so filter→compact→gather reuses resident buffers
+        # backends; for a streaming snapshot only new delta buffers
+        # upload — shared sealed shards are already resident)
         self.backend.prime_fdb(db)
 
         # Broadcast side of hash joins: run the right flow first (recursive

@@ -602,6 +602,17 @@ class JaxBackend(ExecBackend):
     def prime_fdb(self, db) -> int:
         """Put ``db``'s stable buffers on device once (idempotent per FDb):
         column values/row_splits, valid-doc bitmaps, spacetime postings.
+        Returns the number of buffers *newly* uploaded by this call.
+
+        Priming is **incremental across streaming generations**: the
+        device cache keys buffers by host-array identity, and successive
+        ``StreamingFDb`` snapshots share their sealed/delta ``Shard``
+        objects — so priming generation N+1 uploads only the new delta
+        (and memtable-tail) buffers; everything already resident is a
+        dict hit, not a host→device copy.  Refcounts still track every
+        shared buffer per FDb, so eviction waits for the *last* snapshot
+        using a buffer to be collected.
+
         A finalizer releases the buffers when the FDb is collected; shared
         buffers (snapshots sharing Shards) survive until their last FDb.
         Thread-safe: concurrent primes/releases of the same FDb (the query

@@ -71,28 +71,59 @@ class ResourceManager:
 
 
 class Catalog:
-    """Registered FDbs + schemas + the shared server pool."""
+    """Registered FDbs + schemas + the shared server pool.
+
+    Sources come in two flavours: **static** (a built :class:`FDb`) and
+    **live** (a :class:`~repro.fdb.streaming.StreamingFDb` — anything
+    with a ``snapshot()`` method).  ``get`` on a live source returns its
+    current generation snapshot, so every query plans against a fresh,
+    immutable view; the planner pins that snapshot into ``Plan.db`` and
+    engines execute against the pin, never a re-resolve.  :meth:`live`
+    exposes the mutable handle itself (the serve tier uses it to wire
+    cache-invalidation listeners)."""
 
     def __init__(self, server_slots: int = 64):
         self._dbs: Dict[str, FDb] = {}
+        self._live: Dict[str, object] = {}     # name → StreamingFDb
         self.structures = StructureManager()
         self.resources = ResourceManager(server_slots)
 
-    def register(self, db: FDb) -> None:
-        self._dbs[db.name] = db
+    def register(self, db) -> None:
+        """Register a static ``FDb`` or a live streaming source (any
+        object with ``name``/``schema``/``snapshot()``)."""
+        if isinstance(db, FDb):
+            self._dbs[db.name] = db
+            self._live.pop(db.name, None)
+        elif hasattr(db, "snapshot"):
+            self._live[db.name] = db
+            self._dbs.pop(db.name, None)
+        else:
+            raise TypeError(f"cannot register {type(db).__name__}: "
+                            f"expected FDb or a snapshot()-able source")
         self.structures.register(db.schema)
 
     def get(self, name: str) -> FDb:
+        live = self._live.get(name)
+        if live is not None:
+            return live.snapshot()
         if name not in self._dbs:
             raise KeyError(f"FDb {name!r} not registered; known: "
-                           f"{sorted(self._dbs)}")
+                           f"{sorted(set(self._dbs) | set(self._live))}")
         return self._dbs[name]
 
+    def live(self, name: str):
+        """The mutable streaming handle behind ``name``, or ``None`` for
+        static (or unknown) sources."""
+        return self._live.get(name)
+
     def schema_of(self, name: str) -> Schema:
+        live = self._live.get(name)
+        if live is not None:
+            return live.schema
         return self.get(name).schema
 
     def names(self) -> List[str]:
-        return sorted(self._dbs)
+        return sorted(set(self._dbs) | set(self._live))
 
 
 _DEFAULT: Optional[Catalog] = None

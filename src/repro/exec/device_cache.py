@@ -13,6 +13,14 @@ array (so its ``id`` cannot be recycled), which is why only *priming*
 inserts: transient arrays (probe bitmaps, residual masks, derived value
 columns) pass through untouched.
 
+Identity keying is also what makes priming **incremental for streaming
+ingestion**: successive :meth:`~repro.fdb.streaming.StreamingFDb.snapshot`
+generations share their sealed/delta ``Shard`` objects, so re-priming a
+new generation re-uploads nothing that is already resident — only the
+fresh delta buffers cost a host→device copy (``put`` on a known id is a
+dict hit).  ``stats()["buffers"]`` therefore grows by exactly the delta
+between generations, which the streaming tests assert.
+
 Device puts run under ``jax.experimental.enable_x64`` so int64/float64/
 uint64 buffers keep their width — the parity contract is byte-identical
 results against the numpy oracle, and a silent f64→f32 truncation at put

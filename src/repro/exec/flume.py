@@ -73,7 +73,8 @@ class FlumeEngine:
                 job_id: Optional[str] = None) -> QueryResult:
         t0 = time.perf_counter()
         plan = plan_flow(flow, self.catalog)
-        db = self.catalog.get(plan.source)
+        # pinned snapshot (see AdHocEngine.collect): never re-resolve
+        db = plan.db if plan.db is not None else self.catalog.get(plan.source)
         self.backend.prime_fdb(db)          # device-resident columns
         job_id = job_id or self._job_id(flow)
         job_dir = os.path.join(self.ckpt_dir, job_id)

@@ -1,16 +1,54 @@
-"""Read-write (streaming) FDb (paper §4.1.1).
+"""Read-write (streaming) FDb (paper §4.1.1) with LSM-style delta shards.
 
 The paper implements read-write FDbs on Bigtable "for streaming FDbs,
 including for query profiling and data ingestion logs".  We reproduce the
-abstraction on the same key-value contract: an append memtable that flushes
-into immutable indexed shards; readers see memtable + flushed shards merged.
-WarpFlow itself uses this for its query-profiling log (exec.adhoc writes one
-record per query stage).
+abstraction on the same key-value contract, extended to first-class live
+ingestion (ROADMAP Open item 3; CheetahGIS is the reference architecture):
+
+  * **memtable** — raw appended records.  ``append``/``extend`` buffer
+    here; crossing ``flush_threshold`` triggers a flush.
+  * **delta shards** — each flush freezes one memtable chunk into an
+    immutable :class:`~repro.fdb.fdb.Shard` and builds that shard's
+    indexes — tag/range/area *and* ``spacetime`` postings — right there,
+    **incrementally**: ingesting new data never re-indexes sealed data.
+  * **sealed shards** — an LSM-style compaction policy: once
+    ``compact_threshold`` small delta shards accumulate, they merge
+    (``ColumnBatch.concat`` + one index build) into a single larger
+    sealed shard.  Compaction preserves row order (sealed = deltas in
+    flush order), so reader views stay byte-stable across a compaction.
+    ``compact_threshold=0`` disables the policy (useful when delta
+    shards should stay time-partitioned, e.g. for shard-pruning demos);
+    :meth:`compact` forces a merge on demand.
+
+**Concurrency model.**  All mutation and snapshot state is guarded by one
+re-entrant lock; writers (any number of threads) serialize on it, so no
+append is lost and a flush boundary never tears a record.  Readers never
+hold the lock across query execution: :meth:`snapshot` materializes an
+immutable :class:`~repro.fdb.fdb.FDb` view (sealed + delta shards + the
+memtable as a tail shard) and hands it out.  Snapshots are cached per
+**generation** — a counter bumped by every mutation — so repeated reads
+of an unchanged FDb return the *same object*: downstream identity-keyed
+machinery (the jax backend's device-buffer priming, the serve tier's
+``ResultCache`` FDb tokens) sees one stable identity per generation, and
+a query plan that pins its snapshot (``Plan.db``) is immune to appends
+landing mid-query — it reads either the pre-append or the post-append
+view, never a torn mix.
+
+**Invalidation hook.**  :meth:`add_listener` registers a callback invoked
+after every mutation with the now-stale snapshot (the generation readers
+may still hold keys against); :meth:`bind_cache` wires that straight into
+:meth:`repro.serve.result_cache.ResultCache.invalidate`, so a live
+``QueryServer`` can never serve a pre-append cached result once the hook
+fires.  Listeners run outside the lock and their errors are swallowed —
+ingestion never fails because an observer did.
+
+WarpFlow itself uses this class for its query-profiling log (exec.adhoc
+writes one record per query stage).
 """
 from __future__ import annotations
 
 import threading
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 from .columnar import ColumnBatch
 from .fdb import FDb, Shard, _build_shard_indexes
@@ -21,51 +59,162 @@ __all__ = ["StreamingFDb"]
 
 class StreamingFDb:
     def __init__(self, name: str, schema: Schema,
-                 flush_threshold: int = 4096):
+                 flush_threshold: int = 4096,
+                 compact_threshold: int = 8):
         self.name = name
         self.schema = schema
         self.flush_threshold = int(flush_threshold)
+        #: delta-shard count that triggers an automatic merge into one
+        #: sealed shard at flush time; 0 disables auto-compaction
+        self.compact_threshold = int(compact_threshold)
         self._memtable: List[dict] = []
-        self._shards: List[Shard] = []
-        self._lock = threading.Lock()
+        self._sealed: List[Shard] = []       # large compacted shards
+        self._delta: List[Shard] = []        # small recent flushed shards
+        self._lock = threading.RLock()
+        self._generation = 0
+        self._snap: Optional[tuple] = None   # (generation, FDb) cache
+        self._listeners: List[Callable[[FDb], None]] = []
+        self._compactions = 0
+
+    # ----------------------------------------------------------- internals
+    @property
+    def _shards(self) -> List[Shard]:
+        """Flushed shards, sealed-first (back-compat view for tests)."""
+        with self._lock:
+            return self._sealed + self._delta
+
+    def _stale_snap_locked(self) -> Optional[FDb]:
+        """The snapshot a mutation is about to invalidate, if one is
+        current (readers may hold cache keys against it)."""
+        if self._snap is not None and self._snap[0] == self._generation:
+            return self._snap[1]
+        return None
+
+    def _notify(self, stale: Optional[FDb]) -> None:
+        """Fire mutation listeners (outside the lock) with the now-stale
+        snapshot.  Observer failures never fail ingestion."""
+        if stale is None:
+            return
+        for fn in list(self._listeners):
+            try:
+                fn(stale)
+            except Exception:
+                pass
 
     # ------------------------------------------------------------- writes
     def append(self, record: dict) -> None:
         with self._lock:
+            stale = self._stale_snap_locked()
             self._memtable.append(record)
             if len(self._memtable) >= self.flush_threshold:
                 self._flush_locked()
+            self._generation += 1
+        self._notify(stale)
 
     def extend(self, records: Sequence[dict]) -> None:
         with self._lock:
+            stale = self._stale_snap_locked()
             self._memtable.extend(records)
             while len(self._memtable) >= self.flush_threshold:
                 self._flush_locked()
+            self._generation += 1
+        self._notify(stale)
 
     def flush(self) -> None:
+        """Freeze the memtable into a delta shard (incremental index
+        build included); no-op on an empty memtable."""
+        stale = None
         with self._lock:
             if self._memtable:
+                stale = self._stale_snap_locked()
                 self._flush_locked()
+                self._generation += 1
+        self._notify(stale)
 
     def _flush_locked(self) -> None:
         chunk = self._memtable[:self.flush_threshold]
         self._memtable = self._memtable[self.flush_threshold:]
         batch = ColumnBatch.from_records(self.schema, chunk)
-        self._shards.append(Shard(batch,
+        # incremental indexing: only this delta's postings are built —
+        # sealed/older delta shards are untouched
+        self._delta.append(Shard(batch,
+                                 _build_shard_indexes(self.schema, batch)))
+        if self.compact_threshold and \
+                len(self._delta) >= self.compact_threshold:
+            self._compact_locked()
+
+    # --------------------------------------------------------- compaction
+    def compact(self) -> bool:
+        """Merge all delta shards into one sealed shard now (the LSM
+        merge step, run inline).  Returns True when a merge happened."""
+        with self._lock:
+            if len(self._delta) < 2:
+                return False
+            stale = self._stale_snap_locked()
+            self._compact_locked()
+            self._generation += 1
+        self._notify(stale)
+        return True
+
+    def _compact_locked(self) -> None:
+        batch = ColumnBatch.concat([sh.batch for sh in self._delta])
+        self._sealed.append(Shard(batch,
                                   _build_shard_indexes(self.schema, batch)))
+        self._delta = []
+        self._compactions += 1
 
     # -------------------------------------------------------------- reads
     def snapshot(self) -> FDb:
-        """Immutable read view: flushed shards + memtable as a final shard."""
+        """Immutable read view: sealed + delta shards + memtable as a
+        final shard.  Cached per generation — unchanged data returns the
+        same ``FDb`` object, so device priming and result-cache tokens
+        stay stable between mutations."""
         with self._lock:
-            shards = list(self._shards)
+            if self._snap is not None and self._snap[0] == self._generation:
+                return self._snap[1]
+            shards = self._sealed + self._delta
             if self._memtable:
                 batch = ColumnBatch.from_records(self.schema, self._memtable)
-                shards.append(
-                    Shard(batch, _build_shard_indexes(self.schema, batch)))
-        return FDb(self.name, self.schema, shards)
+                shards = shards + [
+                    Shard(batch, _build_shard_indexes(self.schema, batch))]
+            db = FDb(self.name, self.schema, shards)
+            self._snap = (self._generation, db)
+            return db
+
+    @property
+    def generation(self) -> int:
+        """Mutation counter; a snapshot is valid while this is unchanged."""
+        with self._lock:
+            return self._generation
 
     @property
     def num_docs(self) -> int:
         with self._lock:
-            return (sum(s.n for s in self._shards) + len(self._memtable))
+            return (sum(s.n for s in self._sealed)
+                    + sum(s.n for s in self._delta) + len(self._memtable))
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"generation": self._generation,
+                    "sealed_shards": len(self._sealed),
+                    "delta_shards": len(self._delta),
+                    "memtable_rows": len(self._memtable),
+                    "compactions": self._compactions,
+                    "docs": (sum(s.n for s in self._sealed)
+                             + sum(s.n for s in self._delta)
+                             + len(self._memtable))}
+
+    # ---------------------------------------------------------- listeners
+    def add_listener(self, fn: Callable[[FDb], None]) -> None:
+        """Register ``fn(stale_snapshot)`` to run after every mutation
+        that invalidates a live snapshot."""
+        with self._lock:
+            self._listeners.append(fn)
+
+    def bind_cache(self, cache) -> None:
+        """Invalidate ``cache`` entries keyed on a snapshot whenever new
+        data lands — the generation-token hook that keeps a live
+        ``QueryServer`` from serving pre-append results."""
+        invalidate = getattr(cache, "invalidate", None)
+        if invalidate is not None:
+            self.add_listener(invalidate)

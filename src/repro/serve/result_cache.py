@@ -12,18 +12,31 @@ server memoizes two kinds of derived values:
 
 Keys are SHA-256 digests over a **canonical byte encoding** of the plan
 (regions by their cover-range words, windows and paths by value — never
-object identity), prefixed with a per-FDb token drawn from a
-``WeakKeyDictionary``: a rebuilt FDb under the same name gets a fresh
-token, so stale entries can never alias a new dataset.  A plan containing
-something the canonicalizer does not understand simply is not cacheable
-(``key_for`` returns ``None``) — unknown ≠ equal is the safe direction.
+object identity), prefixed with a per-FDb **generation token** drawn
+from a ``WeakKeyDictionary``: a rebuilt FDb under the same name gets a
+fresh token, so stale entries can never alias a new dataset.  The token
+rides *outside* the digest (``b"<token>|<sha256>"``), which is what
+makes :meth:`ResultCache.invalidate` possible: when a live
+``StreamingFDb`` appends, its mutation hook
+(:meth:`repro.fdb.streaming.StreamingFDb.bind_cache`) calls
+``invalidate(stale_snapshot)`` — the token is bumped (future lookups
+can never match) and every entry carrying the old token prefix is
+swept eagerly.  A plan containing something the canonicalizer does not
+understand simply is not cacheable (``key_for`` returns ``None``) —
+unknown ≠ equal is the safe direction.
 
 Entries carry a per-kind TTL against an **injectable clock** (tests pin
 time), and the cache holds an LRU byte budget over the values' reported
-sizes.  Every public entry point swallows its own errors: a broken cache
-degrades the server to recomputation, it never fails a query — the
-server additionally wraps its calls, so even a cache object whose
-methods raise (fault-injection tests do exactly that) cannot surface.
+sizes.
+
+**Concurrency model.**  One re-entrant lock guards the entry map, byte
+accounting, the token table, and the stat counters; every public method
+takes it, so the scheduler thread, worker-pool gather tails, and
+streaming mutation listeners can call in concurrently.  Every public
+entry point also swallows its own errors: a broken cache degrades the
+server to recomputation, it never fails a query — the server
+additionally wraps its calls, so even a cache object whose methods
+raise (fault-injection tests do exactly that) cannot surface.
 """
 from __future__ import annotations
 
@@ -114,6 +127,7 @@ class ResultCache:
         self.misses = 0
         self.evictions = 0
         self.errors = 0
+        self.invalidations = 0
 
     # ------------------------------------------------------------- keying
     def key_for(self, db, plan, kind: str = "result",
@@ -126,7 +140,7 @@ class ResultCache:
                 if token is None:
                     token = next(self._next_token)
                     self._tokens[db] = token
-            out = [kind.encode(), b"\x00", str(token).encode(), b"\x00"]
+            out = [kind.encode(), b"\x00"]
             _canon([getattr(plan, "source", None),
                     list(getattr(plan, "shard_ids", ())),
                     getattr(plan, "probes", ()),
@@ -135,11 +149,38 @@ class ResultCache:
                     getattr(plan, "server_ops", ()),
                     getattr(plan, "mixer_ops", ()),
                     list(extra)], out)
-            return hashlib.sha256(b"".join(out)).digest()
+            # token outside the digest → invalidate() can sweep by prefix
+            return (str(token).encode() + b"|"
+                    + hashlib.sha256(b"".join(out)).digest())
         except Exception:
             with self._lock:
                 self.errors += 1
             return None
+
+    def invalidate(self, db) -> int:
+        """Expire every entry keyed against ``db``'s current generation
+        token and issue a fresh token, so no future ``key_for(db, …)``
+        can match a pre-invalidation entry.  This is the streaming-append
+        hook (:meth:`repro.fdb.streaming.StreamingFDb.bind_cache`).
+        Returns the number of entries swept (0 when ``db`` was never
+        keyed)."""
+        try:
+            with self._lock:
+                self.invalidations += 1
+                old = self._tokens.get(db)
+                self._tokens[db] = next(self._next_token)
+                if old is None:
+                    return 0
+                prefix = str(old).encode() + b"|"
+                dead = [k for k in self._entries if k.startswith(prefix)]
+                for k in dead:
+                    _, _, nbytes = self._entries.pop(k)
+                    self._nbytes -= nbytes
+                return len(dead)
+        except Exception:
+            with self._lock:
+                self.errors += 1
+            return 0
 
     # ------------------------------------------------------------ get/put
     def get(self, kind: str, key: Optional[bytes]):
@@ -217,4 +258,5 @@ class ResultCache:
         with self._lock:
             return {"entries": len(self._entries), "nbytes": self._nbytes,
                     "hits": self.hits, "misses": self.misses,
-                    "evictions": self.evictions, "errors": self.errors}
+                    "evictions": self.evictions, "errors": self.errors,
+                    "invalidations": self.invalidations}

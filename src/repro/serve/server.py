@@ -21,6 +21,27 @@ the session-server shape on top of :class:`~repro.exec.adhoc.AdHocEngine`:
     is wrapped: a broken or fault-injected cache degrades the server to
     recomputation, it never fails a query.
 
+**Concurrency model.**  One condition variable guards the pending deque,
+the closed flag, and the stat counters.  ``submit`` (any client thread)
+appends under it and raises :class:`ServerBusy` at ``max_pending``; the
+daemon scheduler thread drains it each tick (a short
+``tick_s`` sleep lets near-simultaneous submits join one batch), or
+``run_pending()`` drains synchronously on the caller for deterministic
+coalescing.  Execution never holds the lock: each batch plans its
+queries, then runs groups through the engine's worker pool.
+
+**Live sources.**  Every query plans against the source's current
+snapshot and executes against that pin (``Plan.db``) — appends landing
+between coalesced waves can never tear a result across generations; a
+query sees either the pre-append or the post-append view, whole.  The
+first time a batch touches a source registered live in the catalog
+(a :class:`~repro.fdb.streaming.StreamingFDb`), the server wires the
+streaming mutation hook into its cache
+(:meth:`~repro.fdb.streaming.StreamingFDb.bind_cache`): an append both
+bumps the cache's generation token and sweeps the stale snapshot's
+entries, so a pre-append cached result is never served after the hook
+fires — even within the old entry's TTL.
+
 Each coalesced query's rows are byte-identical to what the single-query
 path produces — the multi-query ops sit behind the same
 :class:`~repro.exec.backend.ExecBackend` parity seam, with the numpy
@@ -86,6 +107,7 @@ class QueryServer:
         self._cv = threading.Condition()
         self._pending: "deque[_Pending]" = deque()
         self._closed = False
+        self._watched: set = set()      # live sources wired into the cache
         self._stats = {"admitted": 0, "rejected": 0, "served": 0,
                        "coalesced_queries": 0, "coalesced_batches": 0,
                        "fallback_queries": 0, "cache_hits": 0,
@@ -193,6 +215,7 @@ class QueryServer:
             except Exception as e:
                 p.future.set_exception(e)
                 continue
+            self._watch_live(p.plan.source)
             if self._cache_get(p):
                 continue
             p.key = self._compat_key(p.plan)
@@ -228,6 +251,21 @@ class QueryServer:
         except Exception as e:
             p.future.set_exception(e)
 
+    def _watch_live(self, source: str) -> None:
+        """First touch of a live (streaming) source: wire its mutation
+        hook into this server's cache, so appends invalidate eagerly."""
+        if self.cache is None or source in self._watched:
+            return
+        self._watched.add(source)
+        try:
+            live = getattr(self.engine.catalog, "live", None)
+            sdb = live(source) if live is not None else None
+            if sdb is not None:
+                sdb.bind_cache(self.cache)
+        except Exception:
+            with self._cv:
+                self._stats["cache_errors"] += 1
+
     # -------------------------------------------------------- coalescing
     @staticmethod
     def _compat_key(plan: Plan):
@@ -235,7 +273,9 @@ class QueryServer:
         ``None`` (single-query path).  Residual filters need host work
         before selection completes, joins need a recursive broadcast
         collect; multi-refine and over-budget constraint sets exceed the
-        kernel's packed table."""
+        kernel's packed table.  The pinned snapshot's identity is part of
+        the key: two queries planned astride a streaming append must not
+        share one dispatch over mixed generations."""
         if plan.residual is not None or \
                 any(isinstance(op, JoinOp) for op in plan.server_ops):
             return None
@@ -247,7 +287,8 @@ class QueryServer:
             if not (1 <= len(rf.constraints) <= 30):
                 return None
             refine_path = rf.path
-        return (plan.source, tuple(plan.shard_ids), refine_path)
+        return (plan.source, id(plan.db), tuple(plan.shard_ids),
+                refine_path)
 
     def _probe_bitmaps(self, db, plan: Plan, sid: int, shard):
         """Host probe bitmaps for one (plan, shard) — served from the
@@ -299,7 +340,10 @@ class QueryServer:
         engine = self.engine
         backend = engine.backend
         plans = [p.plan for p in chunk]
-        db = engine.catalog.get(plans[0].source)
+        # execute against the snapshot pinned at plan time — a streaming
+        # append between planning and this wave must not swap the data
+        db = plans[0].db if plans[0].db is not None \
+            else engine.catalog.get(plans[0].source)
         backend.prime_fdb(db)
         shard_ids = list(plans[0].shard_ids)
         waves = partition_waves(shard_ids, engine.wave)
@@ -397,7 +441,8 @@ class QueryServer:
         if self.cache is None:
             return False
         try:
-            db = self.engine.catalog.get(p.plan.source)
+            db = p.plan.db if p.plan.db is not None \
+                else self.engine.catalog.get(p.plan.source)
             p.cache_key = self.cache.key_for(db, p.plan, kind="result")
             hit = self.cache.get("result", p.cache_key)
         except Exception:
@@ -418,7 +463,8 @@ class QueryServer:
             return
         try:
             if p.cache_key is None:
-                db = self.engine.catalog.get(p.plan.source)
+                db = p.plan.db if p.plan.db is not None \
+                    else self.engine.catalog.get(p.plan.source)
                 p.cache_key = self.cache.key_for(db, p.plan, kind="result")
             self.cache.put("result", p.cache_key, res)
         except Exception:

@@ -218,6 +218,25 @@ class SpaceTimeIndex:
         return bm & bitmap_from_ids(
             np.nonzero(overlap)[0].astype(np.int64), self.n_docs)
 
+    def span(self) -> Optional[Tuple[float, float]]:
+        """Time span ``(lo, hi)`` covered by any track point in this
+        shard, or ``None`` when unknown (no docs, or no doc has points).
+
+        This is the shard-level partition statistic behind the planner's
+        time-partitioned shard pruning: a query window ``[t0, t1]`` with
+        ``t1 < lo`` or ``t0 > hi`` cannot match any doc here — docs with
+        points all miss the window (their per-doc ``[t_min, t_max]``
+        spans lie inside ``[lo, hi]``), and docs without points match no
+        space-time constraint at all.  ``None`` means "keep the shard"
+        (unknown is never grounds to prune)."""
+        if self.n_docs == 0 or self.t_min.size == 0:
+            return None
+        lo = float(np.min(self.t_min))
+        hi = float(np.max(self.t_max))
+        if not (np.isfinite(lo) and np.isfinite(hi)):
+            return None                       # every track empty
+        return lo, hi
+
     def num_keys(self) -> int:
         return int(self.keys.size)
 

@@ -1,0 +1,313 @@
+"""Live ingestion end-to-end: incremental delta-shard indexing at flush,
+LSM compaction equivalence, generation-cached snapshots, time-partition
+shard pruning (plan- and launch-visible), incremental device priming of
+delta buffers only, ingest-while-serving snapshot isolation (no torn
+reads), and the append → cache-invalidation → recompute chain."""
+import math
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import BETWEEN, P, fdb
+from repro.core.planner import plan_flow
+from repro.exec import AdHocEngine, Catalog, JaxBackend
+from repro.exec.batched import FUSED_ENV
+from repro.fdb import DOUBLE, INT, Schema
+from repro.fdb.schema import Field, MESSAGE
+from repro.fdb.streaming import StreamingFDb
+from repro.geo import AreaTree, mercator as M
+from repro.kernels import ops
+from repro.serve import QueryServer, ResultCache
+from repro.tess import Tesseract
+
+DAY = 86400.0
+
+
+# --------------------------------------------------------------- fixtures
+
+def _track_schema(name):
+    return Schema(name, [
+        Field("id", INT, indexes=("tag",)),
+        Field("track", MESSAGE, fields=[
+            Field("lat", DOUBLE, repeated=True),
+            Field("lng", DOUBLE, repeated=True),
+            Field("t", DOUBLE, repeated=True)],
+            indexes=("spacetime",),
+            index_params={"level": 6, "bucket_s": 900.0, "epoch": 0.0}),
+    ])
+
+
+def _track_rec(i, t0, rng, n=6):
+    """One short track near SF starting at ``t0`` (spans ~25 min)."""
+    return {"id": i, "track": {
+        "lat": rng.uniform(37.6, 37.9, n).tolist(),
+        "lng": rng.uniform(-122.5, -122.2, n).tolist(),
+        "t": (t0 + np.arange(n) * 300.0).tolist()}}
+
+
+def _time_sorted_stream(name, n=96, flush=16, compact=0):
+    """Time-sorted ingestion ⇒ each delta shard covers a disjoint time
+    band — the partitioned-table layout the pruner exploits."""
+    rng = np.random.default_rng(7)
+    s = StreamingFDb(name, _track_schema(name), flush_threshold=flush,
+                     compact_threshold=compact)
+    span = 3 * DAY
+    for i in range(n):
+        s.append(_track_rec(i, t0=span * i / n, rng=rng))
+    s.flush()
+    return s
+
+
+def _bay_region():
+    ix, iy = M.latlng_to_xy(37.75, -122.35)
+    d = 4_000_000
+    return AreaTree.from_box(int(ix) - d, int(iy) - d,
+                             int(ix) + d, int(iy) + d, max_level=7)
+
+
+def _ids(batch):
+    return sorted(int(v) for v in batch["id"].values)
+
+
+def _dense_schema(name):
+    return Schema(name, [
+        Field("id", INT, indexes=("tag",)),
+        Field("hour", INT, indexes=("range",)),
+        Field("speed", DOUBLE),
+    ])
+
+
+# ------------------------------------------- incremental indexing + LSM
+
+def test_flush_builds_delta_indexes_incrementally():
+    s = _time_sorted_stream("LiveIdx", n=40, flush=10)
+    assert s.stats()["delta_shards"] == 4
+    for sh in s._shards:
+        idx = sh.index("track", "spacetime")
+        assert idx is not None
+        lo, hi = idx.span()
+        assert 0.0 <= lo <= hi <= 3 * DAY + 3600
+    # delta spans are disjoint time bands (time-sorted ingestion)
+    spans = [sh.index("track", "spacetime").span() for sh in s._shards]
+    for (_, hi), (lo, _) in zip(spans, spans[1:]):
+        assert hi <= lo + 1e-9
+
+
+def test_compaction_preserves_rows_and_order():
+    s = _time_sorted_stream("LiveCompact", n=40, flush=10)
+    before = s.snapshot()
+    ids_before = np.concatenate(
+        [sh.batch["id"].values for sh in before.shards])
+    assert s.compact()
+    st = s.stats()
+    assert st["sealed_shards"] == 1 and st["delta_shards"] == 0
+    assert st["compactions"] == 1
+    after = s.snapshot()
+    ids_after = np.concatenate(
+        [sh.batch["id"].values for sh in after.shards])
+    assert np.array_equal(ids_before, ids_after)   # row order preserved
+    assert after.shards[0].index("track", "spacetime") is not None
+    assert not s.compact()                         # <2 deltas → no-op
+
+
+def test_auto_compaction_at_threshold():
+    rng = np.random.default_rng(3)
+    s = StreamingFDb("LiveAuto", _track_schema("LiveAuto"),
+                     flush_threshold=4, compact_threshold=3)
+    s.extend([_track_rec(i, t0=100.0 * i, rng=rng) for i in range(12)])
+    st = s.stats()
+    assert st["compactions"] >= 1
+    assert st["delta_shards"] < 3
+    assert s.num_docs == 12
+
+
+def test_snapshot_identity_cached_per_generation():
+    rng = np.random.default_rng(5)
+    s = StreamingFDb("LiveGen", _track_schema("LiveGen"),
+                     flush_threshold=8)
+    s.append(_track_rec(0, t0=0.0, rng=rng))
+    g1 = s.generation
+    snap1 = s.snapshot()
+    assert s.snapshot() is snap1               # stable while unchanged
+    s.append(_track_rec(1, t0=300.0, rng=rng))
+    assert s.generation > g1
+    snap2 = s.snapshot()
+    assert snap2 is not snap1
+    assert snap2.num_docs == 2 and snap1.num_docs == 1
+
+
+# ------------------------------------------------- pruning: plan + launch
+
+@pytest.mark.tesseract
+def test_pruning_shrinks_plan_and_fused_launches(monkeypatch):
+    monkeypatch.setenv(FUSED_ENV, "1")
+    s = _time_sorted_stream("LivePrune", n=96, flush=16)
+    cat = Catalog()
+    cat.register(s)
+    db = cat.get("LivePrune")
+    total = db.num_shards
+    # a half-day window inside day 0 → only the first time band(s) survive
+    flow = fdb("LivePrune").tesseract(
+        Tesseract(_bay_region(), 0.0, 0.5 * DAY))
+    plan = plan_flow(flow, cat)
+    kept = len(plan.shard_ids)
+    assert 0 < kept < total
+    assert plan.stats.get("pruned_shards") == total - kept
+    wave = 3
+    eng = AdHocEngine(cat, num_servers=2, backend="jax", wave=wave)
+    eng.collect(flow)                              # warm
+    ops.reset_launch_counts()
+    res = eng.collect(flow)
+    lc = ops.launch_counts()
+    assert lc.get("run_wave_fused") == math.ceil(kept / wave)
+    assert math.ceil(kept / wave) < math.ceil(total / wave)
+    # parity: numpy oracle over the same live snapshot
+    want = AdHocEngine(cat, num_servers=2, backend="numpy",
+                       wave=wave).collect(flow)
+    assert _ids(res.batch) == _ids(want.batch)
+    assert res.batch.n > 0
+
+
+@pytest.mark.tesseract
+def test_pruning_launch_contract_unfused(monkeypatch):
+    monkeypatch.setenv(FUSED_ENV, "0")
+    s = _time_sorted_stream("LivePruneU", n=64, flush=16)
+    cat = Catalog()
+    cat.register(s)
+    flow = fdb("LivePruneU").tesseract(
+        Tesseract(_bay_region(), 0.0, 0.5 * DAY))
+    kept = len(plan_flow(flow, cat).shard_ids)
+    assert 0 < kept < cat.get("LivePruneU").num_shards
+    wave = 2
+    eng = AdHocEngine(cat, num_servers=2, backend="jax", wave=wave)
+    eng.collect(flow)                              # warm
+    ops.reset_launch_counts()
+    eng.collect(flow)
+    lc = ops.launch_counts()
+    assert lc.get("refine_tracks_batched") == math.ceil(kept / wave)
+    assert lc.get("refine_tracks", 0) == 0
+
+
+@pytest.mark.tesseract
+def test_prune_all_shards_yields_empty_result():
+    s = _time_sorted_stream("LiveNone", n=32, flush=8)
+    cat = Catalog()
+    cat.register(s)
+    # window far beyond every ingested timestamp → every shard pruned
+    flow = fdb("LiveNone").tesseract(
+        Tesseract(_bay_region(), 30 * DAY, 31 * DAY))
+    plan = plan_flow(flow, cat)
+    assert plan.shard_ids == []
+    res = AdHocEngine(cat, num_servers=2, backend="numpy").collect(flow)
+    assert res.batch.n == 0
+
+
+# ----------------------------------------------------- incremental prime
+
+@pytest.mark.tesseract
+def test_prime_uploads_only_new_delta_buffers():
+    rng = np.random.default_rng(11)
+    s = StreamingFDb("LivePrime", _track_schema("LivePrime"),
+                     flush_threshold=8, compact_threshold=0)
+    s.extend([_track_rec(i, t0=300.0 * i, rng=rng) for i in range(16)])
+    jxb = JaxBackend()
+    snap1 = s.snapshot()
+    n1 = jxb.prime_fdb(snap1)
+    assert n1 > 0
+    assert jxb.prime_fdb(snap1) == 0               # idempotent per gen
+    buffers1 = jxb.device_cache.stats()["buffers"]
+    # one more flushed delta shard → exactly its buffers upload
+    s.extend([_track_rec(16 + i, t0=300.0 * (16 + i), rng=rng)
+              for i in range(8)])
+    snap2 = s.snapshot()
+    assert snap2 is not snap1
+    n2 = jxb.prime_fdb(snap2)
+    assert 0 < n2 < n1                             # delta only, not re-all
+    assert jxb.device_cache.stats()["buffers"] == buffers1 + n2
+
+
+# ------------------------------------- serving: isolation + invalidation
+
+def test_ingest_while_serving_never_tears(monkeypatch):
+    """Concurrent appends against a serving engine: every result is a
+    contiguous prefix of the append order — pre- or post-append snapshot,
+    never a torn mix of generations."""
+    name = "LiveTorn"
+    s = StreamingFDb(name, _dense_schema(name), flush_threshold=5)
+    cat = Catalog()
+    cat.register(s)
+    eng = AdHocEngine(cat, num_servers=2, backend="numpy")
+    flow = fdb(name).find(BETWEEN(P.hour, 0, 23))
+    s.append({"id": 0, "hour": 1, "speed": 1.0})
+
+    stop = threading.Event()
+    err: list = []
+
+    def writer():
+        i = 1
+        while not stop.is_set() and i < 400:
+            s.append({"id": i, "hour": i % 24, "speed": float(i)})
+            i += 1
+
+    def reader():
+        try:
+            for _ in range(25):
+                got = [int(v) for v in
+                       eng.collect(flow).batch["id"].values]
+                assert got == list(range(len(got))), got
+        except Exception as e:                     # pragma: no cover
+            err.append(e)
+
+    w = threading.Thread(target=writer)
+    readers = [threading.Thread(target=reader) for _ in range(3)]
+    w.start()
+    [r.start() for r in readers]
+    [r.join() for r in readers]
+    stop.set()
+    w.join()
+    assert not err
+
+
+def test_append_invalidates_live_server_cache():
+    """A live QueryServer never serves a pre-append cached result: the
+    bound ResultCache is invalidated by the append and the next submit
+    recomputes against the new snapshot."""
+    name = "LiveInval"
+    s = StreamingFDb(name, _dense_schema(name), flush_threshold=4)
+    s.extend([{"id": i, "hour": 8, "speed": 1.0} for i in range(8)])
+    cat = Catalog()
+    cat.register(s)
+    cache = ResultCache()
+    srv = QueryServer(catalog=cat, backend="numpy", cache=cache,
+                      start=False)
+    try:
+        flow = fdb(name).find(BETWEEN(P.hour, 0, 23))
+        f1 = srv.submit(flow); srv.run_pending()
+        r1 = f1.result(60)
+        assert r1.batch.n == 8
+        f2 = srv.submit(flow); srv.run_pending()
+        assert f2.result(60) is r1                 # cached while unchanged
+        assert srv.stats()["cache_hits"] == 1
+        s.extend([{"id": 8, "hour": 9, "speed": 2.0}])
+        assert cache.stats()["invalidations"] >= 1
+        f3 = srv.submit(flow); srv.run_pending()
+        r3 = f3.result(60)
+        assert r3 is not r1                        # recomputed, not stale
+        assert r3.batch.n == 9
+        assert 8 in set(int(v) for v in r3.batch["id"].values)
+    finally:
+        srv.close()
+
+
+def test_listener_errors_do_not_fail_ingest():
+    s = StreamingFDb("LiveErr", _dense_schema("LiveErr"),
+                     flush_threshold=4)
+    calls = []
+    s.add_listener(lambda stale: calls.append(stale))
+    s.add_listener(lambda stale: (_ for _ in ()).throw(RuntimeError()))
+    s.append({"id": 0, "hour": 0, "speed": 0.0})
+    assert s.snapshot().num_docs == 1
+    s.append({"id": 1, "hour": 1, "speed": 1.0})   # listener fires now
+    assert s.num_docs == 2
+    assert len(calls) == 1                         # stale snap existed once

@@ -1,0 +1,84 @@
+#!/usr/bin/env python
+"""Relative-link checker for the docs tier (stdlib only, no repo imports).
+
+Scans every markdown file in ``docs/`` plus ``ROADMAP.md``, ``README.md``
+and ``CHANGES.md`` (when present) for ``[text](target)`` links and fails
+(exit 1) when a relative target does not resolve to a file or directory
+in the repository.  Skipped, by design:
+
+  * absolute URLs (``http(s)://``, ``mailto:``) — no network in CI,
+  * pure in-page anchors (``#section``),
+  * targets that escape the repo root (e.g. the ROADMAP badge's
+    ``../../actions/workflows/ci.yml`` — a GitHub web route, not a file).
+
+``#anchor`` suffixes on file targets are stripped before resolution;
+anchor existence inside the target file is not verified.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: [text](target) — target up to the first unescaped ')'; images included
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+
+def _md_files() -> list:
+    files = []
+    for name in ("ROADMAP.md", "README.md", "CHANGES.md"):
+        p = os.path.join(REPO, name)
+        if os.path.exists(p):
+            files.append(p)
+    docs = os.path.join(REPO, "docs")
+    if os.path.isdir(docs):
+        for root, _dirs, names in os.walk(docs):
+            files.extend(os.path.join(root, n) for n in sorted(names)
+                         if n.endswith(".md"))
+    return files
+
+
+def check(path: str) -> list:
+    """Broken links in one file as (lineno, target) pairs."""
+    broken = []
+    base = os.path.dirname(path)
+    with open(path, encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, 1):
+            for m in LINK_RE.finditer(line):
+                target = m.group(1)
+                if target.startswith(("http://", "https://", "mailto:",
+                                      "#")):
+                    continue
+                rel = target.split("#", 1)[0]
+                if not rel:
+                    continue
+                resolved = os.path.realpath(os.path.join(base, rel))
+                if not resolved.startswith(REPO + os.sep):
+                    continue                    # web route, not a file
+                if not os.path.exists(resolved):
+                    broken.append((lineno, target))
+    return broken
+
+
+def main() -> int:
+    files = _md_files()
+    n_links = 0
+    failures = 0
+    for path in files:
+        broken = check(path)
+        with open(path, encoding="utf-8") as fh:
+            n_links += sum(len(LINK_RE.findall(line)) for line in fh)
+        for lineno, target in broken:
+            rel = os.path.relpath(path, REPO)
+            print(f"{rel}:{lineno}: broken link -> {target}",
+                  file=sys.stderr)
+            failures += 1
+    print(f"checked {len(files)} file(s), {n_links} link(s), "
+          f"{failures} broken")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
