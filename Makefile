@@ -5,8 +5,8 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: help test test-fast test-tesseract bench bench-backends \
-        bench-tesseract bench-serve bench-streaming ci ci-kernels \
-        ci-bench bench-regression check-links
+        bench-tesseract bench-serve bench-streaming bench-partition \
+        ci ci-kernels ci-bench bench-regression check-links
 
 help:                 ## list targets (CI runs: ci, ci-kernels, ci-bench)
 	@grep -E '^[a-z][a-zA-Z_-]*:.*##' $(MAKEFILE_LIST) | \
@@ -27,11 +27,11 @@ ci:                   ## CI leg: tier-1 under $REPRO_EXEC_BACKEND (numpy|jax)
 ci-kernels:           ## CI extra: interpret-vs-reference kernel-body sweeps
 	$(PY) -m pytest -x -q tests/test_kernels.py tests/test_refine.py
 
-ci-bench:             ## CI smoke: tiny backends+tesseract+serve+streaming suites, exits non-zero on parity fail
-	$(PY) -m benchmarks.run --only backends,tesseract,serve,streaming --json --scale 0.05
+ci-bench:             ## CI smoke: tiny backends+tesseract+serve+streaming+partition suites, exits non-zero on parity fail
+	$(PY) -m benchmarks.run --only backends,tesseract,serve,streaming,partition --json --scale 0.05
 
-bench-regression:     ## blocking gate: fresh BENCH_{backends,tesseract,serve,streaming}.json vs committed baselines (>1.5x/query fails)
-	$(PY) benchmarks/check_regression.py --suite backends,tesseract,serve,streaming
+bench-regression:     ## blocking gate: fresh BENCH_{backends,tesseract,serve,streaming,partition}.json vs committed baselines (>1.5x/query fails)
+	$(PY) benchmarks/check_regression.py --suite backends,tesseract,serve,streaming,partition
 
 check-links:          ## docs hygiene: every relative link in docs/, ROADMAP.md, README-tier files resolves
 	$(PY) tools/check_links.py
@@ -50,3 +50,6 @@ bench-serve:          ## concurrent serving: coalesced QPS/latency + cache + lau
 
 bench-streaming:      ## live ingestion: ingest→queryable latency, pruning + invalidation evidence
 	$(PY) -m benchmarks.run --only streaming --json
+
+bench-partition:      ## partitioned execution: P=1 vs P=2 wall time + launch/merge evidence
+	$(PY) -m benchmarks.run --only partition --json

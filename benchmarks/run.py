@@ -53,7 +53,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of "
                          "table2|fig11|fig12|flume|kernels|backends|"
-                         "tesseract|serve|streaming|roofline")
+                         "tesseract|serve|streaming|partition|roofline")
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_<suite>.json per suite "
                          "(wall time + parity bit)")
@@ -71,9 +71,9 @@ def main() -> None:
         os.environ["REPRO_EXEC_PROFILE"] = "1"
 
     from . import (bench_backends, bench_fig11, bench_fig12,
-                   bench_flume_overhead, bench_kernels, bench_serve,
-                   bench_streaming, bench_table2, bench_tesseract,
-                   roofline)
+                   bench_flume_overhead, bench_kernels, bench_partition,
+                   bench_serve, bench_streaming, bench_table2,
+                   bench_tesseract, roofline)
 
     benches = {
         "table2": lambda: bench_table2.run(scale=args.scale),
@@ -89,6 +89,8 @@ def main() -> None:
         "serve": lambda: bench_serve.run(scale=args.scale,
                                          raise_on_mismatch=False),
         "streaming": lambda: bench_streaming.run(scale=args.scale,
+                                                 raise_on_mismatch=False),
+        "partition": lambda: bench_partition.run(scale=args.scale,
                                                  raise_on_mismatch=False),
         "roofline": lambda: roofline.run(),
     }

@@ -1,0 +1,69 @@
+"""Scaling out — run one query over P execution partitions.
+
+The planner's pruned shard list splits into P contiguous partitions
+(`PartitionPlan`); each partition dispatches its own fused waves and a
+single `merge_partials` combine folds the per-partition aggregate
+states.  Results are identical at any P by contract — partitioning is
+purely a throughput knob — which this script demonstrates by running
+the same rush-hour aggregation at P = 1, 2, 4 and comparing results
+and launch counts, then killing a partition to show the elastic
+reroute path.
+
+Run:  PYTHONPATH=src python examples/scaling_out.py
+"""
+from repro.core import BETWEEN, P, group, fdb
+from repro.core.planner import partition_shards
+from repro.data.synthetic import generate_world
+from repro.exec import AdHocEngine, Catalog, FaultPlan
+from repro.fdb import build_fdb
+from repro.kernels import ops
+
+NUM_SHARDS = 8
+WAVE = 3
+
+
+def main():
+    world = generate_world(scale=0.3, seed=11)
+    cat = Catalog()
+    cat.register(build_fdb("Obs", world["observations_schema"],
+                           world["observations"], num_shards=NUM_SHARDS))
+
+    # mean/spread of observed speed per road during the morning rush
+    flow = (fdb("Obs").find(BETWEEN(P.hour, 7, 9))
+            .aggregate(group(P.road_id).count("n").avg(mean=P.speed)
+                       .std_dev(sd=P.speed).min(lo=P.speed)
+                       .max(hi=P.speed)))
+
+    results = {}
+    for parts in (1, 2, 4):
+        eng = AdHocEngine(cat, backend="jax", wave=WAVE, partitions=parts)
+        eng.collect(flow)                       # warm: prime + jit caches
+        ops.reset_launch_counts()
+        res = eng.collect(flow)
+        results[parts] = res.batch
+        pp = partition_shards(range(NUM_SHARDS), parts)
+        print(f"P={parts}: partitions {pp.sizes()}, "
+              f"launches {dict(ops.launch_counts())} "
+              f"(contract: {pp.wave_dispatches(WAVE)} fused dispatches"
+              f"{' + 1 merge' if pp.merge_combines() else ''})")
+
+    ref = results[1]
+    for parts in (2, 4):
+        got = results[parts]
+        same = all((ref[p].values == got[p].values).all()
+                   for p in ref.paths())
+        print(f"P={parts} ≡ P=1: {same} ({got.n} groups)")
+
+    # elastic recovery: partition 1 of 4 dies → its shards reroute to the
+    # survivors before dispatch; coverage stays complete
+    eng = AdHocEngine(cat, backend="jax", wave=WAVE, partitions=4)
+    fp = FaultPlan(fail_always={("partition", 1)}, reroute_after=99)
+    res = eng.collect(flow, fault_plan=fp)
+    same = all((ref[p].values == res.batch[p].values).all()
+               for p in ref.paths())
+    print(f"partition 1 dead → rerouted: identical={same}, "
+          f"coverage={res.coverage}, retries={res.profile.retries}")
+
+
+if __name__ == "__main__":
+    main()

@@ -27,7 +27,9 @@ from .flow import (AggregateOp, DistinctOp, FilterOp, FindOp, Flow,
                    SampleOp, SortOp, SubFlowOp)
 
 __all__ = ["IndexProbe", "RefineSpec", "Plan", "plan_flow",
-           "split_find_pred", "probe_shard"]
+           "split_find_pred", "probe_shard",
+           "PartitionPlan", "partition_shards", "num_partitions",
+           "PARTITIONS_ENV"]
 
 
 # --------------------------------------------------------------------------
@@ -454,3 +456,83 @@ def plan_flow(flow: Flow, catalog) -> Plan:
     return Plan(flow.source, schema, shard_ids, fraction, probes, refines,
                 residual, source_paths, server_ops, mixer_ops, out_schema,
                 stats=stats, db=db)
+
+
+# --------------------------------------------------------------------------
+# Partition layer: which device runs which shards
+# --------------------------------------------------------------------------
+
+#: env override for the number of execution partitions (engine arg wins).
+PARTITIONS_ENV = "REPRO_EXEC_PARTITIONS"
+
+
+@dataclass
+class PartitionPlan:
+    """Explicit shards -> P partitions assignment for one query.
+
+    The partition layer sits between the planner (which enumerates and
+    prunes ``Plan.shard_ids``) and the wave scheduler: each partition's
+    shards are waved and dispatched independently (device-local under a
+    mesh axis on the jax backend), and the per-shard segment-aggregate
+    states are combined by a single ``merge_partials`` tail.  Partitions
+    are contiguous slices of the pruned shard list, so flattening the
+    per-partition results in partition order recovers global shard order
+    — which is what keeps the merged aggregation bit-equal to the P=1
+    sequential reference.
+    """
+
+    parts: List[List[int]]           # partition index -> shard ids
+
+    @property
+    def num_partitions(self) -> int:
+        return len(self.parts)
+
+    def sizes(self) -> List[int]:
+        return [len(p) for p in self.parts]
+
+    def wave_dispatches(self, wave: int) -> int:
+        """Launch-contract helper: fused dispatches = sum over partitions
+        of ceil(shards_p / wave).  Empty partitions dispatch nothing."""
+        wave = max(1, int(wave))
+        return sum(-(-len(p) // wave) for p in self.parts if p)
+
+    def merge_combines(self) -> int:
+        """Launch-contract helper: one ``merge_partials`` combine per
+        aggregated query when more than one partition ran; the P=1 path
+        is the legacy sequential merge (no combine launch)."""
+        return 1 if sum(1 for p in self.parts if p) > 1 else 0
+
+
+def partition_shards(shard_ids: Sequence[int], p: int) -> PartitionPlan:
+    """Split an (already pruned) shard list into ``p`` contiguous
+    partitions, balanced to within one shard (ragged counts allowed:
+    ``p`` need not divide ``len(shard_ids)``; with fewer shards than
+    partitions the tail partitions are empty)."""
+    p = max(1, int(p))
+    ids = list(shard_ids)
+    base, extra = divmod(len(ids), p)
+    parts: List[List[int]] = []
+    lo = 0
+    for i in range(p):
+        hi = lo + base + (1 if i < extra else 0)
+        parts.append(ids[lo:hi])
+        lo = hi
+    return PartitionPlan(parts)
+
+
+def num_partitions(spec: Optional[int] = None, backend: Any = None) -> int:
+    """Resolve the execution partition count: explicit engine arg >
+    ``REPRO_EXEC_PARTITIONS`` > the accelerator mesh size (batched
+    backends only — the host oracle defaults to a single partition)."""
+    if spec is not None:
+        return max(1, int(spec))
+    import os
+
+    env = os.environ.get(PARTITIONS_ENV, "").strip()
+    if env:
+        return max(1, int(env))
+    if backend is not None and getattr(backend, "batched_dispatch", False):
+        from ..launch.mesh import default_exec_partitions
+
+        return default_exec_partitions()
+    return 1

@@ -23,12 +23,13 @@ import numpy as np
 from ..core.exprs import CollectedTable, FieldRef
 from ..core.flow import (AggregateOp, DistinctOp, Flow, JoinOp, LimitOp,
                          SortOp)
-from ..core.planner import Plan, plan_flow
+from ..core.planner import PartitionPlan, Plan, plan_flow
 from ..fdb.columnar import ColumnBatch
 from ..fdb.fdb import FDb, Shard, _build_shard_indexes
 from ..fdb.schema import DOUBLE, INT, STRING, Schema
 from .backend import as_backend
-from .batched import partition_waves, run_wave_task, wave_size
+from .batched import (merge_partition_partials, partition_waves,
+                      resolve_partition_plan, run_wave_task, wave_size)
 from .catalog import Catalog, default_catalog
 from .failures import FaultPlan, TaskFailure
 from .processors import (AggPartial, aggregate_consume, aggregate_produce,
@@ -91,7 +92,8 @@ class AdHocEngine:
     def __init__(self, catalog: Optional[Catalog] = None,
                  num_servers: int = 8,
                  profile_log=None, backend=None,
-                 wave: Optional[int] = None):
+                 wave: Optional[int] = None,
+                 partitions: Optional[int] = None):
         self.catalog = catalog or default_catalog()
         self.num_servers = num_servers
         # execution backend: None → $REPRO_EXEC_BACKEND or "numpy";
@@ -100,6 +102,9 @@ class AdHocEngine:
         # shards per batched dispatch wave:
         # arg > $REPRO_EXEC_WAVE > backend default (8 batched / 1 host)
         self.wave = wave_size(wave, self.backend)
+        # execution partitions ("which device runs which shards"):
+        # arg > $REPRO_EXEC_PARTITIONS > mesh size (batched backends)
+        self.partitions = partitions
         if profile_log is None:
             from ..fdb.streaming import StreamingFDb
             profile_log = StreamingFDb("warpflow.query_log",
@@ -135,13 +140,16 @@ class AdHocEngine:
         grant = self.catalog.resources.acquire(want)
         profile = QueryProfile(source=plan.source,
                                shards_total=len(plan.shard_ids))
+        pplan = self._partition_plan(plan, profile, fault_plan)
         try:
             partials = self._run_servers(db, plan, tables, grant, profile,
-                                         fault_plan)
+                                         fault_plan, pplan)
         finally:
             self.catalog.resources.release(grant)
 
-        batch = self._mixer(plan, partials, profile)
+        batch = self._mixer(plan, partials, profile,
+                            premerged=merge_partition_partials(
+                                db, plan, partials, self.backend, pplan))
         profile.exec_ms = (time.perf_counter() - t0) * 1e3
         self.profile_log.append(profile.record())
         return QueryResult(batch, profile, plan)
@@ -170,24 +178,45 @@ class AdHocEngine:
         return plan_flow(flow, self.catalog).describe()
 
     # ------------------------------------------------------------ servers
-    def _run_servers(self, db, plan, tables, grant, profile,
-                     fault_plan) -> List[_ShardPartial]:
-        """Waves of shards through the batched backend seam; shards whose
-        fault check trips at wave start fall back to the per-shard
-        retry/drop path (best-effort contract unchanged)."""
+    def _partition_plan(self, plan, profile=None,
+                        fault_plan=None) -> PartitionPlan:
+        """See ``batched.resolve_partition_plan`` — the engines share the
+        partition-axis resolution and fault-reroute path."""
+        return resolve_partition_plan(self.partitions, self.backend, plan,
+                                      fault_plan, profile)
+
+    def _run_partition_wave(self, pplan, pi, db, plan, sids, nxt, tables,
+                            fault_plan):
+        with self.backend.partition_context(pi, pplan.num_partitions):
+            return run_wave_task(db, plan, sids, tables, self.catalog,
+                                 fault_plan, backend=self.backend,
+                                 prefetch_sids=nxt)
+
+    def _run_servers(self, db, plan, tables, grant, profile, fault_plan,
+                     pplan: Optional[PartitionPlan] = None
+                     ) -> List[_ShardPartial]:
+        """Per-partition waves of shards through the batched backend
+        seam; shards whose fault check trips at wave start fall back to
+        the per-shard retry/drop path (best-effort contract unchanged).
+        With P=1 this degenerates to the legacy single-loop wave order,
+        byte for byte."""
         partials: List[_ShardPartial] = []
         retry: List[int] = []
-        waves = partition_waves(plan.shard_ids, self.wave)
+        if pplan is None:
+            pplan = self._partition_plan(plan, profile, fault_plan)
+        # each wave names its successor *within its partition* so a fused
+        # backend stages wave k+1's buffers on that partition's device
+        # while wave k computes
+        subs = []
+        for pi, part in enumerate(pplan.parts):
+            pw = partition_waves(part, self.wave)
+            for j, w in enumerate(pw):
+                subs.append((pi, w, pw[j + 1] if j + 1 < len(pw)
+                             else None))
         with ThreadPoolExecutor(max_workers=grant) as pool:
-            # each wave names its successor so a fused backend can stage
-            # wave k+1's device buffers while wave k computes
-            futs = [pool.submit(run_wave_task, db, plan, wave, tables,
-                                self.catalog, fault_plan,
-                                backend=self.backend,
-                                prefetch_sids=(waves[i + 1]
-                                               if i + 1 < len(waves)
-                                               else None))
-                    for i, wave in enumerate(waves)]
+            futs = [pool.submit(self._run_partition_wave, pplan, pi, db,
+                                plan, w, nxt, tables, fault_plan)
+                    for pi, w, nxt in subs]
             for f in as_completed(futs):
                 done, failed = f.result()
                 partials.extend(done)
@@ -215,12 +244,17 @@ class AdHocEngine:
 
     # -------------------------------------------------------------- mixer
     def _mixer(self, plan: Plan, partials: Sequence[_ShardPartial],
-               profile: QueryProfile) -> ColumnBatch:
+               profile: QueryProfile,
+               premerged: Optional[AggPartial] = None) -> ColumnBatch:
         mixer_ops = list(plan.mixer_ops)
         if mixer_ops and isinstance(mixer_ops[0], AggregateOp):
             spec = mixer_ops[0].spec
-            merged = merge_agg_partials(
-                [p.agg for p in partials if p.agg is not None], spec)
+            # ``premerged`` is the partition layer's single-launch device
+            # combine of the per-shard segment states; when absent, fold
+            # host-side in shard-id order (P-invariant either way)
+            merged = premerged if premerged is not None else \
+                merge_agg_partials(
+                    [p.agg for p in partials if p.agg is not None], spec)
             batch = aggregate_consume(merged, spec)
             mixer_ops = mixer_ops[1:]
         else:

@@ -81,6 +81,7 @@ picks it up.
 """
 from __future__ import annotations
 
+import contextlib
 import os
 import threading
 import weakref
@@ -330,6 +331,85 @@ class ExecBackend:
                 seg.append((uniq, slots))
         return n_cands, ids_list, seg
 
+    # ------------------------------------------------------ partition layer
+    def partition_context(self, part: int, num_parts: int):
+        """Context manager the wave scheduler enters around one
+        partition's dispatches.  Host backends have nothing to place —
+        the partition layer degenerates to running the partitions'
+        waves one after another on the same loop."""
+        del part, num_parts
+        return contextlib.nullcontext()
+
+    def merge_partials(self, states, minmax=(), parts=None):
+        """Combine per-shard segment-aggregate states across partitions
+        — the partitioned Mixer combine, and the loop-over-partitions
+        **oracle** mesh backends must match.
+
+        ``states`` is a flat list of ``(uniq_keys, slots)`` pairs in
+        global shard order (partitions are contiguous slices, so
+        flattening per-partition results in partition order *is* shard
+        order); each slot is ``(count, sum, sum_sq[, min, max])`` vectors
+        over that state's own key space.  Returns ``(union_keys,
+        merged_slots)`` over the sorted union key space: counts, sums and
+        sums-of-squares accumulate **sequentially in states order** with
+        absent groups contributing the additive identity 0 (bit-equal to
+        the P=1 sequential merge), min/max planes reduce element-wise
+        against ±inf, and the per-group presence masks OR (a group is
+        live iff some state selected a row for it, which is exactly
+        ``merged count > 0`` — counts are non-negative).
+
+        ``minmax`` flags which value slots carry min/max planes;
+        ``parts`` (per-partition state counts) is layout metadata for
+        mesh-sharding backends — the host oracle just loops in order.
+        """
+        del parts
+        live = [(np.asarray(k), list(slots)) for k, slots in states
+                if len(k) and slots]
+        if not live:
+            return np.zeros(0, np.int64), []
+        union = np.unique(np.concatenate([k for k, _ in live]))
+        n_slots = max(len(slots) for _, slots in live)
+        mm = tuple(minmax)
+        mm = mm + (False,) * (n_slots - len(mm))
+        g = union.size
+        cnt = [np.zeros(g, np.int64) for _ in range(n_slots)]
+        s = [np.zeros(g, np.float64) for _ in range(n_slots)]
+        s2 = [np.zeros(g, np.float64) for _ in range(n_slots)]
+        mn = [np.full(g, np.inf) for _ in range(n_slots)]
+        mx = [np.full(g, -np.inf) for _ in range(n_slots)]
+        mask = np.zeros(g, bool)
+        for keys, slots in live:               # in order over states
+            idx = np.searchsorted(union, keys)
+            for k, st in enumerate(slots):
+                # densify onto the union space, then accumulate — the
+                # identical arithmetic a stacked device combine performs
+                row_c = np.zeros(g, np.int64)
+                row_s = np.zeros(g, np.float64)
+                row_s2 = np.zeros(g, np.float64)
+                row_c[idx] = np.asarray(st[0], np.int64)
+                row_s[idx] = np.asarray(st[1], np.float64)
+                row_s2[idx] = np.asarray(st[2], np.float64)
+                cnt[k] = cnt[k] + row_c
+                s[k] = s[k] + row_s
+                s2[k] = s2[k] + row_s2
+                if len(st) >= 5:
+                    row_mn = np.full(g, np.inf)
+                    row_mx = np.full(g, -np.inf)
+                    row_mn[idx] = np.asarray(st[3], np.float64)
+                    row_mx[idx] = np.asarray(st[4], np.float64)
+                    mn[k] = np.minimum(mn[k], row_mn)
+                    mx[k] = np.maximum(mx[k], row_mx)
+            present = np.zeros(g, bool)
+            present[idx] = np.asarray(slots[0][0]) > 0
+            mask |= present
+        merged = []
+        for k in range(n_slots):
+            slot = (cnt[k], s[k], s2[k])
+            if mm[k]:
+                slot = (*slot, mn[k], mx[k])
+            merged.append(slot)
+        return union, merged
+
     def prefetch_wave(self, shards, refine=None, agg=None) -> None:
         """Stage a wave's stacked buffers ahead of compute (no-op on host
         backends — there is nothing to upload)."""
@@ -415,6 +495,12 @@ class JaxBackend(ExecBackend):
         # once every FDb that primed it is gone.
         self._primed_fdbs: weakref.WeakSet = weakref.WeakSet()
         self._primed_refs: Dict[int, int] = {}
+        # per-FDb primed key sets (shared with that FDb's finalizer, so
+        # eager retirement can shrink them) + the latest primed snapshot
+        # per source name for streaming generation turnover
+        self._primed_keysets: "weakref.WeakKeyDictionary" = \
+            weakref.WeakKeyDictionary()
+        self._latest_primed: Dict[str, "weakref.ref"] = {}
         # id(track lat values) → (lat values pin, pts [4, P], rows [P]):
         # the packed integer form the refine kernel consumes, computed
         # once per shard at prime time (see exec.refine.pack_track_points)
@@ -587,17 +673,23 @@ class JaxBackend(ExecBackend):
         return out
 
     # ---------------------------------------------------- device residence
-    def _release_primed(self, keys) -> None:
-        """Finalizer: drop a dead FDb's buffer refs; evict at zero."""
+    def _release_primed(self, keys, retire: bool = False) -> None:
+        """Drop an FDb's buffer refs; evict at zero refcount.  Runs as
+        the per-FDb GC finalizer and, with ``retire=True``, as the eager
+        snapshot-turnover path (evictions then count on
+        ``device_cache.retired_buffers``)."""
         with self._prime_lock:
-            for key in keys:
+            gone = []
+            for key in list(keys):
                 n = self._primed_refs.get(key, 0) - 1
                 if n <= 0:
                     self._primed_refs.pop(key, None)
-                    self.device_cache.drop((key,))
+                    gone.append(key)
                     self._track_packs.pop(key, None)
                 else:
                     self._primed_refs[key] = n
+            if gone:
+                self.device_cache.drop(gone, retired=retire)
 
     def prime_fdb(self, db) -> int:
         """Put ``db``'s stable buffers on device once (idempotent per FDb):
@@ -646,8 +738,28 @@ class JaxBackend(ExecBackend):
             for key in keys:
                 self._primed_refs[key] = self._primed_refs.get(key, 0) + 1
             self._primed_fdbs.add(db)
-            weakref.finalize(db, self._release_primed, tuple(keys))
-            return len(self.device_cache) - before
+            # the finalizer shares this (mutable) key set: eager
+            # retirement below removes keys it already released, so the
+            # finalizer can never double-decrement them
+            self._primed_keysets[db] = keys
+            weakref.finalize(db, self._release_primed, keys)
+            uploaded = len(self.device_cache) - before
+            # eager snapshot turnover: priming a newer snapshot of the
+            # same source retires the replaced generation's *exclusive*
+            # buffers (its memtable-tail shard — sealed/delta shards are
+            # shared by identity and stay resident) right now, instead
+            # of waiting for the old snapshot's GC finalizer
+            prev_ref = self._latest_primed.get(db.name)
+            prev = prev_ref() if prev_ref is not None else None
+            self._latest_primed[db.name] = weakref.ref(db)
+            if prev is not None and prev is not db:
+                prev_keys = self._primed_keysets.get(prev)
+                if prev_keys:
+                    stale = prev_keys - keys
+                    if stale:
+                        prev_keys -= stale
+                        self._release_primed(stale, retire=True)
+            return uploaded
 
     # --------------------------------------------------------- track refine
     def _track_pack(self, batch, path: str, pin: bool = False):
@@ -1256,6 +1368,78 @@ class JaxBackend(ExecBackend):
                     self._refine_stack(shards, packs, refine.path)
         if agg is not None:
             self._agg_stacks(shards, agg, self._impl(), n_max)
+
+    # ---------------------------------------------------- partition layer
+    def partition_context(self, part: int, num_parts: int):
+        """Run one partition's dispatches device-local: partition p of P
+        pins its waves to exec-mesh device p mod D.  On a one-device host
+        (CPU CI's emulated mesh) there is nothing to pin — the no-op
+        keeps emulated P>1 runs byte-identical by construction."""
+        if num_parts <= 1:
+            return contextlib.nullcontext()
+        devs = self._jax.devices()
+        if len(devs) <= 1:
+            return contextlib.nullcontext()
+        return self._jax.default_device(devs[part % len(devs)])
+
+    def merge_partials(self, states, minmax=(), parts=None):
+        """One-launch device combine of the per-shard segment states:
+        align every state to the sorted union key space host-side, stack
+        ``[S, K, G]`` float64 planes (identity fill: 0 for
+        count/sum/sum_sq, ±inf for min/max, False for presence), then
+        dispatch ``ops.merge_partials`` under ``shard_map`` over the
+        ``"part"`` axis of ``launch.mesh.make_exec_mesh``.  The in-order
+        accumulation matches the numpy oracle bit for bit on the
+        emulated (size-1 axis) mesh — see ``kernels/merge.py`` for the
+        multi-device subtotal caveat — and the whole merge costs exactly
+        one recorded launch per query."""
+        from ..launch.mesh import make_exec_mesh
+
+        states = [(np.asarray(k), list(slots)) for k, slots in states]
+        live = [st for st in states if len(st[0]) and st[1]]
+        mesh = make_exec_mesh(len(parts) if parts else 0)
+        with self._jax.experimental.enable_x64():
+            if not live:
+                # nothing selected anywhere — still one combine launch,
+                # keeping the launch contract exact (cf. all-empty waves)
+                zero = np.zeros((1, 1, 0))
+                self._ops.merge_partials(
+                    zero.astype(np.int64), zero, zero, zero, zero,
+                    np.zeros((1, 0), bool), mesh=mesh, impl=self.impl)
+                return np.zeros(0, np.int64), []
+            union = np.unique(np.concatenate([k for k, _ in live]))
+            n_states = len(live)
+            n_slots = max(len(slots) for _, slots in live)
+            mm = tuple(minmax)
+            mm = mm + (False,) * (n_slots - len(mm))
+            g = union.size
+            cnt = np.zeros((n_states, n_slots, g), np.int64)
+            s = np.zeros((n_states, n_slots, g), np.float64)
+            s2 = np.zeros((n_states, n_slots, g), np.float64)
+            mn = np.full((n_states, n_slots, g), np.inf)
+            mx = np.full((n_states, n_slots, g), -np.inf)
+            msk = np.zeros((n_states, g), bool)
+            for si, (keys, slots) in enumerate(live):
+                idx = np.searchsorted(union, keys)
+                for k, st in enumerate(slots):
+                    cnt[si, k, idx] = np.asarray(st[0], np.int64)
+                    s[si, k, idx] = np.asarray(st[1], np.float64)
+                    s2[si, k, idx] = np.asarray(st[2], np.float64)
+                    if len(st) >= 5:
+                        mn[si, k, idx] = np.asarray(st[3], np.float64)
+                        mx[si, k, idx] = np.asarray(st[4], np.float64)
+                msk[si, idx] = np.asarray(slots[0][0]) > 0
+            out = self._ops.merge_partials(cnt, s, s2, mn, mx, msk,
+                                           mesh=mesh, impl=self.impl)
+            o_cnt, o_s, o_s2, o_mn, o_mx = \
+                [np.asarray(x) for x in out[:5]]
+        merged = []
+        for k in range(n_slots):
+            slot = (o_cnt[k].astype(np.int64), o_s[k], o_s2[k])
+            if mm[k]:
+                slot = (*slot, o_mn[k], o_mx[k])
+            merged.append(slot)
+        return union, merged
 
 
 # --------------------------------------------------------------------------

@@ -49,7 +49,8 @@ import numpy as np
 
 from ..core.exprs import CollectedTable, FieldRef
 from ..core.flow import AggregateOp, LimitOp, SortOp
-from ..core.planner import Plan
+from ..core.planner import (PartitionPlan, Plan, num_partitions,
+                            partition_shards)
 from ..fdb.fdb import FDb
 from ..fdb.index import mask_from_bitmap
 from .backend import as_backend
@@ -60,7 +61,8 @@ from .task import ShardPartial
 
 __all__ = ["DEFAULT_WAVE", "WAVE_ENV", "FUSED_ENV", "wave_size",
            "partition_waves", "fused_enabled", "FusedAggPlan",
-           "fused_agg_plan", "run_wave_task"]
+           "fused_agg_plan", "run_wave_task",
+           "merge_partition_partials", "resolve_partition_plan"]
 
 DEFAULT_WAVE = 8
 WAVE_ENV = "REPRO_EXEC_WAVE"
@@ -333,6 +335,7 @@ def run_wave_task(db: FDb, plan: Plan, sids: Sequence[int],
                                 rows_selected=n_cand, bytes_read=nbytes)
             uniq, slots = seg[i]
             part.agg = _fused_agg_finalize(fused_agg, uniq, slots)
+            part.seg = (uniq, slots)
             partials.append(part)
         io_each = (time.perf_counter() - t1) * 1e3 / len(live)
         cpu_each = (time.perf_counter() - t0) * 1e3 / len(live)
@@ -387,3 +390,74 @@ def run_wave_task(db: FDb, plan: Plan, sids: Sequence[int],
         part.io_ms = io_each
         part.cpu_ms = cpu_each
     return partials, failed
+
+
+def resolve_partition_plan(partitions, backend, plan: Plan,
+                           fault_plan: Optional[FaultPlan] = None,
+                           profile=None) -> PartitionPlan:
+    """Resolve P (engine arg > ``REPRO_EXEC_PARTITIONS`` > mesh size for
+    batched backends) and assign the plan's pruned shard list to P
+    contiguous partitions.  A partition whose FaultPlan check trips
+    (stage ``"partition"``) is drained *before* dispatch and its shards
+    rerouted across the surviving partitions
+    (``launch.elastic.reroute_partitions``, counted on ``profile.retries``)
+    — the partition-axis recovery path both engines share."""
+    p = num_partitions(partitions, backend)
+    pplan = partition_shards(plan.shard_ids, p)
+    if fault_plan is not None and pplan.num_partitions > 1:
+        failed = []
+        for pi in range(pplan.num_partitions):
+            try:
+                fault_plan.check("partition", pi)
+            except TaskFailure:
+                failed.append(pi)
+        if failed:
+            from ..launch.elastic import reroute_partitions
+
+            rerouted = reroute_partitions(pplan.parts, failed)
+            if rerouted != pplan.parts and profile is not None:
+                profile.retries += len(failed)
+            pplan = PartitionPlan(rerouted)
+    return pplan
+
+
+def merge_partition_partials(db: FDb, plan: Plan,
+                             partials: Sequence[ShardPartial],
+                             backend, pplan) -> Optional[AggPartial]:
+    """The partitioned Mixer combine: fold per-shard fused segment states
+    into ONE pre-merged ``AggPartial`` through ``backend.merge_partials``
+    (a single recorded combine launch).
+
+    Returns ``None`` when the combine doesn't apply and the caller should
+    keep the host ``merge_agg_partials`` fold — P=1 (the legacy sequential
+    path *is* the reference), non-aggregate plans, fused-agg-ineligible
+    plans, or any partial missing its raw ``seg`` state (e.g. a shard
+    recovered through the per-shard retry path).  The host fold is
+    partition-invariant anyway — engines sort partials back into shard-id
+    order first — so the fallback only costs the merge launch evidence,
+    never correctness.
+
+    ``partials`` must already be sorted by shard id: partitions are
+    contiguous shard slices, so shard-id order is exactly the states
+    order the sequential P=1 reference accumulates in.
+    """
+    if pplan is None or pplan.num_partitions <= 1:
+        return None
+    if not partials:
+        return None
+    if not (plan.mixer_ops and isinstance(plan.mixer_ops[0], AggregateOp)):
+        return None
+    if any(p.seg is None for p in partials):
+        return None
+    fused_agg = fused_agg_plan(plan, [db.shards[s] for s in plan.shard_ids])
+    if fused_agg is None:
+        return None
+    by_part = {sid: i for i, part in enumerate(pplan.parts)
+               for sid in part}
+    counts = [0] * pplan.num_partitions
+    for p in partials:
+        counts[by_part.get(p.shard_id, 0)] += 1
+    uniq, slots = backend.merge_partials([p.seg for p in partials],
+                                         minmax=fused_agg.minmax,
+                                         parts=counts)
+    return _fused_agg_finalize(fused_agg, uniq, slots)

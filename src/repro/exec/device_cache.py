@@ -68,6 +68,11 @@ class DeviceCache:
         self.hits = 0
         self.misses = 0
         self.keyed_hits = 0
+        #: buffers *eagerly* evicted on streaming snapshot turnover — a
+        #: replaced generation's exclusive buffers (its memtable-tail
+        #: shard) retired at re-prime time instead of waiting for the old
+        #: snapshot's GC finalizer (see ``JaxBackend.prime_fdb``)
+        self.retired_buffers = 0
 
     def __len__(self) -> int:
         with self._lock:
@@ -118,18 +123,25 @@ class DeviceCache:
                 self.keyed_hits += 1
             return hit
 
-    def drop(self, keys) -> None:
+    def drop(self, keys, retired: bool = False) -> int:
         """Evict entries by key id (used by per-FDb finalizers so buffers
         of a collected FDb do not stay pinned forever).  Derived keyed
-        entries referencing a dropped source id go with it."""
+        entries referencing a dropped source id go with it.  Returns the
+        number of buffers actually evicted; ``retired=True`` counts them
+        on ``retired_buffers`` (the eager snapshot-turnover path)."""
         dropped = set(keys)
+        evicted = 0
         with self._lock:
             for key in keys:
-                self._buffers.pop(key, None)
+                if self._buffers.pop(key, None) is not None:
+                    evicted += 1
             if self._keyed:
                 self._keyed = {
                     k: v for k, v in self._keyed.items()
                     if not any(isinstance(e, int) and e in dropped for e in k)}
+            if retired:
+                self.retired_buffers += evicted
+        return evicted
 
     def clear(self) -> None:
         with self._lock:
@@ -138,6 +150,7 @@ class DeviceCache:
             self.hits = 0
             self.misses = 0
             self.keyed_hits = 0
+            self.retired_buffers = 0
 
     def stats(self) -> Dict[str, int]:
         with self._lock:
@@ -145,4 +158,5 @@ class DeviceCache:
                     "nbytes": sum(a.nbytes
                                   for a, _ in self._buffers.values()),
                     "keyed": len(self._keyed), "hits": self.hits,
-                    "misses": self.misses, "keyed_hits": self.keyed_hits}
+                    "misses": self.misses, "keyed_hits": self.keyed_hits,
+                    "retired_buffers": self.retired_buffers}

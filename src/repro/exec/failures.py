@@ -58,6 +58,14 @@ class FaultPlan:
         if key in self.fail_always and n < self.reroute_after:
             raise TaskFailure(f"injected persistent failure: {key}")
 
+    def stages(self) -> Set[str]:
+        """Stages named anywhere in the schedule — engines use this to
+        tell a partition-axis-only plan (reroute before dispatch, waves
+        stay batched) from per-shard faults (per-shard task scheduling)."""
+        return ({s for s, _ in self.fail_once}
+                | {s for s, _ in self.fail_always}
+                | {s for s, _ in self.straggle})
+
     def attempts(self, stage: str, shard: int) -> int:
         with self._lock:
             return self._attempts.get((stage, shard), 0)

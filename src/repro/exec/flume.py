@@ -31,12 +31,13 @@ from typing import Dict, List, Optional, Set
 
 from ..core.exprs import CollectedTable, FieldRef
 from ..core.flow import AggregateOp, DistinctOp, Flow, JoinOp, LimitOp, SortOp
-from ..core.planner import Plan, plan_flow
+from ..core.planner import PartitionPlan, Plan, plan_flow
 from ..fdb.columnar import ColumnBatch
 from ..fdb.schema import Schema
 from .adhoc import QueryProfile, QueryResult
 from .backend import as_backend
-from .batched import partition_waves, run_wave_task, wave_size
+from .batched import (merge_partition_partials, partition_waves,
+                      resolve_partition_plan, run_wave_task, wave_size)
 from .catalog import Catalog, default_catalog
 from .failures import FaultPlan, TaskFailure
 from .processors import (aggregate_consume, aggregate_produce,
@@ -54,10 +55,14 @@ class FlumeEngine:
                  max_attempts: int = 4,
                  speculation: bool = True,
                  speculation_factor: float = 4.0,
-                 backend=None, wave: Optional[int] = None):
+                 backend=None, wave: Optional[int] = None,
+                 partitions: Optional[int] = None):
         self.catalog = catalog or default_catalog()
         self.backend = as_backend(backend)
         self.wave = wave_size(wave, self.backend)
+        # execution partitions ("which device runs which shards"):
+        # arg > $REPRO_EXEC_PARTITIONS > mesh size (batched backends)
+        self.partitions = partitions
         self.ckpt_dir = ckpt_dir or os.path.join(tempfile.gettempdir(),
                                                  "warpflume")
         self.max_workers = max_workers
@@ -98,18 +103,30 @@ class FlumeEngine:
         # per-shard tasks so retries, rerouting, and speculation stay at
         # the simulated machine-failure boundary.
         workers = min(self.max_workers, max(1, len(plan.shard_ids)))
+        # partition layer: resolve P and reroute partition-axis faults
+        # before dispatch (launch.elastic); a fault plan that *only*
+        # injects at the partition stage keeps the batched wave path —
+        # per-shard faults still force per-shard task scheduling so
+        # retries/speculation stay at the machine-failure boundary
+        pplan = resolve_partition_plan(self.partitions, self.backend,
+                                       plan, fault_plan, profile)
         wave_fn = None
-        if fault_plan is None:
-            wave_fn = lambda sids, nxt=None: run_wave_task(
-                db, plan, sids, tables, self.catalog, None,
-                stage="server", backend=self.backend, prefetch_sids=nxt)
+        if fault_plan is None or fault_plan.stages() <= {"partition"}:
+            def wave_fn(pi, sids, nxt=None):
+                with self.backend.partition_context(pi,
+                                                    pplan.num_partitions):
+                    return run_wave_task(
+                        db, plan, sids, tables, self.catalog, None,
+                        stage="server", backend=self.backend,
+                        prefetch_sids=nxt)
         partials = self._run_stage(
             stage="server", job_dir=job_dir, task_ids=plan.shard_ids,
             fn=lambda sid: run_shard_task(db, plan, sid, tables,
                                           self.catalog, fault_plan,
                                           stage="server",
                                           backend=self.backend),
-            workers=workers, profile=profile, wave_fn=wave_fn)
+            workers=workers, profile=profile, wave_fn=wave_fn,
+            pplan=pplan)
 
         # Stage 2 (Mixer): merge + finish — itself checkpointed.
         final_path = os.path.join(job_dir, "final.pkl")
@@ -118,7 +135,10 @@ class FlumeEngine:
                 batch = pickle.load(fh)
             self.stats["tasks_skipped"] += 1
         else:
-            batch = self._mixer(plan, partials)
+            batch = self._mixer(plan, partials,
+                                premerged=merge_partition_partials(
+                                    db, plan, partials, self.backend,
+                                    pplan))
             _atomic_pickle(batch, final_path)
         for p in partials:
             profile.rows_scanned += p.rows_scanned
@@ -133,7 +153,9 @@ class FlumeEngine:
     # --------------------------------------------------------------- stage
     def _run_stage(self, stage: str, job_dir: str, task_ids: List[int],
                    fn, workers: int, profile: QueryProfile,
-                   wave_fn=None) -> List[ShardPartial]:
+                   wave_fn=None,
+                   pplan: Optional[PartitionPlan] = None
+                   ) -> List[ShardPartial]:
         stage_dir = os.path.join(job_dir, stage)
         os.makedirs(stage_dir, exist_ok=True)
         results: Dict[int, ShardPartial] = {}
@@ -156,15 +178,22 @@ class FlumeEngine:
             # the failed wave's shards fall through to the per-shard
             # machinery below, which retries or raises loudly.
             remaining: List[int] = []
-            waves = partition_waves(todo, self.wave)
+            todo_set = set(todo)
+            parts = (pplan.parts if pplan is not None else [list(todo)])
+            # waves form *within* each partition (checkpointed shards
+            # drop out first); the successor hint stays partition-local
+            # so a fused backend prefetches onto that partition's device
+            subs = []
+            for pi, part in enumerate(parts):
+                pw = partition_waves(
+                    [sid for sid in part if sid in todo_set], self.wave)
+                for j, w in enumerate(pw):
+                    subs.append((pi, w, pw[j + 1] if j + 1 < len(pw)
+                                 else None))
             with ThreadPoolExecutor(
-                    max_workers=min(workers, len(waves))) as pool:
-                # successor hint: a fused backend prefetches wave k+1's
-                # buffers while wave k computes
-                futs = [(pool.submit(wave_fn, wave,
-                                     waves[i + 1] if i + 1 < len(waves)
-                                     else None), wave)
-                        for i, wave in enumerate(waves)]
+                    max_workers=min(workers, len(subs))) as pool:
+                futs = [(pool.submit(wave_fn, pi, wave, nxt), wave)
+                        for pi, wave, nxt in subs]
                 for fut, wave in futs:
                     try:
                         done, failed = fut.result()
@@ -252,12 +281,16 @@ class FlumeEngine:
         return [results[sid] for sid in task_ids if sid in results]
 
     # --------------------------------------------------------------- mixer
-    def _mixer(self, plan: Plan, partials: List[ShardPartial]) -> ColumnBatch:
+    def _mixer(self, plan: Plan, partials: List[ShardPartial],
+               premerged=None) -> ColumnBatch:
         mixer_ops = list(plan.mixer_ops)
         if mixer_ops and isinstance(mixer_ops[0], AggregateOp):
             spec = mixer_ops[0].spec
-            merged = merge_agg_partials(
-                [p.agg for p in partials if p.agg is not None], spec)
+            # ``premerged``: the partition layer's single-launch device
+            # combine (see batched.merge_partition_partials)
+            merged = premerged if premerged is not None else \
+                merge_agg_partials(
+                    [p.agg for p in partials if p.agg is not None], spec)
             batch = aggregate_consume(merged, spec)
             mixer_ops = mixer_ops[1:]
         else:

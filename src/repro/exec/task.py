@@ -46,6 +46,12 @@ class ShardPartial:
     bytes_read: int = 0
     cpu_ms: float = 0.0
     io_ms: float = 0.0
+    #: raw fused segment-aggregate state ``(uniq_keys, slots)`` for the
+    #: partition layer's ``merge_partials`` combine; only the fused
+    #: gather-free agg path fills it (``None`` elsewhere, including the
+    #: per-shard retry path — the engines then fall back to the host
+    #: AggPartial merge, which is partition-invariant by construction).
+    seg: Optional[tuple] = None
 
 
 def run_shard_task(db: FDb, plan: Plan, shard_id: int,

@@ -35,6 +35,7 @@ from . import bitset as _bitset
 from . import compact as _compact
 from . import flash_attention as _fa
 from . import fused as _fused
+from . import merge as _merge
 from . import ref as _ref
 from . import refine as _refine
 from . import segment_agg as _seg
@@ -45,6 +46,7 @@ __all__ = ["default_impl", "bitmap_binary", "bitmap_intersect",
            "segment_agg", "refine_tracks", "refine_tracks_batched",
            "refine_tracks_multi",
            "run_wave_fused", "run_wave_fused_multi", "postings_bitmap",
+           "merge_partials",
            "flash_attention", "ssm_scan",
            "launch_counts", "reset_launch_counts", "record_launch"]
 
@@ -275,6 +277,21 @@ def postings_bitmap(ids, t_min, t_max, t0, t1, n_docs: int,
     _resolve(impl)                    # validate; lowering is impl-agnostic
     record_launch("postings_bitmap")
     return _fused.postings_bitmap(ids, t_min, t_max, t0, t1, n_docs)
+
+
+def merge_partials(cnt, s, s2, mn, mx, msk, mesh=None,
+                   impl: Optional[str] = None):
+    """Cross-partition combine of aligned segment-aggregate state stacks
+    (counts/sums/sum-squares accumulate in states order, min/max planes
+    element-wise, presence masks OR) under ``shard_map`` over the mesh's
+    ``"part"`` axis.  Like the Mixer's host merge this always runs in
+    float64, so the lowering is impl-agnostic — but it still counts one
+    launch: the partitioned launch contract is sum over partitions of
+    ceil(shards_p/wave) fused dispatches plus exactly one merge combine
+    per aggregated query."""
+    _resolve(impl)                    # validate; lowering is impl-agnostic
+    record_launch("merge_partials")
+    return _merge.merge_partials(cnt, s, s2, mn, mx, msk, mesh=mesh)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window=None,

@@ -10,7 +10,8 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh"]
+__all__ = ["make_production_mesh", "make_local_mesh",
+           "make_exec_mesh", "default_exec_partitions"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -26,3 +27,23 @@ def make_local_mesh(data: int = 1, model: int = 1):
     data = min(data, n)
     model = min(model, max(n // data, 1))
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_exec_mesh(partitions: int = 0):
+    """1-D ``"part"`` mesh for partitioned query execution.
+
+    The axis spans ``min(partitions, len(jax.devices()))`` devices — on a
+    one-device CPU host a P>1 query is *emulated*: the merge combine still
+    runs under ``shard_map`` over this axis (size 1), so the partition
+    code path and its launch/parity contracts never depend on the real
+    device count.
+    """
+    n = len(jax.devices())
+    size = min(max(1, int(partitions)) or n, n) if partitions else n
+    return jax.make_mesh((max(size, 1),), ("part",))
+
+
+def default_exec_partitions() -> int:
+    """Mesh-derived default for ``core.planner.num_partitions``: one
+    partition per available device."""
+    return max(1, len(jax.devices()))

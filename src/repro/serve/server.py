@@ -60,7 +60,8 @@ from ..core.flow import AggregateOp, Flow, JoinOp
 from ..core.planner import Plan, plan_flow
 from ..exec.adhoc import AdHocEngine, QueryProfile, QueryResult
 from ..exec.backend import ExecBackend
-from ..exec.batched import fused_enabled, partition_waves
+from ..exec.batched import (fused_enabled, partition_waves,
+                            resolve_partition_plan)
 from ..exec.processors import aggregate_produce_batched, run_record_ops
 from ..exec.task import ShardPartial
 from ..fdb.index import mask_from_bitmap
@@ -346,7 +347,21 @@ class QueryServer:
             else engine.catalog.get(plans[0].source)
         backend.prime_fdb(db)
         shard_ids = list(plans[0].shard_ids)
-        waves = partition_waves(shard_ids, engine.wave)
+        # the coalesced dispatch rides the same partition layer as the
+        # single-query engines: waves form *within* each partition and
+        # dispatch under its partition context, so Q coalesced queries
+        # cost sum over partitions of ceil(shards_p/wave) multi
+        # dispatches.  The per-query tails below gather host-side, so
+        # this path keeps the host AggPartial merge (partition-invariant
+        # — partials are assembled in shard-id order per query).
+        pplan = resolve_partition_plan(getattr(engine, "partitions", None),
+                                       backend, plans[0])
+        subs = []
+        for pi, part in enumerate(pplan.parts):
+            pw = partition_waves(part, engine.wave)
+            for j, w in enumerate(pw):
+                subs.append((pi, w, pw[j + 1] if j + 1 < len(pw)
+                             else None))
         refines = [pl.refines[0] if pl.refines else None for pl in plans]
         grant = engine.catalog.resources.acquire(
             min(max(len(shard_ids), 1), engine.num_servers))
@@ -368,21 +383,22 @@ class QueryServer:
         tail_futs = []
         try:
             with ThreadPoolExecutor(max_workers=grant) as pool:
-                for wi, wave_sids in enumerate(waves):
+                for pi, wave_sids, nxt in subs:
                     shards = [db.shards[s] for s in wave_sids]
                     probes_multi = [
                         [self._probe_bitmaps(db, pl, sid, sh)
                          for sid, sh in zip(wave_sids, shards)]
                         for pl in plans]
-                    pre = ([db.shards[s] for s in waves[wi + 1]]
-                           if wi + 1 < len(waves) else None)
+                    pre = [db.shards[s] for s in nxt] if nxt else None
                     out = None
                     if fused_enabled() and getattr(backend,
                                                    "batched_dispatch",
                                                    False):
-                        out = backend.run_wave_fused_multi(
-                            shards, probes_multi, refines,
-                            prefetch_shards=pre)
+                        with backend.partition_context(
+                                pi, pplan.num_partitions):
+                            out = backend.run_wave_fused_multi(
+                                shards, probes_multi, refines,
+                                prefetch_shards=pre)
                     if out is None:
                         out = [self._select_wave(backend, shards, probes,
                                                  rf)

@@ -11,6 +11,21 @@ from repro.fdb.schema import Field
 from repro.exec import Catalog, AdHocEngine
 
 
+@pytest.fixture
+def exec_pplan():
+    """Partition-aware launch-contract arithmetic: the PartitionPlan the
+    engine resolves for ``n_shards`` (pruned) shards under the env-resolved
+    partition count — the ``REPRO_EXEC_PARTITIONS=2`` CI leg changes the
+    expected dispatch counts, so contracts must compute them through the
+    same ``PartitionPlan`` helpers the scheduler uses."""
+    from repro.core.planner import num_partitions, partition_shards
+
+    def _pp(n_shards, backend=None):
+        return partition_shards(range(int(n_shards)),
+                                num_partitions(backend=backend))
+    return _pp
+
+
 @pytest.fixture(scope="session")
 def world():
     """Deterministic mini world: roads + speed observations (paper §6)."""

@@ -217,10 +217,13 @@ def test_flume_wave_path_parity(ragged_catalog, tmp_path):
 
 # ------------------------------------------------- launch-count contract
 
-def test_launch_count_is_ceil_shards_over_wave(ragged_catalog, monkeypatch):
-    """Per query the jax path dispatches ⌈shards/wave⌉ stacked launches
-    per primitive — not one per shard.  Pinned to the legacy per-primitive
-    path; the fused single-dispatch contract is in tests/test_fused.py."""
+def test_launch_count_is_ceil_shards_over_wave(ragged_catalog, exec_pplan,
+                                               monkeypatch):
+    """Per query the jax path dispatches ⌈shards_p/wave⌉ stacked launches
+    per primitive per partition — not one per shard.  Pinned to the legacy
+    per-primitive path; the fused single-dispatch contract is in
+    tests/test_fused.py (the legacy path carries no raw segment states, so
+    no merge combine fires at any P)."""
     monkeypatch.setenv("REPRO_EXEC_FUSED", "0")
     db = ragged_catalog.get("Ragged")
     n_shards = db.num_shards
@@ -233,7 +236,7 @@ def test_launch_count_is_ceil_shards_over_wave(ragged_catalog, monkeypatch):
     ops.reset_launch_counts()
     eng.collect(q)
     lc = ops.launch_counts()
-    waves = math.ceil(n_shards / wave)
+    waves = exec_pplan(n_shards, eng.backend).wave_dispatches(wave)
     assert lc.get("bitmap_intersect_batched") == waves
     assert lc.get("compact_batched") == waves            # selection compact
     assert lc.get("segment_agg") == waves                # one value column

@@ -210,20 +210,23 @@ def test_run_wave_fused_minmax_parity(dense_catalog, dense_db, impl):
     _assert_fused_equal(want, got, exact=impl == "reference")
 
 
-def test_fused_launch_contract_minmax(dense_catalog, dense_db,
+def test_fused_launch_contract_minmax(dense_catalog, dense_db, exec_pplan,
                                       monkeypatch):
     monkeypatch.setenv(FUSED_ENV, "1")
     """A min/max group-by no longer declines fusion: whole query in
-    ⌈shards/wave⌉ fused dispatches, result identical to the numpy host
-    path."""
+    ⌈shards_p/wave⌉ fused dispatches per partition (+ one merge combine
+    when P>1), result identical to the numpy host path."""
     a = AdHocEngine(dense_catalog, num_servers=2, backend="numpy",
                     wave=3).collect(MINMAX_FLOW)
     eng = AdHocEngine(dense_catalog, num_servers=2, backend="jax", wave=3)
     eng.collect(MINMAX_FLOW)                   # warm
     ops.reset_launch_counts()
     b = eng.collect(MINMAX_FLOW)
-    waves = math.ceil(dense_db.num_shards / 3)
-    assert dict(ops.launch_counts()) == {"run_wave_fused": waves}
+    pp = exec_pplan(dense_db.num_shards, eng.backend)
+    want = {"run_wave_fused": pp.wave_dispatches(3)}
+    if pp.merge_combines():
+        want["merge_partials"] = pp.merge_combines()
+    assert dict(ops.launch_counts()) == want
     assert_identical(a.batch, b.batch)
 
 
@@ -291,10 +294,12 @@ def test_run_wave_fused_declines_to_legacy_path(walks_db):
 
 # ------------------------------------------------- engine launch contract
 
-def test_fused_launch_contract_agg(dense_catalog, dense_db, monkeypatch):
+def test_fused_launch_contract_agg(dense_catalog, dense_db, exec_pplan,
+                                   monkeypatch):
     monkeypatch.setenv(FUSED_ENV, "1")   # fused on even on the fused=0 CI leg
     """One fused dispatch per wave is the WHOLE query: launch counts are
-    exactly {run_wave_fused: ⌈shards/wave⌉} — no per-primitive launches."""
+    exactly {run_wave_fused: Σ_p ⌈shards_p/wave⌉} plus one merge combine
+    when P>1 — no per-primitive launches."""
     for wave in (3, 1):                        # wave=1 covers empty waves
         eng = AdHocEngine(dense_catalog, num_servers=2, backend="jax",
                           wave=wave)
@@ -302,16 +307,20 @@ def test_fused_launch_contract_agg(dense_catalog, dense_db, monkeypatch):
         ops.reset_launch_counts()
         res = eng.collect(AGG_FLOW)
         assert res.batch.n > 0
-        waves = math.ceil(dense_db.num_shards / wave)
-        assert dict(ops.launch_counts()) == {"run_wave_fused": waves}
+        pp = exec_pplan(dense_db.num_shards, eng.backend)
+        want = {"run_wave_fused": pp.wave_dispatches(wave)}
+        if pp.merge_combines():
+            want["merge_partials"] = pp.merge_combines()
+        assert dict(ops.launch_counts()) == want
 
 
 @pytest.mark.tesseract
-def test_fused_launch_contract_refine(walks_catalog, walks_db,
+def test_fused_launch_contract_refine(walks_catalog, walks_db, exec_pplan,
                                       monkeypatch):
     monkeypatch.setenv(FUSED_ENV, "1")
     """Tesseract selection rides the same single dispatch: zero batched
-    per-primitive refine/compact launches."""
+    per-primitive refine/compact launches (and no merge combine — the
+    selection path concatenates, it doesn't aggregate)."""
     flow = fdb("FusedWalks").tesseract(_tess(np.random.default_rng(11)))
     wave = 3
     eng = AdHocEngine(walks_catalog, num_servers=2, backend="jax",
@@ -320,8 +329,10 @@ def test_fused_launch_contract_refine(walks_catalog, walks_db,
     ops.reset_launch_counts()
     eng.collect(flow)
     lc = ops.launch_counts()
-    waves = math.ceil(walks_db.num_shards / wave)
+    waves = exec_pplan(walks_db.num_shards,
+                       eng.backend).wave_dispatches(wave)
     assert lc.get("run_wave_fused") == waves
+    assert lc.get("merge_partials", 0) == 0
     assert lc.get("bitmap_intersect_batched", 0) == 0
     assert lc.get("refine_tracks_batched", 0) == 0
     assert lc.get("refine_tracks", 0) == 0
@@ -348,11 +359,15 @@ def test_fused_env_kill_switch(dense_catalog, monkeypatch):
 # ----------------------------------------------- prefetch + keyed caching
 
 def test_prefetch_stages_next_wave_before_wave_done(dense_catalog,
-                                                    monkeypatch):
+                                                    monkeypatch,
+                                                    exec_pplan):
     monkeypatch.setenv(FUSED_ENV, "1")
     """The fused dispatch hands wave k+1's buffers to the device while
     wave k computes: a ("prefetch", n) trace marker lands before wave k's
-    ("wave_done", ...) marker, for every non-final wave."""
+    ("wave_done", ...) marker, for every non-final wave.  Prefetch runs
+    within each execution partition, so the expected counts follow the
+    PartitionPlan: Σ_p waves_p dispatches, Σ_p max(waves_p − 1, 0)
+    prefetches (a single-wave partition stages nothing ahead)."""
     be = JaxBackend()
     be.prime_fdb(dense_catalog.get("FusedAgg"))
     eng = AdHocEngine(dense_catalog, num_servers=1, backend=be, wave=3)
@@ -362,11 +377,13 @@ def test_prefetch_stages_next_wave_before_wave_done(dense_catalog,
     ev = be.trace_events
     be.trace_events = None
     kinds = [e[0] for e in ev]
-    waves = math.ceil(dense_catalog.get("FusedAgg").num_shards / 3)
-    assert kinds.count("wave_done") == waves
-    assert kinds.count("prefetch") == waves - 1
+    pp = exec_pplan(dense_catalog.get("FusedAgg").num_shards, be)
+    part_waves = [math.ceil(s / 3) for s in pp.sizes() if s]
+    assert kinds.count("wave_done") == sum(part_waves)
+    assert kinds.count("prefetch") == sum(w - 1 for w in part_waves)
     # wave k's prefetch-of-(k+1) precedes wave k's own completion marker
-    assert kinds[0] == "prefetch" and kinds[1] == "wave_done"
+    if part_waves and part_waves[0] > 1:
+        assert kinds[0] == "prefetch" and kinds[1] == "wave_done"
     for i, e in enumerate(ev):
         if e[0] == "prefetch":
             assert ev[i + 1][0] == "wave_done"

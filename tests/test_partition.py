@@ -1,0 +1,501 @@
+"""Partition layer (explicit shards → P partitions): `PartitionPlan`
+arithmetic, the `merge_partials` backend op (numpy loop-over-partitions
+oracle vs the jax shard_map combine, bit for bit), P=1/2/4 result
+identity on both backends and engines — selection byte-identical,
+aggregation float64-reference-identical — empty partitions, ragged
+shard counts, all-pruned partitions, the ordered first-hit path,
+partition-axis fault rerouting, the partitioned serve tier, and eager
+device-buffer retirement on streaming snapshot turnover."""
+import math
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core import BETWEEN, P, group, fdb
+from repro.core.planner import (PARTITIONS_ENV, PartitionPlan,
+                                num_partitions, partition_shards, plan_flow)
+from repro.exec import (AdHocEngine, Catalog, FaultPlan, FlumeEngine,
+                        JaxBackend, get_backend)
+from repro.exec.batched import FUSED_ENV
+from repro.fdb import DOUBLE, INT, Schema, build_fdb
+from repro.fdb.schema import Field, MESSAGE
+from repro.fdb.streaming import StreamingFDb
+from repro.geo import AreaTree, mercator as M
+from repro.kernels import ops
+from repro.launch.elastic import reroute_partitions
+from repro.launch.mesh import default_exec_partitions
+from repro.serve import QueryServer
+from repro.tess import Tesseract
+
+RNG = np.random.default_rng(17)
+SIZES = [16, 15, 32, 33, 1, 0, 9]          # ragged + an empty shard
+DAY = 86400.0
+
+
+# --------------------------------------------------------------- fixtures
+
+def _dense_db(name="PartDense"):
+    schema = Schema(name, [
+        Field("road", INT, indexes=("tag",)),
+        Field("hour", INT, indexes=("range",)),
+        Field("speed", DOUBLE),
+    ])
+    bounds = np.cumsum([0] + SIZES)
+    recs = [{"road": int(RNG.integers(0, 8)),
+             "hour": int(RNG.integers(0, 24)),
+             "speed": float(RNG.normal(48, 9)),
+             "_i": i}
+            for i in range(sum(SIZES))]
+    key = lambda r: int(np.searchsorted(bounds, r["_i"], "right") - 1)
+    db = build_fdb(name, schema, recs, num_shards=len(SIZES),
+                   shard_key=key)
+    assert [s.n for s in db.shards] == SIZES
+    return db
+
+
+def _track_schema(name):
+    return Schema(name, [
+        Field("id", INT, indexes=("tag",)),
+        Field("track", MESSAGE, fields=[
+            Field("lat", DOUBLE, repeated=True),
+            Field("lng", DOUBLE, repeated=True),
+            Field("t", DOUBLE, repeated=True)],
+            indexes=("spacetime",),
+            index_params={"level": 6, "bucket_s": 900.0, "epoch": 0.0}),
+    ])
+
+
+def _walks_db(name="PartWalks", n=64, sizes=(16, 15, 0, 33)):
+    rng = np.random.default_rng(5)
+    recs = []
+    for i in range(sum(sizes)):
+        ln = 0 if i % 9 == 0 else int(rng.integers(1, 12))
+        recs.append({"id": i, "track": {
+            "lat": rng.uniform(37.2, 38.0, ln).tolist(),
+            "lng": rng.uniform(-122.6, -121.8, ln).tolist(),
+            "t": np.sort(rng.uniform(0.0, 2 * DAY, ln)).tolist()}})
+    bounds = np.cumsum([0] + list(sizes))
+    key = lambda r: int(np.searchsorted(bounds, r["id"], "right") - 1)
+    return build_fdb(name, _track_schema(name), recs,
+                     num_shards=len(sizes), shard_key=key)
+
+
+def _region(rng, d=2_500_000):
+    ix, iy = M.latlng_to_xy(rng.uniform(37.3, 37.9),
+                            rng.uniform(-122.5, -121.9))
+    return AreaTree.from_box(int(ix) - d, int(iy) - d,
+                             int(ix) + d, int(iy) + d, max_level=7)
+
+
+@pytest.fixture(scope="module")
+def dense_db():
+    return _dense_db()
+
+
+@pytest.fixture(scope="module")
+def dense_catalog(dense_db):
+    cat = Catalog(server_slots=16)
+    cat.register(dense_db)
+    return cat
+
+
+@pytest.fixture(scope="module")
+def walks_db():
+    return _walks_db()
+
+
+@pytest.fixture(scope="module")
+def walks_catalog(walks_db):
+    cat = Catalog(server_slots=16)
+    cat.register(walks_db)
+    return cat
+
+
+#: every fused aggregate kind in one spec — the merge must carry
+#: (n, Σ, Σ²) and the min/max planes through the combine
+ALL_AGG = (fdb("PartDense").find(BETWEEN(P.hour, 7, 18))
+           .aggregate(group(P.road).count("n").sum(s=P.speed)
+                      .avg(a=P.speed).std_dev(sd=P.speed)
+                      .min(lo=P.speed).max(hi=P.speed)))
+
+SELECT = fdb("PartDense").find(BETWEEN(P.hour, 7, 18))
+
+
+def assert_identical(a, b):
+    assert a.n == b.n
+    assert a.paths() == b.paths()
+    for p in a.paths():
+        ca, cb = a[p], b[p]
+        assert ca.values.dtype == cb.values.dtype, p
+        assert np.array_equal(ca.values, cb.values), p
+        assert ca.vocab == cb.vocab, p
+
+
+# ------------------------------------------------------ plan arithmetic
+
+def test_partition_shards_contiguous_and_balanced():
+    pp = partition_shards(range(7), 3)
+    assert pp.parts == [[0, 1, 2], [3, 4], [5, 6]]   # contiguous, ±1
+    assert [s for part in pp.parts for s in part] == list(range(7))
+    assert pp.sizes() == [3, 2, 2]
+    # P > shards: tail partitions are empty, shard order preserved
+    pp = partition_shards([4, 9], 4)
+    assert pp.parts == [[4], [9], [], []]
+    assert partition_shards([], 3).parts == [[], [], []]
+    assert partition_shards(range(5), 1).parts == [list(range(5))]
+
+
+def test_partition_plan_launch_helpers():
+    pp = PartitionPlan([[0, 1, 2, 3], [4, 5, 6]])
+    assert pp.wave_dispatches(3) == 2 + 1            # ⌈4/3⌉ + ⌈3/3⌉
+    assert pp.wave_dispatches(1) == 7
+    assert pp.merge_combines() == 1
+    # empty partitions dispatch nothing; one live partition needs no merge
+    assert PartitionPlan([[0], [], []]).wave_dispatches(3) == 1
+    assert PartitionPlan([[0], [], []]).merge_combines() == 0
+    assert PartitionPlan([[], [], []]).wave_dispatches(3) == 0
+    assert PartitionPlan([[], [], []]).merge_combines() == 0
+    assert PartitionPlan([list(range(5))]).merge_combines() == 0
+
+
+def test_num_partitions_resolution(monkeypatch):
+    monkeypatch.delenv(PARTITIONS_ENV, raising=False)
+    assert num_partitions(3) == 3                    # engine arg wins
+    assert num_partitions() == 1
+    assert num_partitions(backend=get_backend("numpy")) == 1
+    # batched backends fall back to the accelerator mesh size
+    assert num_partitions(backend=get_backend("jax")) == \
+        default_exec_partitions()
+    monkeypatch.setenv(PARTITIONS_ENV, "4")
+    assert num_partitions() == 4                     # env beats mesh
+    assert num_partitions(2) == 2                    # … but not the arg
+
+
+def test_reroute_partitions_round_robin():
+    parts = [[0, 1], [2, 3], [4]]
+    out = reroute_partitions(parts, [1])
+    assert out == [[0, 1, 2], [], [4, 3]]            # orphans round-robin
+    assert sorted(s for p in out for s in p) == list(range(5))
+    assert out[1] == []                              # failed slot drained
+    assert len(out) == len(parts)                    # slot count preserved
+    # no survivors: keep the assignment, per-shard retries take over
+    assert reroute_partitions(parts, [0, 1, 2]) == parts
+
+
+# -------------------------------------------- merge op: oracle vs device
+
+def _state(keys, *slots):
+    return (np.asarray(keys, np.int64),
+            [tuple(np.asarray(a, np.float64) if i else
+                   np.asarray(a, np.int64) for i, a in enumerate(slot))
+             for slot in slots])
+
+
+def test_merge_partials_matches_hand_oracle():
+    """Disjoint + overlapping key spaces, an empty state, two value slots
+    (one with min/max planes): the numpy base-class merge equals the hand
+    reduction and the jax shard_map combine equals it bit for bit."""
+    # slot layout: (count, sum, sum_sq[, min, max]) per group
+    a = _state([1, 3],
+               ([2, 1], [4.0, 5.0], [10.0, 25.0]),
+               ([2, 1], [1.0, 2.0], [0.5, 4.0], [0.25, 2.0], [0.75, 2.0]))
+    b = _state([3, 7],
+               ([1, 4], [3.0, 8.0], [9.0, 20.0]),
+               ([1, 4], [5.0, 3.0], [25.0, 2.25], [5.0, 0.5], [5.0, 1.0]))
+    empty = _state([])
+    states = [a, empty, b]
+    npb = get_backend("numpy")
+    uniq, slots = npb.merge_partials(states, minmax=(False, True),
+                                    parts=[2, 1])
+    assert uniq.tolist() == [1, 3, 7]
+    cnt0, s0, s20 = slots[0][:3]
+    assert cnt0.tolist() == [2, 1 + 1, 4]
+    assert s0.tolist() == [4.0, 5.0 + 3.0, 8.0]
+    assert s20.tolist() == [10.0, 25.0 + 9.0, 20.0]
+    cnt1, s1, s21, mn1, mx1 = slots[1]
+    assert cnt1.tolist() == [2, 2, 4]
+    assert mn1.tolist() == [0.25, 2.0, 0.5]          # min plane element-wise
+    assert mx1.tolist() == [0.75, 5.0, 1.0]          # max plane element-wise
+    jxb = JaxBackend()
+    juniq, jslots = jxb.merge_partials(states, minmax=(False, True),
+                                       parts=[2, 1])
+    assert np.array_equal(juniq, uniq)
+    assert len(jslots) == len(slots)
+    for ws, gs in zip(slots, jslots):
+        assert len(gs) == len(ws)
+        for wa, ga in zip(ws, gs):
+            assert np.array_equal(np.asarray(ga), np.asarray(wa))
+
+
+def test_merge_partials_all_empty_states():
+    """All-pruned / nothing-selected partitions: the combine degenerates
+    cleanly to an empty key space on both backends."""
+    states = [_state([]), _state([])]
+    for be in (get_backend("numpy"), JaxBackend()):
+        uniq, slots = be.merge_partials(states, minmax=(), parts=[1, 1])
+        assert uniq.size == 0 and slots == []
+
+
+# ------------------------------------- engine identity across P = 1/2/4
+
+@pytest.mark.parametrize("bname", ["numpy", "jax"])
+def test_adhoc_agg_identical_across_partitions(dense_catalog, bname,
+                                               monkeypatch):
+    monkeypatch.setenv(FUSED_ENV, "1")
+    ref = AdHocEngine(dense_catalog, num_servers=2, backend=bname,
+                      wave=3, partitions=1).collect(ALL_AGG)
+    for p in (2, 4):
+        got = AdHocEngine(dense_catalog, num_servers=2, backend=bname,
+                          wave=3, partitions=p).collect(ALL_AGG)
+        assert_identical(ref.batch, got.batch)
+    assert ref.batch.n > 0
+
+
+@pytest.mark.parametrize("bname", ["numpy", "jax"])
+def test_adhoc_selection_identical_across_partitions(dense_catalog, bname):
+    ref = AdHocEngine(dense_catalog, num_servers=2, backend=bname,
+                      wave=3, partitions=1).collect(SELECT)
+    for p in (2, 4):
+        got = AdHocEngine(dense_catalog, num_servers=2, backend=bname,
+                          wave=3, partitions=p).collect(SELECT)
+        assert_identical(ref.batch, got.batch)     # byte-identical rows
+    assert ref.batch.n > 0
+
+
+@pytest.mark.parametrize("bname", ["numpy", "jax"])
+def test_flume_identical_across_partitions(dense_catalog, bname,
+                                           monkeypatch):
+    monkeypatch.setenv(FUSED_ENV, "1")
+    ref = AdHocEngine(dense_catalog, num_servers=2, backend=bname,
+                      wave=3, partitions=1).collect(ALL_AGG)
+    for p in (2, 4):
+        fl = FlumeEngine(dense_catalog, ckpt_dir=tempfile.mkdtemp(),
+                         max_workers=4, backend=bname, wave=3,
+                         partitions=p)
+        assert_identical(ref.batch, fl.collect(ALL_AGG).batch)
+
+
+# ------------------------------------------------------- launch contract
+
+def test_partitioned_launch_contract(dense_catalog, dense_db, monkeypatch):
+    """⌈shards_p/wave⌉ fused dispatches per partition + exactly one merge
+    combine per query at P>1; the P=1 path keeps the legacy contract (no
+    combine launch — the sequential host merge IS the reference)."""
+    monkeypatch.setenv(FUSED_ENV, "1")
+    for p, want_waves in ((1, math.ceil(7 / 3)),      # [7] → 3
+                          (2, 2 + 1),                 # [4, 3] → ⌈4/3⌉+⌈3/3⌉
+                          (4, 4)):                    # [2,2,2,1] → 1+1+1+1
+        eng = AdHocEngine(dense_catalog, num_servers=2, backend="jax",
+                          wave=3, partitions=p)
+        eng.collect(ALL_AGG)                          # warm
+        ops.reset_launch_counts()
+        eng.collect(ALL_AGG)
+        pp = partition_shards(range(dense_db.num_shards), p)
+        assert pp.wave_dispatches(3) == want_waves
+        want = {"run_wave_fused": want_waves}
+        if p > 1:
+            assert pp.merge_combines() == 1
+            want["merge_partials"] = 1
+        assert dict(ops.launch_counts()) == want, p
+
+
+def test_empty_partitions_more_partitions_than_shards(monkeypatch):
+    """P > shard count: tail partitions are empty, dispatch nothing, and
+    results stay identical."""
+    monkeypatch.setenv(FUSED_ENV, "1")
+    schema = Schema("PartTiny", [
+        Field("road", INT, indexes=("tag",)),
+        Field("hour", INT, indexes=("range",)),
+        Field("speed", DOUBLE),
+    ])
+    recs = [{"road": int(i % 5), "hour": int(i % 24),
+             "speed": float(i) * 0.5, "_i": i} for i in range(20)]
+    tiny = build_fdb("PartTiny", schema, recs, num_shards=2,
+                     shard_key=lambda r: 0 if r["_i"] < 11 else 1)
+    cat = Catalog(server_slots=8)
+    cat.register(tiny)
+    flow = (fdb("PartTiny").find(BETWEEN(P.hour, 0, 23))
+            .aggregate(group(P.road).count("n").sum(s=P.speed)))
+    ref = AdHocEngine(cat, num_servers=2, backend="jax", wave=3,
+                      partitions=1).collect(flow)
+    eng = AdHocEngine(cat, num_servers=2, backend="jax", wave=3,
+                      partitions=4)
+    eng.collect(flow)                                 # warm
+    ops.reset_launch_counts()
+    got = eng.collect(flow)
+    assert_identical(ref.batch, got.batch)
+    # [1], [1], [], [] → two dispatches, one combine
+    assert dict(ops.launch_counts()) == {"run_wave_fused": 2,
+                                         "merge_partials": 1}
+
+
+# ------------------------------------------- pruning × partitions
+
+def _banded_stream(name, n=48, flush=12):
+    """Time-sorted ingestion ⇒ disjoint per-shard time bands (pruned)."""
+    rng = np.random.default_rng(11)
+    s = StreamingFDb(name, _track_schema(name), flush_threshold=flush,
+                     compact_threshold=0)
+    span = 2 * DAY
+    for i in range(n):
+        t0 = span * i / n
+        ln = 5
+        s.append({"id": i, "track": {
+            "lat": rng.uniform(37.6, 37.9, ln).tolist(),
+            "lng": rng.uniform(-122.5, -122.2, ln).tolist(),
+            "t": (t0 + np.arange(ln) * 60.0).tolist()}})
+    s.flush()
+    return s
+
+
+def _bay_region():
+    ix, iy = M.latlng_to_xy(37.75, -122.35)
+    d = 4_000_000
+    return AreaTree.from_box(int(ix) - d, int(iy) - d,
+                             int(ix) + d, int(iy) + d, max_level=7)
+
+
+@pytest.mark.tesseract
+def test_all_pruned_partitions(monkeypatch):
+    """Pruning runs BEFORE partitioning: a window misses every shard →
+    every partition is empty, zero dispatches, empty result; a window
+    keeping fewer shards than P leaves trailing partitions empty."""
+    monkeypatch.setenv(FUSED_ENV, "1")
+    s = _banded_stream("PartPrune")
+    cat = Catalog()
+    cat.register(s)
+    # all pruned: window far beyond the data's 2-day span
+    none = fdb("PartPrune").tesseract(
+        Tesseract(_bay_region(), 10 * DAY, 11 * DAY))
+    assert plan_flow(none, cat).shard_ids == []
+    for bname in ("numpy", "jax"):
+        eng = AdHocEngine(cat, num_servers=2, backend=bname, wave=3,
+                          partitions=4)
+        assert eng.collect(none).batch.n == 0
+    # partial prune, kept < P: results identical to the P=1 reference
+    some = fdb("PartPrune").tesseract(
+        Tesseract(_bay_region(), 0.0, 0.4 * DAY))
+    kept = len(plan_flow(some, cat).shard_ids)
+    assert 0 < kept < cat.get("PartPrune").num_shards
+    for bname in ("numpy", "jax"):
+        ref = AdHocEngine(cat, num_servers=2, backend=bname, wave=3,
+                          partitions=1).collect(some)
+        got = AdHocEngine(cat, num_servers=2, backend=bname, wave=3,
+                          partitions=max(4, kept + 1)).collect(some)
+        assert_identical(ref.batch, got.batch)
+        assert ref.batch.n > 0
+
+
+# ------------------------------------------- ordered first-hit path
+
+@pytest.mark.tesseract
+def test_ordered_first_hit_identical_across_partitions(walks_catalog):
+    """The ordered Tesseract path (first-hit table + ordering edges) is a
+    selection — partitioned runs must stay byte-identical at any P."""
+    rng = np.random.default_rng(3)
+    tess = Tesseract(_region(rng), 0.0, 1.5 * DAY).then(
+        _region(rng), 0.0, 2 * DAY)
+    flow = fdb("PartWalks").tesseract(tess)
+    for bname in ("numpy", "jax"):
+        ref = AdHocEngine(walks_catalog, num_servers=2, backend=bname,
+                          wave=3, partitions=1).collect(flow)
+        for p in (2, 4):
+            got = AdHocEngine(walks_catalog, num_servers=2, backend=bname,
+                              wave=3, partitions=p).collect(flow)
+            assert_identical(ref.batch, got.batch)
+
+
+# ------------------------------------------- partition-axis fault path
+
+@pytest.mark.parametrize("engine_kind", ["adhoc", "flume"])
+def test_partition_fault_reroutes_to_survivors(dense_catalog, engine_kind,
+                                               monkeypatch):
+    """A dead partition drains before dispatch and its shards reroute to
+    the survivors (launch/elastic.py) — full coverage, identical result,
+    and the recovery is visible on the profile."""
+    monkeypatch.setenv(FUSED_ENV, "1")
+    fp = FaultPlan(fail_always={("partition", 1)}, reroute_after=99)
+    if engine_kind == "adhoc":
+        eng = AdHocEngine(dense_catalog, num_servers=2, backend="jax",
+                          wave=3, partitions=3)
+        ref = eng.collect(ALL_AGG)
+        res = eng.collect(ALL_AGG, fault_plan=fp)
+        assert res.coverage == 1.0
+    else:
+        ref = FlumeEngine(dense_catalog, ckpt_dir=tempfile.mkdtemp(),
+                          max_workers=4, backend="jax", wave=3,
+                          partitions=3).collect(ALL_AGG)
+        res = FlumeEngine(dense_catalog, ckpt_dir=tempfile.mkdtemp(),
+                          max_workers=4, backend="jax", wave=3,
+                          partitions=3).collect(ALL_AGG, fault_plan=fp)
+    assert_identical(ref.batch, res.batch)
+    assert res.profile.retries >= 1
+
+
+# ------------------------------------------------- partitioned serve tier
+
+@pytest.mark.tesseract
+def test_serve_coalesced_rides_partition_layer(walks_catalog, walks_db,
+                                               monkeypatch):
+    """The coalesced multi-query path dispatches per partition but keeps
+    its host-side per-query gather merge (partition-invariant) — parity
+    with the numpy oracle and no merge combine launch."""
+    monkeypatch.setenv(FUSED_ENV, "1")
+    rng = np.random.default_rng(29)
+    flows = [fdb("PartWalks").tesseract(
+                 Tesseract(_region(rng), 0.0, 1.5 * DAY)),
+             fdb("PartWalks").tesseract(
+                 Tesseract(_region(rng), 0.3 * DAY, 2 * DAY))]
+    np_eng = AdHocEngine(walks_catalog, num_servers=2, backend="numpy",
+                         wave=3)
+    oracle = [np_eng.collect(f) for f in flows]
+    srv = QueryServer(catalog=walks_catalog, backend="jax", start=False,
+                      cache=False)
+    srv.engine.wave = 3
+    srv.engine.partitions = 2
+    futs = [srv.submit(f) for f in flows]
+    srv.run_pending()                                 # warm
+    for f, o in zip(futs, oracle):
+        assert_identical(f.result(60).batch, o.batch)
+    futs = [srv.submit(f) for f in flows]
+    ops.reset_launch_counts()
+    srv.run_pending()
+    pp = partition_shards(range(walks_db.num_shards), 2)
+    assert dict(ops.launch_counts()) == {
+        "run_wave_fused_multi": pp.wave_dispatches(3)}
+    for f, o in zip(futs, oracle):
+        assert_identical(f.result(60).batch, o.batch)
+
+
+# ------------------------------- eager buffer retirement (streaming)
+
+def test_snapshot_turnover_retires_stale_buffers():
+    """Priming a newer streaming generation eagerly drops the replaced
+    generation's device buffers (no wait for the FDb finalizer) and the
+    `retired_buffers` counter records it; re-priming the same snapshot
+    retires nothing."""
+    s = StreamingFDb("PartRetire", Schema("PartRetire", [
+        Field("id", INT, indexes=("tag",)),
+        Field("val", DOUBLE, indexes=("range",)),
+    ]), flush_threshold=4, compact_threshold=0)
+    # 10 docs, flush=4: 2 delta shards + a 2-doc memtable — snapshot1
+    # materializes a memtable-backed shard EXCLUSIVE to this generation,
+    # which is exactly what must retire on turnover
+    s.extend([{"id": i, "val": float(i)} for i in range(10)])
+    be = JaxBackend()
+    snap1 = s.snapshot()
+    be.prime_fdb(snap1)
+    n1 = len(be.device_cache)
+    assert n1 > 0
+    assert be.device_cache.stats()["retired_buffers"] == 0
+    s.extend([{"id": i, "val": float(i)} for i in range(10, 18)])
+    snap2 = s.snapshot()
+    be.prime_fdb(snap2)
+    st = be.device_cache.stats()
+    # snap1's delta shards carry over into snap2 (shared objects) — only
+    # buffers exclusive to the replaced generation retire
+    assert st["retired_buffers"] > 0
+    retired = st["retired_buffers"]
+    be.prime_fdb(snap2)                               # idempotent
+    assert be.device_cache.stats()["retired_buffers"] == retired

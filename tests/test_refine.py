@@ -132,7 +132,8 @@ def _tess(rng):
         _region(rng), 43200.0, 3 * 86400.0)
 
 
-def test_engine_refine_parity_and_launch_contract(walks_db, monkeypatch):
+def test_engine_refine_parity_and_launch_contract(walks_db, exec_pplan,
+                                                  monkeypatch):
     # pin the legacy per-primitive path: this test asserts the pre-fused
     # launch contract (the fused one lives in tests/test_fused.py)
     monkeypatch.setenv("REPRO_EXEC_FUSED", "0")
@@ -157,7 +158,8 @@ def test_engine_refine_parity_and_launch_contract(walks_db, monkeypatch):
     ops.reset_launch_counts()
     eng.collect(flow)
     lc = ops.launch_counts()
-    waves = math.ceil(walks_db.num_shards / wave)
+    waves = exec_pplan(walks_db.num_shards,
+                       eng.backend).wave_dispatches(wave)
     assert lc.get("bitmap_intersect_batched") == waves
     assert lc.get("refine_tracks_batched") == waves
     assert lc.get("compact_batched") == waves
@@ -351,7 +353,7 @@ def test_ordered_first_hit_table_parity(ordered_db, walks_db):
     assert tab[6, 1] == f64_sort_key(50.0)                 # first B hit
 
 
-def test_ordered_launch_contract(ordered_db, monkeypatch):
+def test_ordered_launch_contract(ordered_db, exec_pplan, monkeypatch):
     """Ordering rides the same batched refine launches: still ⌈shards/wave⌉
     refine_tracks_batched dispatches per query, zero per-shard ops (the
     legacy path — the fused single-dispatch contract is in test_fused)."""
@@ -369,7 +371,7 @@ def test_ordered_launch_contract(ordered_db, monkeypatch):
     # [0, 1000] windows), so waves count over the *planned* shard subset
     kept = len(res.plan.shard_ids)
     assert 0 < kept < ordered_db.num_shards          # pruning fired
-    waves = math.ceil(kept / wave)
+    waves = exec_pplan(kept, eng.backend).wave_dispatches(wave)
     assert lc.get("refine_tracks_batched") == waves
     assert lc.get("compact_batched") == waves
     assert lc.get("refine_tracks", 0) == 0

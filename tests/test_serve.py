@@ -194,11 +194,13 @@ def test_seam_multi_ops_match_base_oracle(catalog, walks_db):
 # ------------------------------------- coalesced launch contract + parity
 
 @pytest.mark.tesseract
-def test_coalesced_launch_contract_and_parity(catalog, walks_db,
+def test_coalesced_launch_contract_and_parity(catalog, walks_db, exec_pplan,
                                               monkeypatch):
-    """Q coalesced compatible queries cost ⌈shards/wave⌉ multi dispatches
-    TOTAL — not Q×⌈shards/wave⌉ — and every query's rows are byte-
-    identical to its single-query numpy-oracle result."""
+    """Q coalesced compatible queries cost Σ_p ⌈shards_p/wave⌉ multi
+    dispatches TOTAL — not Q×⌈shards/wave⌉ — and every query's rows are
+    byte-identical to its single-query numpy-oracle result.  The serve
+    tier merges per-query gathers on the host (partition-invariant), so
+    no merge combine is launched at any P."""
     monkeypatch.setenv(FUSED_ENV, "1")
     flows = _tess_flows()
     np_eng = AdHocEngine(catalog, num_servers=2, backend="numpy", wave=3)
@@ -211,7 +213,8 @@ def test_coalesced_launch_contract_and_parity(catalog, walks_db,
     futs = [srv.submit(f) for f in flows]
     ops.reset_launch_counts()
     srv.run_pending()
-    waves = math.ceil(walks_db.num_shards / 3)
+    waves = exec_pplan(walks_db.num_shards,
+                       srv.engine.backend).wave_dispatches(3)
     assert dict(ops.launch_counts()) == {"run_wave_fused_multi": waves}
     for f, o in zip(futs, oracle):
         assert_identical(f.result(60).batch, o.batch)

@@ -1,6 +1,7 @@
 """StreamingFDb (paper §4.1.1 read-write FDbs): flush-threshold boundaries,
 concurrent writers, and consistent merged reader views."""
 import threading
+import time
 
 import numpy as np
 import pytest
@@ -114,3 +115,48 @@ def test_readers_see_memtable_and_shards_merged():
     got = AdHocEngine(cat2, num_servers=3).collect(
         fdb("Events").find(P.id == 10))
     assert got.batch["id"].values.tolist() == [10]
+
+
+# ----------------------------------------------------- background compaction
+
+def test_appends_never_block_on_compaction():
+    """LSM merges run on the background worker; a deliberately slow merge
+    must not stall the appending thread (ISSUE 9 satellite)."""
+    s = StreamingFDb("Events", _schema(), flush_threshold=4,
+                     compact_threshold=2)
+    merging = threading.Event()
+
+    def slow_merge():
+        merging.set()
+        time.sleep(0.5)
+
+    s._compact_hook = slow_merge
+    s.extend([_rec(i) for i in range(8)])     # 2 deltas -> compaction due
+    assert merging.wait(5.0)                  # merge in flight on the worker
+    stalls = []
+    for i in range(8, 24):                    # appends during the slow merge
+        t0 = time.monotonic()
+        s.append(_rec(i))
+        stalls.append(time.monotonic() - t0)
+    assert max(stalls) < 0.2                  # never blocked on the merge
+    s._compact_hook = None
+    s.flush()
+    s.drain_compaction()
+    st = s.stats()
+    assert st["compactions"] >= 1
+    assert s.num_docs == 24
+    snap = s.snapshot()
+    ids = np.concatenate([sh.batch["id"].values for sh in snap.shards])
+    assert ids.tolist() == list(range(24))    # arrival order preserved
+
+
+def test_inline_compaction_mode_preserved():
+    """``compact_async=False`` keeps the legacy synchronous semantics —
+    the merge completes inside the append that crossed the threshold."""
+    s = StreamingFDb("Events", _schema(), flush_threshold=4,
+                     compact_threshold=2, compact_async=False)
+    s.extend([_rec(i) for i in range(8)])
+    st = s.stats()
+    assert st["compactions"] >= 1             # merged inline, no drain needed
+    assert st["delta_shards"] < 2
+    assert s.num_docs == 8

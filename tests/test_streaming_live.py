@@ -116,6 +116,7 @@ def test_auto_compaction_at_threshold():
     s = StreamingFDb("LiveAuto", _track_schema("LiveAuto"),
                      flush_threshold=4, compact_threshold=3)
     s.extend([_track_rec(i, t0=100.0 * i, rng=rng) for i in range(12)])
+    s.drain_compaction()          # merges run on the background worker
     st = s.stats()
     assert st["compactions"] >= 1
     assert st["delta_shards"] < 3
@@ -140,7 +141,7 @@ def test_snapshot_identity_cached_per_generation():
 # ------------------------------------------------- pruning: plan + launch
 
 @pytest.mark.tesseract
-def test_pruning_shrinks_plan_and_fused_launches(monkeypatch):
+def test_pruning_shrinks_plan_and_fused_launches(exec_pplan, monkeypatch):
     monkeypatch.setenv(FUSED_ENV, "1")
     s = _time_sorted_stream("LivePrune", n=96, flush=16)
     cat = Catalog()
@@ -160,8 +161,15 @@ def test_pruning_shrinks_plan_and_fused_launches(monkeypatch):
     ops.reset_launch_counts()
     res = eng.collect(flow)
     lc = ops.launch_counts()
-    assert lc.get("run_wave_fused") == math.ceil(kept / wave)
-    assert math.ceil(kept / wave) < math.ceil(total / wave)
+    # partition-aware contract: the PartitionPlan is built over the PRUNED
+    # shard list, so pruning shrinks every partition's wave count
+    assert lc.get("run_wave_fused") == \
+        exec_pplan(kept, eng.backend).wave_dispatches(wave)
+    # fewer dispatches than the unpruned plan (== only when per-partition
+    # ceils coincide at P>1; the kept-based count above is the contract)
+    assert exec_pplan(kept, eng.backend).wave_dispatches(wave) <= \
+        exec_pplan(total, eng.backend).wave_dispatches(wave)
+    assert kept < total
     # parity: numpy oracle over the same live snapshot
     want = AdHocEngine(cat, num_servers=2, backend="numpy",
                        wave=wave).collect(flow)
@@ -170,7 +178,7 @@ def test_pruning_shrinks_plan_and_fused_launches(monkeypatch):
 
 
 @pytest.mark.tesseract
-def test_pruning_launch_contract_unfused(monkeypatch):
+def test_pruning_launch_contract_unfused(exec_pplan, monkeypatch):
     monkeypatch.setenv(FUSED_ENV, "0")
     s = _time_sorted_stream("LivePruneU", n=64, flush=16)
     cat = Catalog()
@@ -185,7 +193,8 @@ def test_pruning_launch_contract_unfused(monkeypatch):
     ops.reset_launch_counts()
     eng.collect(flow)
     lc = ops.launch_counts()
-    assert lc.get("refine_tracks_batched") == math.ceil(kept / wave)
+    assert lc.get("refine_tracks_batched") == \
+        exec_pplan(kept, eng.backend).wave_dispatches(wave)
     assert lc.get("refine_tracks", 0) == 0
 
 
