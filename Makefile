@@ -6,7 +6,11 @@ export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: help test test-fast test-tesseract bench bench-backends \
         bench-tesseract bench-serve bench-streaming bench-partition \
-        ci ci-kernels ci-bench bench-regression check-links
+        bench-analytics ci ci-kernels ci-bench bench-regression check-links
+
+# blocking suite set, derived from the single registry in
+# benchmarks/suites.py (same table run.py --only reads)
+REG_SUITES = $(shell $(PY) -m benchmarks.suites --regression)
 
 help:                 ## list targets (CI runs: ci, ci-kernels, ci-bench)
 	@grep -E '^[a-z][a-zA-Z_-]*:.*##' $(MAKEFILE_LIST) | \
@@ -24,14 +28,14 @@ test-tesseract:       ## trip-query subsystem tests only
 ci:                   ## CI leg: tier-1 under $REPRO_EXEC_BACKEND (numpy|jax)
 	$(PY) -m pytest -x -q
 
-ci-kernels:           ## CI extra: interpret-vs-reference kernel-body sweeps
-	$(PY) -m pytest -x -q tests/test_kernels.py tests/test_refine.py
+ci-kernels:           ## CI extra: interpret-vs-reference kernel-body sweeps (incl. count/dwell reduction sweeps)
+	$(PY) -m pytest -x -q tests/test_kernels.py tests/test_refine.py tests/test_analytics.py
 
-ci-bench:             ## CI smoke: tiny backends+tesseract+serve+streaming+partition suites, exits non-zero on parity fail
-	$(PY) -m benchmarks.run --only backends,tesseract,serve,streaming,partition --json --scale 0.05
+ci-bench:             ## CI smoke: tiny blocking suites (benchmarks/suites.py registry), exits non-zero on parity fail
+	$(PY) -m benchmarks.run --only $(REG_SUITES) --json --scale 0.05
 
-bench-regression:     ## blocking gate: fresh BENCH_{backends,tesseract,serve,streaming,partition}.json vs committed baselines (>1.5x/query fails)
-	$(PY) benchmarks/check_regression.py --suite backends,tesseract,serve,streaming,partition
+bench-regression:     ## blocking gate: fresh BENCH_<suite>.json vs committed baselines for the registry's blocking set (>1.5x/query fails)
+	$(PY) benchmarks/check_regression.py
 
 check-links:          ## docs hygiene: every relative link in docs/, ROADMAP.md, README-tier files resolves
 	$(PY) tools/check_links.py
@@ -53,3 +57,6 @@ bench-streaming:      ## live ingestion: ingest→queryable latency, pruning + i
 
 bench-partition:      ## partitioned execution: P=1 vs P=2 wall time + launch/merge evidence
 	$(PY) -m benchmarks.run --only partition --json
+
+bench-analytics:      ## Q10/Q11 dwell+count reductions + time-to-trained-model row
+	$(PY) -m benchmarks.run --only analytics --json

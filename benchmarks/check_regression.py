@@ -36,6 +36,18 @@ import os
 import sys
 
 
+def _registry_suites() -> str:
+    """Blocking suite set from benchmarks/suites.py (stdlib-only import;
+    works both as a script and as the ``benchmarks.check_regression``
+    module)."""
+    try:
+        from .suites import regression_csv        # type: ignore
+    except ImportError:
+        sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+        from suites import regression_csv          # type: ignore
+    return regression_csv()
+
+
 def _rows_by_name(path: str) -> dict:
     with open(path) as fh:
         payload = json.load(fh)
@@ -96,7 +108,9 @@ def main(argv=None) -> int:
     ap.add_argument("--suite", default=None,
                     help="comma-separated suite names; compares "
                          "<current-dir>/BENCH_<s>.json against "
-                         "<baseline-dir>/BENCH_<s>.json for each")
+                         "<baseline-dir>/BENCH_<s>.json for each "
+                         "(default, when --current is not given: the "
+                         "blocking set from benchmarks/suites.py)")
     ap.add_argument("--current-dir", default=".",
                     help="directory holding fresh BENCH_<suite>.json files")
     ap.add_argument("--baseline-dir", default="benchmarks/baselines",
@@ -111,6 +125,10 @@ def main(argv=None) -> int:
                     help="ignore rows faster than this (dispatch noise)")
     args = ap.parse_args(argv)
 
+    if args.suite is None and args.current is None:
+        # default to the registry's blocking set — the same table
+        # benchmarks/run.py --only reads, so the gate can't drift
+        args.suite = _registry_suites()
     if bool(args.suite) == bool(args.current):
         ap.error("pass either --suite or --current/--baseline")
     if args.current and not args.baseline:

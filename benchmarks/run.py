@@ -48,12 +48,13 @@ def _write_json(suite: str, rows: list, scale: float, out_dir: str) -> str:
 
 
 def main() -> None:
+    from .suites import SUITES
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=0.5)
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of "
-                         "table2|fig11|fig12|flume|kernels|backends|"
-                         "tesseract|serve|streaming|partition|roofline")
+                         + "|".join(SUITES))
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_<suite>.json per suite "
                          "(wall time + parity bit)")
@@ -70,30 +71,22 @@ def main() -> None:
     if args.profile:
         os.environ["REPRO_EXEC_PROFILE"] = "1"
 
-    from . import (bench_backends, bench_fig11, bench_fig12,
-                   bench_flume_overhead, bench_kernels, bench_partition,
-                   bench_serve, bench_streaming, bench_table2,
-                   bench_tesseract, roofline)
+    # one bench per registry entry (benchmarks/suites.py): --only here,
+    # check_regression.py --suite, and the Makefile all read the same table
+    import importlib
 
-    benches = {
-        "table2": lambda: bench_table2.run(scale=args.scale),
-        "fig11": lambda: bench_fig11.run(scale=args.scale),
-        "fig12": lambda: bench_fig12.run(scale=args.scale),
-        "flume": lambda: bench_flume_overhead.run(scale=args.scale),
-        "kernels": lambda: bench_kernels.run(),
-        # parity verdicts flow into rows; this harness owns the exit code
-        "backends": lambda: bench_backends.run(scale=args.scale,
-                                               raise_on_mismatch=False),
-        "tesseract": lambda: bench_tesseract.run(scale=args.scale,
-                                                 raise_on_mismatch=False),
-        "serve": lambda: bench_serve.run(scale=args.scale,
-                                         raise_on_mismatch=False),
-        "streaming": lambda: bench_streaming.run(scale=args.scale,
-                                                 raise_on_mismatch=False),
-        "partition": lambda: bench_partition.run(scale=args.scale,
-                                                 raise_on_mismatch=False),
-        "roofline": lambda: roofline.run(),
-    }
+    def _bench(spec):
+        mod = importlib.import_module(f".{spec['module']}", __package__)
+        kw = {}
+        if spec["scale"]:
+            kw["scale"] = args.scale
+        if spec["parity"]:
+            # parity verdicts flow into rows; this harness owns the exit
+            # code
+            kw["raise_on_mismatch"] = False
+        return lambda: mod.run(**kw)
+
+    benches = {name: _bench(spec) for name, spec in SUITES.items()}
     only = {s for s in (args.only or "").split(",") if s}
     unknown = only - set(benches)
     if unknown:

@@ -1,0 +1,67 @@
+"""Single registry of benchmark suites (stdlib-only).
+
+``benchmarks/run.py --only``, ``benchmarks/check_regression.py --suite``,
+and the Makefile ``ci-bench``/``bench-regression`` targets all derive
+their suite lists from this table, so the three can't drift: a suite
+added here is immediately runnable, and marking it ``regression=True``
+puts it in the blocking baseline-gate set (commit its
+``benchmarks/baselines/BENCH_<name>.json`` alongside).
+
+Fields per suite:
+  * ``module``      — module under ``benchmarks/`` exposing ``run()``
+  * ``scale``       — ``run()`` takes ``scale=`` (grows the world)
+  * ``parity``      — ``run()`` takes ``raise_on_mismatch=`` (the harness
+                      owns the exit code; parity bits flow into rows)
+  * ``regression``  — in the blocking ``check_regression.py`` gate set
+
+Print helpers for shell use::
+
+    python -m benchmarks.suites --regression   # csv of the gate set
+    python -m benchmarks.suites --all          # csv of every suite
+"""
+from __future__ import annotations
+
+SUITES = {
+    "table2": dict(module="bench_table2", scale=True, parity=False,
+                   regression=False),
+    "fig11": dict(module="bench_fig11", scale=True, parity=False,
+                  regression=False),
+    "fig12": dict(module="bench_fig12", scale=True, parity=False,
+                  regression=False),
+    "flume": dict(module="bench_flume_overhead", scale=True, parity=False,
+                  regression=False),
+    "kernels": dict(module="bench_kernels", scale=False, parity=False,
+                    regression=False),
+    "backends": dict(module="bench_backends", scale=True, parity=True,
+                     regression=True),
+    "tesseract": dict(module="bench_tesseract", scale=True, parity=True,
+                      regression=True),
+    "serve": dict(module="bench_serve", scale=True, parity=True,
+                  regression=True),
+    "streaming": dict(module="bench_streaming", scale=True, parity=True,
+                      regression=True),
+    "partition": dict(module="bench_partition", scale=True, parity=True,
+                      regression=True),
+    "analytics": dict(module="bench_analytics", scale=True, parity=True,
+                      regression=True),
+    "roofline": dict(module="roofline", scale=False, parity=False,
+                     regression=False),
+}
+
+REGRESSION_SUITES = [n for n, s in SUITES.items() if s["regression"]]
+
+
+def suite_names() -> list:
+    return list(SUITES)
+
+
+def regression_csv() -> str:
+    return ",".join(REGRESSION_SUITES)
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regression" in sys.argv:
+        print(regression_csv())
+    else:
+        print(",".join(SUITES))

@@ -22,7 +22,6 @@ sys.path.insert(0, "benchmarks")
 from queries import build_catalog  # noqa: E402
 
 from repro.core import P, proto, BETWEEN, group, fdb  # noqa: E402
-from repro.data.pipeline import WflBatcher  # noqa: E402
 from repro.exec import AdHocEngine  # noqa: E402
 from repro.ml.integration import MLPRegressor  # noqa: E402
 
@@ -31,34 +30,28 @@ def main():
     cat = build_catalog(scale=1.0, num_shards=24)
     engine = AdHocEngine(cat, num_servers=8)
 
-    # 1 -- training-data selection via WFL (join obs → road features)
+    # 1 -- training-data selection via WFL (join obs → road features):
+    # the query selects + shapes the rows, to_dataset() lands them as a
+    # TrainingDataset ready for fit()
     t0 = time.perf_counter()
     roads_tbl = (fdb("Roads")
                  .map(lambda p: proto(rid=p.id, sl=p.speed_limit,
                                       var=p.variability))
                  ).collect(engine).to_dict("rid")
-    train_q = (fdb("SpeedObservations")
-               .find(BETWEEN(P.month, 1, 4))        # train split: months 1-4
-               .map(lambda p: proto(
-                   hour=p.hour * 1.0,
-                   dow=p.dow * 1.0,
-                   sl=roads_tbl[p.road_id].sl,
-                   speed=p.speed)))
-    train_tbl = engine.collect(train_q)
+    ds = (fdb("SpeedObservations")
+          .find(BETWEEN(P.month, 1, 4))            # train split: months 1-4
+          .to_dataset(features={"hour": P.hour * 1.0,
+                                "dow": P.dow * 1.0,
+                                "sl": roads_tbl[P.road_id].sl},
+                      target=P.speed, engine=engine))
     t_select = time.perf_counter() - t0
-    print(f"selected {train_tbl.n} training rows in {t_select*1e3:.0f}ms "
+    print(f"selected {len(ds)} training rows in {t_select*1e3:.0f}ms "
           f"(time-to-training-data)")
 
     # 2 -- train (features: hour, dow, speed_limit → speed)
-    batcher = WflBatcher(train_tbl, ["hour", "dow", "sl"], "speed",
-                         batch=512)
-    model = MLPRegressor(num_features=3, hidden=64, depth=2)
-    feats, targets = train_tbl.batch, None
-    X = np.stack([np.asarray(train_tbl.batch[p].values, np.float32)
-                  for p in ("hour", "dow", "sl")], axis=-1)
-    y = np.asarray(train_tbl.batch["speed"].values, np.float32)
+    y = ds.targets
     t0 = time.perf_counter()
-    losses = model.train(X, y, steps=400, lr=2e-3)
+    model, losses = ds.fit(hidden=64, depth=2, steps=400, lr=2e-3)
     t_train = time.perf_counter() - t0
     print(f"trained 400 steps in {t_train:.1f}s "
           f"(loss {losses[0]:.1f} → {losses[-1]:.1f}) "

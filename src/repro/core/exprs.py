@@ -138,11 +138,20 @@ class InSpaceTimeSeq(Expr):
     *strictly* before its first hit of constraint ``j``.  Equal first-hit
     timestamps do not count as before (tie ⇒ edge fails).  Singular
     (any-reduced) over the repeated track, like ``InSpaceTime``.
+
+    Per-constraint **reductions** generalize the any-hit verdict from the
+    same one-hot pass: ``min_counts[c] = k`` requires ≥ k satisfying points
+    (k = 0 is vacuously true — the constraint stops filtering);
+    ``dwells[c] = d`` requires ≥ 1 hit and ``t(last hit) − t(first hit)
+    >= d`` seconds (inclusive at the threshold).  ``None`` in either slot
+    (or the whole tuple) keeps the plain any-hit semantics.
     """
     field: Expr            # FieldRef to a track (repeated lat/lng/t leaves)
     constraints: Tuple[Tuple[Any, float, float], ...] = \
         dc_field(hash=False, default=())      # [(AreaTree, t0, t1), …]
     edges: Tuple[Tuple[int, int], ...] = ()   # (i, j): first_i < first_j
+    min_counts: Optional[Tuple[int, ...]] = None     # "≥ k hits" per slot
+    dwells: Optional[Tuple[Optional[float], ...]] = None  # seconds per slot
 
     def children(self):
         return (self.field,)
@@ -535,8 +544,16 @@ def eval_expr(expr: Expr, ctx: EvalContext) -> Val:
         lng = ctx.batch[expr.field.path + ".lng"]
         tt = ctx.batch[expr.field.path + ".t"]
         keys = Mc.latlng_to_morton(lat.values, lng.values)
+        mins = expr.min_counts
+        dwells = expr.dwells
+        any_dwell = dwells is not None and any(d is not None for d in dwells)
+        need_first = bool(expr.edges) or any_dwell
         first = np.full((n, len(expr.constraints)), np.inf) \
-            if expr.edges else None
+            if need_first else None
+        last = np.full((n, len(expr.constraints)), -np.inf) \
+            if any_dwell else None
+        count = np.zeros((n, len(expr.constraints)), dtype=np.int64) \
+            if mins is not None else None
         out = np.ones(n, dtype=bool)
         row_of = None if lat.row_splits is None else \
             np.repeat(np.arange(n), np.diff(lat.row_splits))
@@ -544,17 +561,35 @@ def eval_expr(expr: Expr, ctx: EvalContext) -> Val:
             hit = region.contains(keys) \
                 & (tt.values >= t0) & (tt.values <= t1)
             if row_of is None:                  # singular location + t
+                doc_hit = np.asarray(hit, dtype=bool)
                 if first is not None:
                     first[:, c] = np.where(hit, tt.values, np.inf)
-                out &= np.asarray(hit, dtype=bool)
-                continue
-            doc_hit = np.zeros(n, dtype=bool)
-            if hit.size:
-                np.logical_or.at(doc_hit, row_of, hit)
-                if first is not None:
-                    np.minimum.at(first[:, c], row_of,
-                                  np.where(hit, tt.values, np.inf))
-            out &= doc_hit
+                if last is not None:
+                    last[:, c] = np.where(hit, tt.values, -np.inf)
+                if count is not None:
+                    count[:, c] = doc_hit.astype(np.int64)
+            else:
+                doc_hit = np.zeros(n, dtype=bool)
+                if hit.size:
+                    np.logical_or.at(doc_hit, row_of, hit)
+                    if first is not None:
+                        np.minimum.at(first[:, c], row_of,
+                                      np.where(hit, tt.values, np.inf))
+                    if last is not None:
+                        np.maximum.at(last[:, c], row_of,
+                                      np.where(hit, tt.values, -np.inf))
+                    if count is not None:
+                        np.add.at(count[:, c], row_of, hit)
+            ok = doc_hit
+            if mins is not None and int(mins[c]) != 1:
+                k = int(mins[c])
+                ok = np.ones(n, dtype=bool) if k <= 0 else count[:, c] >= k
+            if dwells is not None and dwells[c] is not None:
+                # + 0.0 normalizes −0.0, matching the packed sort-key
+                # round-trip the device reductions difference
+                span = (last[:, c] + 0.0) - (first[:, c] + 0.0)
+                ok = ok & doc_hit & (span >= float(dwells[c]))
+            out &= ok
         for i, j in expr.edges:
             out &= first[:, i] < first[:, j]
         return Val(out)

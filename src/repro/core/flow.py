@@ -151,6 +151,15 @@ class Flow:
     def limit(self, k: int) -> "Flow":
         return self._push(LimitOp(int(k)))
 
+    def distinct_approx(self, expr, name: str = "distinct_approx") -> "Flow":
+        """Approximate distinct count of ``expr`` over the whole flow
+        (paper §4.2.2 HyperLogLog): one-row result column ``name``.  The
+        sketch is register-maxed per partition and merged by the Mixer, so
+        the estimate is partition-invariant by contract."""
+        spec = AggSpec(())
+        spec.approx_distinct(name, expr=_trace(expr))
+        return self._push(AggregateOp(spec))
+
     def distinct(self, expr=None) -> "Flow":
         return self._push(DistinctOp(_trace(expr) if expr is not None
                                      else None))
@@ -196,6 +205,36 @@ class Flow:
         """Apply a JAX model to flow columns (paper §5 TF-operator analog)."""
         ins = tuple((k, _trace(v)) for k, v in inputs.items())
         return self._push(ModelApplyOp(model, ins, output))
+
+    def to_dataset(self, features, target, engine=None, **kw):
+        """Materialize this flow as ML training data (paper §5).
+
+        ``features`` is a ``{name: expr}`` mapping (or a sequence of field
+        refs), ``target`` an expression; the query executes like any other
+        flow — selection rides indices and the fused refine pass — and the
+        resulting columns land in a :class:`repro.data.pipeline.
+        TrainingDataset`, whose ``fit()`` trains an ``MLPRegressor`` on
+        exactly the rows the query selected (time-to-trained-model).
+        """
+        from ..data.pipeline import TrainingDataset
+        if isinstance(features, dict):
+            items = [(n, _trace(e)) for n, e in features.items()]
+        else:
+            items = []
+            for i, f in enumerate(features):
+                e = _trace(f)
+                name = (e.path.replace(".", "_")
+                        if isinstance(e, FieldRef) else f"f{i}")
+                items.append((name, e))
+        te = _trace(target)
+        t_name = (te.path.replace(".", "_")
+                  if isinstance(te, FieldRef) else "target")
+        if t_name in {n for n, _ in items}:
+            t_name = "__target"
+        flow = self._push(MapOp(MakeProto(tuple(items) + ((t_name, te),))))
+        table = flow.collect(engine, **kw)
+        return TrainingDataset.from_table(table, [n for n, _ in items],
+                                          t_name)
 
     # -- materialization ------------------------------------------------------
     def collect(self, engine=None, **kw):

@@ -191,10 +191,26 @@ class RefineSpec:
     be strictly before its first hit of constraint ``j``.  The refine op
     evaluates edges against the per-(doc × constraint) first-hit table the
     same fused pass produces, so ordering adds no extra launches.
+
+    ``min_counts``/``dwells`` carry the per-constraint count ("≥ k hits";
+    ``k = 0`` vacuous) and dwell ("last − first ≥ d seconds") reductions —
+    computed from the same one-hot compare pass's reduction tables, zero
+    extra launches.  ``None`` means every constraint keeps the default
+    (k = 1, no dwell) — the legacy spec shape.
     """
     path: str
     constraints: List[Tuple[Any, float, float]]
     edges: List[Tuple[int, int]] = dc_field(default_factory=list)
+    min_counts: Optional[Tuple[int, ...]] = None
+    dwells: Optional[Tuple[Optional[float], ...]] = None
+
+    def vacuous(self, c: int) -> bool:
+        """True when constraint ``c`` filters nothing: k = 0 and no dwell
+        (a dwell forces ≥ 1 hit even under k = 0).  Vacuous windows must
+        not prune shards, and their postings must not gate candidates."""
+        return (self.min_counts is not None
+                and int(self.min_counts[c]) <= 0
+                and (self.dwells is None or self.dwells[c] is None))
 
 
 def split_find_pred(pred: Expr, schema: Schema
@@ -219,6 +235,9 @@ def split_find_pred(pred: Expr, schema: Schema
         per-path spec: its constraints append to the spec's list with one
         conservative probe each, and its ordering edges are offset to the
         merged indices — one fused refine launch per wave either way.
+        Per-constraint count/dwell reductions ride the merged spec too;
+        a ``k = 0`` (vacuous, "≥ 0 hits") constraint skips its spacetime
+        probe — its postings are not a superset of "always true".
     """
     conjuncts: List[Expr] = []
 
@@ -232,27 +251,36 @@ def split_find_pred(pred: Expr, schema: Schema
     walk(pred)
     probes: List[IndexProbe] = []
     refine_by_path: Dict[str, Tuple[List[Tuple[Any, float, float]],
-                                    List[Tuple[int, int]]]] = {}
+                                    List[Tuple[int, int]], List[int],
+                                    List[Optional[float]]]] = {}
     residual: List[Expr] = []
     for c in conjuncts:
         if isinstance(c, InSpaceTime) and isinstance(c.field, FieldRef):
             p = _indexable(c, schema)
             if p is not None:
                 probes.append(p)
-            refine_by_path.setdefault(c.field.path, ([], []))[0].append(
-                (c.region, c.t0, c.t1))
+            cons, _, mcs, dws = refine_by_path.setdefault(
+                c.field.path, ([], [], [], []))
+            cons.append((c.region, c.t0, c.t1))
+            mcs.append(1)
+            dws.append(None)
             continue
         if isinstance(c, InSpaceTimeSeq) and isinstance(c.field, FieldRef):
             path = c.field.path
-            cons, edges = refine_by_path.setdefault(path, ([], []))
+            cons, edges, mcs, dws = refine_by_path.setdefault(
+                path, ([], [], [], []))
             off = len(cons)
             indexed = schema.has(path) \
                 and "spacetime" in schema.field(path).indexes
-            for region, t0, t1 in c.constraints:
-                if indexed:
+            c_mcs = c.min_counts or (1,) * len(c.constraints)
+            c_dws = c.dwells or (None,) * len(c.constraints)
+            for ci, (region, t0, t1) in enumerate(c.constraints):
+                if indexed and int(c_mcs[ci]) != 0:
                     probes.append(IndexProbe(path, "spacetime",
                                              (region, t0, t1)))
                 cons.append((region, float(t0), float(t1)))
+                mcs.append(int(c_mcs[ci]))
+                dws.append(None if c_dws[ci] is None else float(c_dws[ci]))
             edges.extend((i + off, j + off) for i, j in c.edges)
             continue
         p = _indexable(c, schema) or _indexable_or(c, schema)
@@ -263,8 +291,13 @@ def split_find_pred(pred: Expr, schema: Schema
     res: Optional[Expr] = None
     for r in residual:
         res = r if res is None else BinOp("and", res, r)
-    refines = [RefineSpec(path, cs, edges)
-               for path, (cs, edges) in refine_by_path.items()]
+    refines = []
+    for path, (cs, edges, mcs, dws) in refine_by_path.items():
+        default = all(k == 1 for k in mcs) and all(d is None for d in dws)
+        refines.append(RefineSpec(
+            path, cs, edges,
+            min_counts=None if default else tuple(mcs),
+            dwells=None if default else tuple(dws)))
     return probes, refines, res
 
 
@@ -318,8 +351,13 @@ class Plan:
             lines.append(f"  index probe: {p.kind}({p.path})")
         for r in self.refines:
             order = f", {len(r.edges)} ordering edges" if r.edges else ""
+            red = ""
+            if r.min_counts is not None or r.dwells is not None:
+                nk = sum(1 for k in (r.min_counts or ()) if int(k) != 1)
+                nd = sum(1 for d in (r.dwells or ()) if d is not None)
+                red = f", {nk} count / {nd} dwell reductions"
             lines.append(f"  track refine: {r.path} "
-                         f"[{len(r.constraints)} constraints{order}]")
+                         f"[{len(r.constraints)} constraints{order}{red}]")
         if self.residual is not None:
             lines.append("  residual filter: yes")
         lines.append(f"  server ops: "
@@ -382,7 +420,11 @@ def plan_flow(flow: Flow, catalog) -> Plan:
                 if span is None:
                     continue
                 lo, hi = span
-                if any(t1 < lo or t0 > hi for _, t0, t1 in rf.constraints):
+                # vacuous (k = 0, no dwell) windows filter nothing and
+                # must not prune — the other constraints still can
+                if any((t1 < lo or t0 > hi)
+                       for ci, (_, t0, t1) in enumerate(rf.constraints)
+                       if not rf.vacuous(ci)):
                     drop = True
                     break
             if not drop:

@@ -25,13 +25,17 @@ __all__ = ["Session"]
 
 
 class Session:
-    def __init__(self, engine=None, catalog=None, backend=None):
-        """``backend`` selects the execution backend ("numpy", "jax", or an
-        ExecBackend instance) when no explicit engine is supplied."""
+    def __init__(self, engine=None, catalog=None, backend=None,
+                 config=None):
+        """``config`` is an :class:`repro.exec.ExecConfig` bundling the
+        execution knobs (backend/wave/partitions/fused/profile) when no
+        explicit engine is supplied; the legacy ``backend`` kwarg
+        ("numpy", "jax", or an ExecBackend instance) remains as a shim."""
         if engine is None:
-            if backend is not None:
+            if backend is not None or config is not None:
                 from ..exec.adhoc import AdHocEngine
-                engine = AdHocEngine(catalog=catalog, backend=backend)
+                engine = AdHocEngine(catalog=catalog, backend=backend,
+                                     config=config)
             else:
                 from ..exec.adhoc import default_engine
                 engine = default_engine()

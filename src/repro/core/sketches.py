@@ -14,8 +14,8 @@ from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["splitmix64", "hash_values", "HyperLogLog", "BloomFilter",
-           "IntervalSet"]
+__all__ = ["splitmix64", "hash_values", "hll_register_rows", "HyperLogLog",
+           "BloomFilter", "IntervalSet"]
 
 _U = np.uint64
 
@@ -48,6 +48,27 @@ def hash_values(values, vocab: Optional[Sequence[str]] = None) -> np.ndarray:
 # HyperLogLog (Flajolet et al. 2007), dense registers, mergeable.
 # --------------------------------------------------------------------------
 
+def hll_register_rows(h: np.ndarray, p: int
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-hash HLL register updates: 64-bit hashes → (register index
+    [n] int64, rank [n] uint8).  A sketch is the per-register **max** of
+    these rows (zero = empty register), which is what lets grouped sketch
+    building run as one segment-max through the execution backend —
+    commutative and idempotent, hence partition- and order-invariant."""
+    h = np.asarray(h, dtype=np.uint64)
+    idx = (h >> _U(64 - p)).astype(np.int64)
+    rest = (h << _U(p)) | _U((1 << p) - 1)
+    # rank = leading zeros of the remaining 64-p bits, +1
+    lz = np.zeros(h.shape, dtype=np.uint8)
+    cur = rest.copy()
+    for shift in (32, 16, 8, 4, 2, 1):
+        mask = cur < (_U(1) << _U(64 - shift))
+        lz = np.where(mask, lz + shift, lz)
+        cur = np.where(mask, cur << _U(shift), cur)
+    rank = np.minimum(lz + 1, 64 - p + 1).astype(np.uint8)
+    return idx, rank
+
+
 @dataclass
 class HyperLogLog:
     p: int = 12
@@ -58,17 +79,7 @@ class HyperLogLog:
             self.registers = np.zeros(1 << self.p, dtype=np.uint8)
 
     def add_hashes(self, h: np.ndarray) -> "HyperLogLog":
-        h = np.asarray(h, dtype=np.uint64)
-        idx = (h >> _U(64 - self.p)).astype(np.int64)
-        rest = (h << _U(self.p)) | _U((1 << self.p) - 1)
-        # rank = leading zeros of the remaining 64-p bits, +1
-        lz = np.zeros(h.shape, dtype=np.uint8)
-        cur = rest.copy()
-        for shift in (32, 16, 8, 4, 2, 1):
-            mask = cur < (_U(1) << _U(64 - shift))
-            lz = np.where(mask, lz + shift, lz)
-            cur = np.where(mask, cur << _U(shift), cur)
-        rank = np.minimum(lz + 1, 64 - self.p + 1).astype(np.uint8)
+        idx, rank = hll_register_rows(h, self.p)
         np.maximum.at(self.registers, idx, rank)
         return self
 

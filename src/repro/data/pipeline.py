@@ -18,7 +18,7 @@ from typing import Dict, Iterator, Optional
 
 import numpy as np
 
-__all__ = ["TokenPipeline", "WflBatcher"]
+__all__ = ["TokenPipeline", "TrainingDataset", "WflBatcher"]
 
 
 class TokenPipeline:
@@ -88,6 +88,68 @@ class TokenPipeline:
         return TokenPipeline(vocab_size, batch, seq_len,
                              seed=state["seed"],
                              start_step=state["step"], **kw)
+
+
+class TrainingDataset:
+    """Feature matrix + target vector selected by a WFL query (§5).
+
+    The materialized end of ``Flow.to_dataset(features=..., target=...)``:
+    data selection happens in the query engine (indices, refine, fused
+    waves), and this object is the hand-off into training — minibatch
+    iteration via :meth:`batches`, a train/test :meth:`split`, and
+    :meth:`fit`, which closes the paper's time-to-trained-model loop by
+    training an :class:`repro.ml.integration.MLPRegressor` on the rows
+    the query selected.
+    """
+
+    def __init__(self, features: np.ndarray, targets: np.ndarray,
+                 feature_names):
+        self.features = np.asarray(features, np.float32)
+        self.targets = np.asarray(targets, np.float32)
+        self.feature_names = list(feature_names)
+
+    @classmethod
+    def from_table(cls, table, feature_paths, target_path
+                   ) -> "TrainingDataset":
+        feats = np.stack([np.asarray(table.batch[p].values, np.float32)
+                          for p in feature_paths], axis=-1)
+        targets = np.asarray(table.batch[target_path].values, np.float32)
+        return cls(feats, targets, feature_paths)
+
+    def __len__(self) -> int:
+        return int(self.features.shape[0])
+
+    @property
+    def num_features(self) -> int:
+        return int(self.features.shape[1])
+
+    def split(self, frac: float = 0.8, seed: int = 0):
+        """Shuffled (train, test) split."""
+        rng = np.random.default_rng(seed)
+        order = rng.permutation(len(self))
+        k = int(len(self) * frac)
+        return (TrainingDataset(self.features[order[:k]],
+                                self.targets[order[:k]],
+                                self.feature_names),
+                TrainingDataset(self.features[order[k:]],
+                                self.targets[order[k:]],
+                                self.feature_names))
+
+    def batches(self, batch: int, seed: int = 0):
+        """Endless shuffled minibatch stream of (features, targets)."""
+        rng = np.random.default_rng(seed)
+        while True:
+            idx = rng.integers(0, len(self), batch)
+            yield self.features[idx], self.targets[idx]
+
+    def fit(self, *, hidden: int = 64, depth: int = 2, seed: int = 0,
+            **train_kw):
+        """Train an MLP head on this dataset → (model, losses)."""
+        from ..ml.integration import MLPRegressor
+        model = MLPRegressor(self.num_features, hidden=hidden, depth=depth,
+                             seed=seed)
+        losses = model.train(self.features, self.targets, **train_kw)
+        return model, losses
 
 
 class WflBatcher:

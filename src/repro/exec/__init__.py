@@ -6,6 +6,7 @@ see :mod:`repro.exec.backend`.
 """
 from .backend import (ExecBackend, JaxBackend, NumpyBackend, as_backend,
                       backend_names, get_backend, register_backend)
+from .config import ExecConfig
 from .batched import (DEFAULT_WAVE, partition_waves, run_wave_task,
                       wave_size)
 from .catalog import Catalog, StructureManager, ResourceManager, default_catalog
@@ -14,7 +15,8 @@ from .device_cache import DeviceCache
 from .flume import FlumeEngine
 from .failures import FaultPlan, TaskFailure
 
-__all__ = ["Catalog", "StructureManager", "ResourceManager",
+__all__ = ["ExecConfig",
+           "Catalog", "StructureManager", "ResourceManager",
            "default_catalog", "AdHocEngine", "QueryResult", "default_engine",
            "FlumeEngine", "FaultPlan", "TaskFailure",
            "ExecBackend", "NumpyBackend", "JaxBackend", "get_backend",

@@ -30,6 +30,7 @@ from ..fdb.schema import DOUBLE, INT, STRING, Schema
 from .backend import as_backend
 from .batched import (merge_partition_partials, partition_waves,
                       resolve_partition_plan, run_wave_task, wave_size)
+from .config import ExecConfig
 from .catalog import Catalog, default_catalog
 from .failures import FaultPlan, TaskFailure
 from .processors import (AggPartial, aggregate_consume, aggregate_produce,
@@ -93,18 +94,18 @@ class AdHocEngine:
                  num_servers: int = 8,
                  profile_log=None, backend=None,
                  wave: Optional[int] = None,
-                 partitions: Optional[int] = None):
+                 partitions: Optional[int] = None,
+                 config: Optional[ExecConfig] = None):
         self.catalog = catalog or default_catalog()
         self.num_servers = num_servers
-        # execution backend: None → $REPRO_EXEC_BACKEND or "numpy";
-        # accepts a registered name or an ExecBackend instance
-        self.backend = as_backend(backend)
-        # shards per batched dispatch wave:
-        # arg > $REPRO_EXEC_WAVE > backend default (8 batched / 1 host)
-        self.wave = wave_size(wave, self.backend)
-        # execution partitions ("which device runs which shards"):
-        # arg > $REPRO_EXEC_PARTITIONS > mesh size (batched backends)
-        self.partitions = partitions
+        # one consolidated config (see exec.config): explicit config
+        # fields > legacy per-field kwargs (deprecation shims) > env >
+        # defaults.  The resolved values keep their legacy attributes.
+        self.config = (config or ExecConfig()).fill(
+            backend=backend, wave=wave, partitions=partitions)
+        self.backend = self.config.resolve_backend()
+        self.wave = self.config.resolve_wave(self.backend)
+        self.partitions = self.config.partitions
         if profile_log is None:
             from ..fdb.streaming import StreamingFDb
             profile_log = StreamingFDb("warpflow.query_log",
@@ -190,7 +191,9 @@ class AdHocEngine:
         with self.backend.partition_context(pi, pplan.num_partitions):
             return run_wave_task(db, plan, sids, tables, self.catalog,
                                  fault_plan, backend=self.backend,
-                                 prefetch_sids=nxt)
+                                 prefetch_sids=nxt,
+                                 fused=self.config.fused,
+                                 profile=self.config.profile)
 
     def _run_servers(self, db, plan, tables, grant, profile, fault_plan,
                      pplan: Optional[PartitionPlan] = None

@@ -91,9 +91,17 @@ import numpy as np
 
 from ..fdb.index import (bitmap_from_ids, bitmap_stack, ids_from_bitmap,
                          mask_from_bitmap)
-from .refine import (FIRST_HIT_NONE, pack_constraints,
+from .refine import (FIRST_HIT_NONE, LAST_HIT_NONE, pack_constraints,
                      pack_constraints_multi, pack_track_points,
-                     refine_tracks_host)
+                     reduction_verdict, refine_tracks_host)
+
+
+def _has_red(min_counts, dwells) -> bool:
+    """True when the per-constraint reductions change the verdict — a
+    non-default min count or any dwell predicate."""
+    return ((min_counts is not None
+             and any(int(k) != 1 for k in min_counts))
+            or (dwells is not None and any(d is not None for d in dwells)))
 
 
 def _segment_minmax_host(codes: np.ndarray, values: np.ndarray,
@@ -181,7 +189,9 @@ class ExecBackend:
     # ------------------------------------------------------- track refine
     def refine_tracks(self, batch, path: str, constraints,
                       candidates: Optional[np.ndarray] = None,
-                      edges=(), with_first_hits: bool = False):
+                      edges=(), with_first_hits: bool = False,
+                      min_counts=None, dwells=None,
+                      with_analytics: bool = False):
         """Exact Tesseract refine over the ragged track at ``path``:
         per-doc bool mask [batch.n], True iff for *every* ``(region, t0,
         t1)`` constraint some track point lies inside the region's cover
@@ -197,8 +207,14 @@ class ExecBackend:
         ``(mask, table)`` with ``table`` the uint64 [batch.n, C]
         first-hit table (``exec.refine.FIRST_HIT_NONE`` where a
         constraint never hits) — parity-checked byte-for-byte across
-        backends.  Host reference: vectorized numpy over the shard's CSR
-        columns."""
+        backends.
+
+        ``min_counts``/``dwells`` generalize the per-constraint verdict
+        (≥ k hits; last − first ≥ d seconds — see
+        ``exec.refine.refine_tracks_host``); ``with_analytics`` returns
+        ``(mask, first, last, count)`` — the full reduction-table family,
+        parity-checked across backends.  Host reference: vectorized
+        numpy over the shard's CSR columns."""
         lat = batch[path + ".lat"]
         lng = batch[path + ".lng"]
         tt = batch[path + ".t"]
@@ -206,20 +222,30 @@ class ExecBackend:
                                   lat.row_splits, batch.n,
                                   list(constraints), candidates,
                                   edges=tuple(edges),
-                                  with_first_hits=with_first_hits)
+                                  with_first_hits=with_first_hits,
+                                  min_counts=min_counts, dwells=dwells,
+                                  with_analytics=with_analytics)
 
     def refine_tracks_batched(self, batches, path: str, constraints,
                               candidates_list=None, edges=(),
-                              with_first_hits: bool = False):
+                              with_first_hits: bool = False,
+                              min_counts=None, dwells=None,
+                              with_analytics: bool = False):
         """Per-shard refine masks for one wave — the loop-over-shards
         oracle the batched overrides must match byte-for-byte.  Returns
-        the mask list, or ``(masks, tables)`` under ``with_first_hits``."""
+        the mask list, ``(masks, tables)`` under ``with_first_hits``, or
+        ``(masks, firsts, lasts, counts)`` under ``with_analytics``."""
         batches = list(batches)
         if candidates_list is None:
             candidates_list = [None] * len(batches)
         outs = [self.refine_tracks(b, path, constraints, cand, edges=edges,
-                                   with_first_hits=with_first_hits)
+                                   with_first_hits=with_first_hits,
+                                   min_counts=min_counts, dwells=dwells,
+                                   with_analytics=with_analytics)
                 for b, cand in zip(batches, candidates_list)]
+        if with_analytics:
+            return ([o[0] for o in outs], [o[1] for o in outs],
+                    [o[2] for o in outs], [o[3] for o in outs])
         if with_first_hits:
             return [m for m, _ in outs], [t for _, t in outs]
         return outs
@@ -239,22 +265,30 @@ class ExecBackend:
 
     def refine_tracks_multi(self, batches, path: str, constraints_list,
                             candidates_lists=None, edges_list=None,
-                            with_first_hits: bool = False):
+                            with_first_hits: bool = False,
+                            min_counts_list=None, dwells_list=None):
         """Per-query wave refine: Q queries' constraint lists against one
         wave's shared tracks.  Returns one ``refine_tracks_batched``
         result per query (mask list, or ``(masks, tables)`` under
-        ``with_first_hits``)."""
+        ``with_first_hits``).  ``min_counts_list``/``dwells_list`` carry
+        each query's per-constraint reductions (or ``None``)."""
         batches = list(batches)
         n_q = len(constraints_list)
         if candidates_lists is None:
             candidates_lists = [None] * n_q
         if edges_list is None:
             edges_list = [()] * n_q
+        if min_counts_list is None:
+            min_counts_list = [None] * n_q
+        if dwells_list is None:
+            dwells_list = [None] * n_q
         return [self.refine_tracks_batched(batches, path, cons, cands,
                                            edges=edges,
-                                           with_first_hits=with_first_hits)
-                for cons, cands, edges in zip(constraints_list,
-                                              candidates_lists, edges_list)]
+                                           with_first_hits=with_first_hits,
+                                           min_counts=mc, dwells=dw)
+                for cons, cands, edges, mc, dw in zip(
+                    constraints_list, candidates_lists, edges_list,
+                    min_counts_list, dwells_list)]
 
     def run_wave_fused_multi(self, shards, probes_multi, refines,
                              prefetch_shards=None):
@@ -273,6 +307,29 @@ class ExecBackend:
             out.append((n_cands, ids_list))
         return out
 
+    # -------------------------------------------------- sketch aggregation
+    def segment_hll(self, codes: np.ndarray, reg_idx: np.ndarray,
+                    ranks: np.ndarray, num_groups: int,
+                    num_regs: int) -> np.ndarray:
+        """Grouped HyperLogLog register build: per-row ``(group code,
+        register index, rank)`` triples → uint8 ``[num_groups, num_regs]``
+        per-group register planes.  The reduce is a plain max with
+        identity 0 (= empty register) — commutative and idempotent, so
+        the result is independent of row order and of how rows are split
+        across shards or partitions (the ``merge_partials`` contract for
+        sketches).  Rows with negative codes are ignored.  Host
+        reference: one ``np.maximum.at`` scatter."""
+        regs = np.zeros((num_groups, num_regs), dtype=np.uint8)
+        codes = np.asarray(codes, dtype=np.int64)
+        keep = codes >= 0
+        if not keep.all():
+            codes = codes[keep]
+            reg_idx = np.asarray(reg_idx, dtype=np.int64)[keep]
+            ranks = np.asarray(ranks, dtype=np.uint8)[keep]
+        np.maximum.at(regs, (codes, np.asarray(reg_idx, dtype=np.int64)),
+                      np.asarray(ranks, dtype=np.uint8))
+        return regs
+
     # -------------------------------------------------- fused wave pipeline
     def postings_bitmap(self, ids: np.ndarray, t_min: np.ndarray,
                         t_max: np.ndarray, t0: float, t1: float,
@@ -286,7 +343,7 @@ class ExecBackend:
             np.nonzero(overlap)[0].astype(np.int64), n_docs)
 
     def run_wave_fused(self, shards, probes, refine=None, agg=None,
-                       prefetch_shards=None):
+                       prefetch_shards=None, profile=None):
         """Whole-wave probe → refine → compact → (segment-agg) as one
         logical dispatch.  Returns ``(n_cands, ids_list, seg)``: per-shard
         pre-refine candidate counts, selected doc ids, and — when ``agg``
@@ -307,7 +364,9 @@ class ExecBackend:
         if refine is not None:
             masks = self.refine_tracks_batched(
                 [sh.batch for sh in shards], refine.path,
-                refine.constraints, masks, edges=refine.edges)
+                refine.constraints, masks, edges=refine.edges,
+                min_counts=getattr(refine, "min_counts", None),
+                dwells=getattr(refine, "dwells", None))
         ids_list = self.compact_masks(masks)
         seg = None
         if agg is not None:
@@ -813,28 +872,73 @@ class JaxBackend(ExecBackend):
             table[~np.asarray(candidates, dtype=bool), :] = FIRST_HIT_NONE
         return table
 
+    @staticmethod
+    def _an_tables(lh_hi: np.ndarray, lh_lo: np.ndarray, cnt: np.ndarray,
+                   candidates: Optional[np.ndarray]
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+        """Kernel last-hit word pair + count plane [C, n] → host uint64
+        last-hit table [n, C] and int64 count table, masked to the no-hit
+        identities outside ``candidates`` (byte parity with the restricted
+        oracle, which never evaluates those docs)."""
+        last = ((lh_hi.astype(np.uint64) << np.uint64(32))
+                | lh_lo.astype(np.uint64)).T.copy()
+        count = cnt.T.astype(np.int64)
+        if candidates is not None:
+            off = ~np.asarray(candidates, dtype=bool)
+            last[off, :] = LAST_HIT_NONE
+            count[off, :] = 0
+        return last, count
+
     def refine_tracks(self, batch, path, constraints,
                       candidates=None, edges=(),
-                      with_first_hits: bool = False):
+                      with_first_hits: bool = False,
+                      min_counts=None, dwells=None,
+                      with_analytics: bool = False):
         """One ``refine_tracks`` kernel launch over the full shard track
         (device-resident when primed), AND-combined with ``candidates`` on
         the host — byte-equal to the restricted numpy oracle because the
         per-doc verdict is independent of other docs.  Ordering ``edges``
         are a pure device-side compare over the first-hit table the same
-        launch produces (no extra dispatch)."""
+        launch produces (no extra dispatch).  Count/dwell reductions (or
+        an explicit ``with_analytics``) pull the full reduction tables
+        from the same launch and recompute the verdict host-side from the
+        count table (``exec.refine.reduction_verdict`` — the kernel's
+        all-hit mask can't express vacuous k=0 constraints)."""
         constraints = list(constraints)
         edges = list(edges)
         if not constraints or len(constraints) > 30 or batch.n == 0:
             # >30 constraints would overflow the kernel's int32 bitset
             return super().refine_tracks(batch, path, constraints,
                                          candidates, edges=edges,
-                                         with_first_hits=with_first_hits)
+                                         with_first_hits=with_first_hits,
+                                         min_counts=min_counts,
+                                         dwells=dwells,
+                                         with_analytics=with_analytics)
         pts, rows = self._track_pack(batch, path)
         if pts is None:
             return super().refine_tracks(batch, path, constraints,
                                          candidates, edges=edges,
-                                         with_first_hits=with_first_hits)
+                                         with_first_hits=with_first_hits,
+                                         min_counts=min_counts,
+                                         dwells=dwells,
+                                         with_analytics=with_analytics)
         cov = pack_constraints(constraints)
+        if with_analytics or _has_red(min_counts, dwells):
+            _, fh_hi, fh_lo, lh_hi, lh_lo, cnt = self._ops.refine_tracks(
+                self._dev(pts), self._dev(rows), self._jnp.asarray(cov),
+                batch.n, impl=self._impl(), with_analytics=True)
+            first = self._fh_table(np.asarray(fh_hi), np.asarray(fh_lo),
+                                   candidates)
+            last, count = self._an_tables(np.asarray(lh_hi),
+                                          np.asarray(lh_lo),
+                                          np.asarray(cnt), candidates)
+            mask = reduction_verdict(first, last, count, edges,
+                                     min_counts, dwells)
+            if candidates is not None:
+                mask &= np.asarray(candidates, dtype=bool)
+            if with_analytics:
+                return mask, first, last, count
+            return (mask, first) if with_first_hits else mask
         need_fh = bool(edges) or with_first_hits
         if need_fh:
             mask_d, fh_hi, fh_lo = self._ops.refine_tracks(
@@ -856,41 +960,99 @@ class JaxBackend(ExecBackend):
 
     def refine_tracks_batched(self, batches, path, constraints,
                               candidates_list=None, edges=(),
-                              with_first_hits: bool = False):
+                              with_first_hits: bool = False,
+                              min_counts=None, dwells=None,
+                              with_analytics: bool = False):
         """One ``refine_tracks_batched`` launch for the whole wave: the
         shards' packed point buffers are stacked (device-side when
         resident) and every shard shares the query's constraint table.
         Ragged point/doc counts are padded with never-matching rows.
         Ordering ``edges`` stay on device: the strict first-hit compare
         runs over the launch's stacked (hi, lo) tables before the masks
-        come back to feed ``compact_masks``."""
+        come back to feed ``compact_masks``.  Count/dwell reductions (or
+        ``with_analytics``) pull the stacked reduction tables from the
+        same launch and recompute each shard's verdict host-side via
+        ``exec.refine.reduction_verdict``."""
         batches = list(batches)
         constraints = list(constraints)
         edges = list(edges)
         if candidates_list is None:
             candidates_list = [None] * len(batches)
+        need_an = with_analytics or _has_red(min_counts, dwells)
         if not batches:
+            if with_analytics:
+                return [], [], [], []
             return ([], []) if with_first_hits else []
         if not constraints or len(constraints) > 30:
             return super().refine_tracks_batched(batches, path, constraints,
                                                  candidates_list,
                                                  edges=edges,
-                                                 with_first_hits=with_first_hits)
+                                                 with_first_hits=with_first_hits,
+                                                 min_counts=min_counts,
+                                                 dwells=dwells,
+                                                 with_analytics=with_analytics)
         packs = [self._track_pack(b, path) for b in batches]
         if any(pts is None for pts, _ in packs):
             return super().refine_tracks_batched(batches, path, constraints,
                                                  candidates_list,
                                                  edges=edges,
-                                                 with_first_hits=with_first_hits)
+                                                 with_first_hits=with_first_hits,
+                                                 min_counts=min_counts,
+                                                 dwells=dwells,
+                                                 with_analytics=with_analytics)
         need_fh = bool(edges) or with_first_hits
         ns = [b.n for b in batches]
         n_max = max(ns)
         p_max = max(pts.shape[1] for pts, _ in packs)
         tables: List[np.ndarray] = []
+        lasts: List[np.ndarray] = []
+        counts: List[np.ndarray] = []
         if n_max == 0 or p_max == 0:
-            masks = [np.zeros(n, dtype=bool) for n in ns]
-            tables = [np.full((n, len(constraints)), FIRST_HIT_NONE,
+            n_c = len(constraints)
+            tables = [np.full((n, n_c), FIRST_HIT_NONE,
                               dtype=np.uint64) for n in ns]
+            lasts = [np.full((n, n_c), LAST_HIT_NONE, dtype=np.uint64)
+                     for n in ns]
+            counts = [np.zeros((n, n_c), dtype=np.int64) for n in ns]
+            if need_an:
+                # an all-empty-track wave is not automatically all-False:
+                # vacuous (k <= 0) constraints still pass un-hit docs
+                masks = [reduction_verdict(f, l, c, edges, min_counts,
+                                           dwells)
+                         for f, l, c in zip(tables, lasts, counts)]
+            else:
+                masks = [np.zeros(n, dtype=bool) for n in ns]
+        elif need_an:
+            jnp = self._jnp
+            pts_pad, rows_pad = [], []
+            for pts, rows in packs:
+                p = pts.shape[1]
+                dp, dr = self._dev(pts), self._dev(rows)
+                if p < p_max:
+                    dp = jnp.zeros((4, p_max), jnp.uint32).at[:, :p].set(dp)
+                    dr = jnp.full((p_max,), -1, jnp.int32).at[:p].set(dr)
+                pts_pad.append(dp)
+                rows_pad.append(dr)
+            _, fh_hi, fh_lo, lh_hi, lh_lo, cnt = \
+                self._ops.refine_tracks_batched(
+                    jnp.stack(pts_pad), jnp.stack(rows_pad),
+                    jnp.asarray(pack_constraints(constraints)), n_max,
+                    impl=self._impl(), with_analytics=True)
+            hi_h, lo_h = np.asarray(fh_hi), np.asarray(fh_lo)
+            lhi_h, llo_h = np.asarray(lh_hi), np.asarray(lh_lo)
+            cnt_h = np.asarray(cnt)
+            masks = []
+            for i, (n, cand) in enumerate(zip(ns, candidates_list)):
+                first = self._fh_table(hi_h[i, :, :n], lo_h[i, :, :n],
+                                       cand)
+                last, count = self._an_tables(lhi_h[i, :, :n],
+                                              llo_h[i, :, :n],
+                                              cnt_h[i, :, :n], cand)
+                masks.append(reduction_verdict(first, last, count, edges,
+                                               min_counts, dwells))
+                tables.append(first)
+                lasts.append(last)
+                counts.append(count)
         else:
             jnp = self._jnp
             # pad each shard's resident buffers to the wave max, then one
@@ -928,11 +1090,14 @@ class JaxBackend(ExecBackend):
         for m, cand in zip(masks, candidates_list):
             if cand is not None:
                 m &= np.asarray(cand, dtype=bool)
+        if with_analytics:
+            return masks, tables, lasts, counts
         return (masks, tables) if with_first_hits else masks
 
     def refine_tracks_multi(self, batches, path, constraints_list,
                             candidates_lists=None, edges_list=None,
-                            with_first_hits: bool = False):
+                            with_first_hits: bool = False,
+                            min_counts_list=None, dwells_list=None):
         """Q coalesced queries' refine in ONE ``refine_tracks_multi``
         launch: the wave's track buffers are stacked once and shared, the
         per-query constraint tables ride a leading query axis (padded to
@@ -947,11 +1112,18 @@ class JaxBackend(ExecBackend):
         if edges_list is None:
             edges_list = [()] * n_q
         edges_list = [tuple(tuple(e) for e in es) for es in edges_list]
+        if min_counts_list is None:
+            min_counts_list = [None] * n_q
+        if dwells_list is None:
+            dwells_list = [None] * n_q
+        need_an = any(_has_red(mc, dw)
+                      for mc, dw in zip(min_counts_list, dwells_list))
 
         def fallback():
             return super(JaxBackend, self).refine_tracks_multi(
                 batches, path, constraints_list, candidates_lists,
-                edges_list, with_first_hits=with_first_hits)
+                edges_list, with_first_hits=with_first_hits,
+                min_counts_list=min_counts_list, dwells_list=dwells_list)
 
         if n_q == 0 or not batches:
             return fallback()
@@ -978,6 +1150,41 @@ class JaxBackend(ExecBackend):
         pts_stack = jnp.stack(pts_pad)
         rows_stack = jnp.stack(rows_pad)
         cov = pack_constraints_multi(constraints_list)
+        if need_an:
+            # one analytics launch; every query's verdict is recomputed
+            # host-side from its slice of the reduction tables (pad
+            # constraints sliced off — vacuous k=0 stays vacuous)
+            _, fh_hi, fh_lo, lh_hi, lh_lo, cnt = \
+                self._ops.refine_tracks_multi(
+                    pts_stack, rows_stack, jnp.asarray(cov), n_max,
+                    impl=self._impl(), with_analytics=True)
+            hi_h, lo_h = np.asarray(fh_hi), np.asarray(fh_lo)
+            lhi_h, llo_h = np.asarray(lh_hi), np.asarray(lh_lo)
+            cnt_h = np.asarray(cnt)
+            results = []
+            for q in range(n_q):
+                cands = candidates_lists[q]
+                if cands is None:
+                    cands = [None] * len(batches)
+                c_q = len(constraints_list[q])
+                mc, dw = min_counts_list[q], dwells_list[q]
+                masks, tables = [], []
+                for i, (n, cand) in enumerate(zip(ns, cands)):
+                    first = self._fh_table(hi_h[q, i, :c_q, :n],
+                                           lo_h[q, i, :c_q, :n], cand)
+                    last, count = self._an_tables(lhi_h[q, i, :c_q, :n],
+                                                  llo_h[q, i, :c_q, :n],
+                                                  cnt_h[q, i, :c_q, :n],
+                                                  cand)
+                    m = reduction_verdict(first, last, count,
+                                          edges_list[q], mc, dw)
+                    if cand is not None:
+                        m &= np.asarray(cand, dtype=bool)
+                    masks.append(m)
+                    tables.append(first)
+                results.append((masks, tables) if with_first_hits
+                               else masks)
+            return results
         need_fh = with_first_hits or any(edges_list)
         if need_fh:
             out_d, fh_hi, fh_lo = self._ops.refine_tracks_multi(
@@ -1073,6 +1280,21 @@ class JaxBackend(ExecBackend):
                                        n_docs, impl=self._impl())
         return np.asarray(bm, dtype=np.uint32)
 
+    def segment_hll(self, codes, reg_idx, ranks, num_groups: int,
+                    num_regs: int) -> np.ndarray:
+        """One ``segment_hll`` launch: the (group, register) pair folds
+        into a composite segment id and the rank plane max-reduces on
+        device (``jax.ops.segment_max`` — exact uint8 integer max, so the
+        result is byte-equal to the host scatter oracle)."""
+        codes = np.asarray(codes, dtype=np.int64)
+        reg_idx = np.asarray(reg_idx, dtype=np.int64)
+        composite = np.where(codes >= 0, codes * num_regs + reg_idx, -1)
+        out = self._ops.segment_hll(
+            self._jnp.asarray(composite),
+            self._jnp.asarray(np.asarray(ranks, dtype=np.uint8)[:, None]),
+            num_groups * num_regs, impl=self._impl())
+        return np.asarray(out)[:, 0].reshape(num_groups, num_regs)
+
     def _refine_stack(self, shards, packs, path: str):
         """Wave-stacked (pts [S, 4, P], rows [S, P]) device buffers for
         the fused refine stage, keyed in the DeviceCache per wave
@@ -1156,7 +1378,7 @@ class JaxBackend(ExecBackend):
         return facts, offsets, codes_dev, tuple(vals_dev), total
 
     def run_wave_fused(self, shards, probes, refine=None, agg=None,
-                       prefetch_shards=None):
+                       prefetch_shards=None, profile=None):
         """One fused dispatch for the whole wave (``kernels.fused``), or
         ``None`` to decline to the per-primitive path: a refine spec with
         zero or >30 constraints, a shard without a packed track, or a
@@ -1171,9 +1393,18 @@ class JaxBackend(ExecBackend):
             return [], [], ([] if agg is not None else None)
         packs = None
         edges: Tuple = ()
+        mcs: Tuple = ()
+        dws: Tuple = ()
         if refine is not None:
             cons = list(refine.constraints)
             edges = tuple(tuple(e) for e in refine.edges)
+            mcs = tuple(int(k) for k in
+                        (getattr(refine, "min_counts", None) or ()))
+            dws = tuple(None if d is None else float(d) for d in
+                        (getattr(refine, "dwells", None) or ()))
+            if not _has_red(mcs, dws):
+                # default reductions: keep the legacy jit-cache key
+                mcs, dws = (), ()
             if not cons or len(cons) > 30:
                 return None
             packs = [self._track_pack(sh.batch, refine.path)
@@ -1198,7 +1429,8 @@ class JaxBackend(ExecBackend):
         if refine is not None and max(p.shape[1] for p, _ in packs) == 0:
             return None
         impl = self._impl()
-        profile = os.environ.get("REPRO_EXEC_PROFILE") == "1"
+        if profile is None:     # explicit config wins over the env knob
+            profile = os.environ.get("REPRO_EXEC_PROFILE") == "1"
         t_up = _time.perf_counter()
         k = 1 + max((len(ps) for ps in probes), default=0)
         stack = np.zeros((len(shards), k, w), dtype=np.uint32)
@@ -1228,8 +1460,9 @@ class JaxBackend(ExecBackend):
             if agg is not None else ()
         cand, sel_idx, sel_counts, segs = self._ops.run_wave_fused(
             probe_dev, ns_dev, pts_stack, rows_stack, cov_dev, codes_dev,
-            vals_dev, num_docs=n_max, edges=edges, total_groups=total,
-            impl=impl, profile=profile, minmax=minmax)
+            vals_dev, num_docs=n_max, edges=edges, min_counts=mcs,
+            dwells=dws, total_groups=total, impl=impl, profile=profile,
+            minmax=minmax)
         # stage wave k+1's buffers before wave k's outputs sync to host
         if prefetch_shards:
             self.prefetch_wave(prefetch_shards, refine, agg)
@@ -1281,6 +1514,8 @@ class JaxBackend(ExecBackend):
         has_refine = any(r is not None for r in refines)
         path = None
         packs = None
+        mcs_multi: Tuple = ()
+        dws_multi: Tuple = ()
         if has_refine:
             if not all(r is not None for r in refines):
                 return None              # mixed refine/no-refine group
@@ -1290,6 +1525,26 @@ class JaxBackend(ExecBackend):
             cons_list = [list(r.constraints) for r in refines]
             if any(not c or len(c) > 30 for c in cons_list):
                 return None
+            mcs_multi = tuple(
+                tuple(int(k) for k in
+                      (getattr(r, "min_counts", None) or ()))
+                for r in refines)
+            dws_multi = tuple(
+                tuple(None if d is None else float(d) for d in
+                      (getattr(r, "dwells", None) or ()))
+                for r in refines)
+            if not any(_has_red(mc, dw)
+                       for mc, dw in zip(mcs_multi, dws_multi)):
+                # default reductions: keep the legacy jit-cache key
+                mcs_multi = tuple(() for _ in refines)
+                dws_multi = tuple(() for _ in refines)
+            for mc, dw in zip(mcs_multi, dws_multi):
+                if mc and all(int(k) <= 0 for k in mc) \
+                        and not any(d is not None for d in dw):
+                    # an all-vacuous query passes docs with zero points;
+                    # the multi kernel's always-hit pad constraints can't
+                    # express that — decline to the per-query path
+                    return None
             packs = [self._track_pack(sh.batch, path) for sh in shards]
             if any(p is None for p, _ in packs):
                 return None
@@ -1330,7 +1585,9 @@ class JaxBackend(ExecBackend):
                                 for r in refines)
         cand, sel_idx, sel_counts = self._ops.run_wave_fused_multi(
             probe_dev, ns_dev, pts_stack, rows_stack, cov_dev,
-            num_docs=n_max, edges_multi=edges_multi, impl=self._impl())
+            num_docs=n_max, edges_multi=edges_multi,
+            min_counts_multi=mcs_multi, dwells_multi=dws_multi,
+            impl=self._impl())
         if prefetch_shards:
             self.prefetch_wave(prefetch_shards,
                                refines[0] if has_refine else None)

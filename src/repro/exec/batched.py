@@ -69,8 +69,11 @@ WAVE_ENV = "REPRO_EXEC_WAVE"
 FUSED_ENV = "REPRO_EXEC_FUSED"
 
 
-def fused_enabled() -> bool:
-    """Fused whole-wave dispatch is on unless ``REPRO_EXEC_FUSED=0``."""
+def fused_enabled(override: Optional[bool] = None) -> bool:
+    """Fused whole-wave dispatch is on unless ``REPRO_EXEC_FUSED=0``.
+    An explicit ``override`` (``ExecConfig.fused``) wins over the env."""
+    if override is not None:
+        return bool(override)
     return os.environ.get(FUSED_ENV, "") != "0"
 
 
@@ -249,7 +252,9 @@ def run_wave_task(db: FDb, plan: Plan, sids: Sequence[int],
                   tables: Optional[Dict[int, CollectedTable]],
                   catalog, fault_plan: Optional[FaultPlan] = None,
                   stage: str = "server", backend=None,
-                  prefetch_sids: Optional[Sequence[int]] = None
+                  prefetch_sids: Optional[Sequence[int]] = None,
+                  fused: Optional[bool] = None,
+                  profile: Optional[bool] = None
                   ) -> Tuple[List[ShardPartial], List[int]]:
     """Run one wave of shard tasks through the batched backend seam.
 
@@ -283,7 +288,7 @@ def run_wave_task(db: FDb, plan: Plan, sids: Sequence[int],
     # ONE launch when the backend and plan shape allow it
     fused_out = None
     fused_agg: Optional[FusedAggPlan] = None
-    if (fused_enabled() and getattr(backend, "batched_dispatch", False)
+    if (fused_enabled(fused) and getattr(backend, "batched_dispatch", False)
             and plan.residual is None and len(plan.refines) <= 1):
         fused_agg = fused_agg_plan(plan, shards)
         pre = ([db.shards[s] for s in prefetch_sids]
@@ -291,7 +296,7 @@ def run_wave_task(db: FDb, plan: Plan, sids: Sequence[int],
         fused_out = backend.run_wave_fused(
             shards, probe_bms,
             plan.refines[0] if plan.refines else None, fused_agg,
-            prefetch_shards=pre)
+            prefetch_shards=pre, profile=profile)
         if fused_out is None:                 # backend declined this wave
             fused_agg = None
 
@@ -315,7 +320,8 @@ def run_wave_task(db: FDb, plan: Plan, sids: Sequence[int],
         for rf in plan.refines:
             masks = backend.refine_tracks_batched(
                 [sh.batch for sh in shards], rf.path, rf.constraints,
-                masks, edges=rf.edges)
+                masks, edges=rf.edges, min_counts=rf.min_counts,
+                dwells=rf.dwells)
         ids_list = backend.compact_masks(masks)
     t1 = time.perf_counter()
 

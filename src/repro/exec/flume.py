@@ -39,6 +39,7 @@ from .backend import as_backend
 from .batched import (merge_partition_partials, partition_waves,
                       resolve_partition_plan, run_wave_task, wave_size)
 from .catalog import Catalog, default_catalog
+from .config import ExecConfig
 from .failures import FaultPlan, TaskFailure
 from .processors import (aggregate_consume, aggregate_produce,
                          apply_distinct, apply_limit, apply_sort,
@@ -56,13 +57,16 @@ class FlumeEngine:
                  speculation: bool = True,
                  speculation_factor: float = 4.0,
                  backend=None, wave: Optional[int] = None,
-                 partitions: Optional[int] = None):
+                 partitions: Optional[int] = None,
+                 config: Optional[ExecConfig] = None):
         self.catalog = catalog or default_catalog()
-        self.backend = as_backend(backend)
-        self.wave = wave_size(wave, self.backend)
-        # execution partitions ("which device runs which shards"):
-        # arg > $REPRO_EXEC_PARTITIONS > mesh size (batched backends)
-        self.partitions = partitions
+        # consolidated config (see exec.config): explicit config fields >
+        # legacy kwargs (shims) > env > defaults
+        self.config = (config or ExecConfig()).fill(
+            backend=backend, wave=wave, partitions=partitions)
+        self.backend = self.config.resolve_backend()
+        self.wave = self.config.resolve_wave(self.backend)
+        self.partitions = self.config.partitions
         self.ckpt_dir = ckpt_dir or os.path.join(tempfile.gettempdir(),
                                                  "warpflume")
         self.max_workers = max_workers
@@ -118,7 +122,8 @@ class FlumeEngine:
                     return run_wave_task(
                         db, plan, sids, tables, self.catalog, None,
                         stage="server", backend=self.backend,
-                        prefetch_sids=nxt)
+                        prefetch_sids=nxt, fused=self.config.fused,
+                        profile=self.config.profile)
         partials = self._run_stage(
             stage="server", job_dir=job_dir, task_ids=plan.shard_ids,
             fn=lambda sid: run_shard_task(db, plan, sid, tables,

@@ -20,7 +20,7 @@ from ..core.exprs import (AggSpec, CollectedTable, EvalContext, Expr,
 from ..core.flow import (AggregateOp, DistinctOp, FilterOp, FlattenOp,
                          JoinOp, LimitOp, MapOp, ModelApplyOp, Op, SortOp,
                          SubFlowOp)
-from ..core.sketches import HyperLogLog, hash_values
+from ..core.sketches import HyperLogLog, hash_values, hll_register_rows
 from ..fdb.columnar import Column, ColumnBatch
 from ..fdb.fdb import FDb
 from ..fdb.index import ids_from_bitmap
@@ -365,8 +365,8 @@ def _agg_prepare(batch: ColumnBatch, spec: AggSpec) -> Optional[_AggPrep]:
 
 
 def _agg_finalize(prep: _AggPrep, spec: AggSpec,
-                  seg_results: List[Tuple[np.ndarray, np.ndarray]]
-                  ) -> AggPartial:
+                  seg_results: List[Tuple[np.ndarray, np.ndarray]],
+                  backend=None) -> AggPartial:
     """(s, s2) per segment slot + host order stats/sketches → AggPartial."""
     codes, counts, n_groups = prep.codes, prep.counts, prep.n_groups
     rows_by_group: Optional[List[np.ndarray]] = None
@@ -401,8 +401,17 @@ def _agg_finalize(prep: _AggPrep, spec: AggSpec,
         elif kind == "max":
             per_agg.append([float(arr[r].max()) for r in _rows()])
         elif kind == "approx_distinct":
-            per_agg.append([HyperLogLog().add(arr[r], voc)
-                            for r in _rows()])
+            # grouped sketch build as ONE segment-max through the backend
+            # seam: per-row (register index, rank) pairs scatter-max into
+            # per-group register planes — byte-equal to building each
+            # group's HyperLogLog from its row set, and partition-
+            # invariant because register max is commutative + idempotent
+            hll_p = HyperLogLog().p
+            idx, rank = hll_register_rows(hash_values(arr, voc), hll_p)
+            regs = as_backend(backend).segment_hll(
+                codes, idx, rank, n_groups, 1 << hll_p)
+            per_agg.append([HyperLogLog(hll_p, regs[g].copy())
+                            for g in range(n_groups)])
         else:
             raise ValueError(kind)
 
@@ -422,7 +431,7 @@ def aggregate_produce(batch: ColumnBatch, spec: AggSpec,
     for arr in prep.seg_arrays:
         _, s, s2 = backend.segment_aggregate(prep.codes, arr, prep.n_groups)
         seg_results.append((s, s2))
-    return _agg_finalize(prep, spec, seg_results)
+    return _agg_finalize(prep, spec, seg_results, backend=backend)
 
 
 def aggregate_produce_batched(batches: Sequence[ColumnBatch], spec: AggSpec,
@@ -444,7 +453,7 @@ def aggregate_produce_batched(batches: Sequence[ColumnBatch], spec: AggSpec,
         for p, (_, s, s2) in zip(live, results):
             seg_by_prep[id(p)].append((s, s2))
     return [AggPartial() if p is None
-            else _agg_finalize(p, spec, seg_by_prep[id(p)])
+            else _agg_finalize(p, spec, seg_by_prep[id(p)], backend=backend)
             for p in preps]
 
 

@@ -17,10 +17,15 @@ during the window, for every constraint" — runs in two shapes:
 
 Both shapes are exact bit/integer work on the same inputs, so backend
 results are byte-identical (the parity contract the tests enforce) — and
-both produce the same per-(doc × constraint) **first-hit** table (minimum
-packed timestamp among a doc's points satisfying a constraint,
-:data:`FIRST_HIT_NONE` when none) that ordered (A-then-B) queries compare
-edge-wise.
+both produce the same per-(doc × constraint) **reduction tables** from the
+one-hot compare pass: the **first-hit** table (minimum packed timestamp
+among a doc's points satisfying a constraint, :data:`FIRST_HIT_NONE` when
+none) that ordered (A-then-B) queries compare edge-wise, the dual
+**last-hit** max table (:data:`LAST_HIT_NONE` when none), and the
+per-constraint **hit count** — the inputs to ``Tesseract.at_least(k)``
+("≥ k points in A") and ``Tesseract.dwell(min_s)`` (last − first ≥ n
+seconds, compared on the unpacked float64 values — the sort key preserves
+order, not differences).
 """
 from __future__ import annotations
 
@@ -31,9 +36,10 @@ import numpy as np
 from ..fdb.columnar import span_indices
 from ..geo import mercator as M
 
-__all__ = ["f64_sort_key", "pack_track_points", "pack_constraints",
-           "pack_constraints_multi", "refine_tracks_host",
-           "FIRST_HIT_NONE"]
+__all__ = ["f64_sort_key", "f64_from_sort_key", "pack_track_points",
+           "pack_constraints", "pack_constraints_multi",
+           "refine_tracks_host", "reduction_verdict", "FIRST_HIT_NONE",
+           "LAST_HIT_NONE"]
 
 _U32 = np.uint64(0xFFFFFFFF)
 _SHIFT32 = np.uint64(32)
@@ -42,6 +48,10 @@ _SHIFT32 = np.uint64(32)
 #: ``f64_sort_key`` reaches 0xFFFF… only for NaN payloads, and NaN
 #: timestamps never satisfy a window compare, so "no hit" is unambiguous
 FIRST_HIT_NONE = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+#: last-hit sentinel, the max-reduce dual: ``f64_sort_key`` reaches 0 only
+#: for negative NaN payloads, which never satisfy a window compare
+LAST_HIT_NONE = np.uint64(0)
 
 
 def f64_sort_key(t) -> np.ndarray:
@@ -53,6 +63,20 @@ def f64_sort_key(t) -> np.ndarray:
     bits = t.view(np.uint64)
     neg = bits >> np.uint64(63) != 0
     return np.where(neg, ~bits, bits | np.uint64(1) << np.uint64(63))
+
+
+def f64_from_sort_key(k) -> np.ndarray:
+    """Inverse of :func:`f64_sort_key`: uint64 order key → float64.
+
+    Dwell predicates need real time *differences* — the sort key preserves
+    order, not arithmetic — so last/first keys are unpacked before the
+    ``last − first >= min_s`` compare.  Sentinel keys unpack to NaN
+    payloads, which fail any dwell compare.
+    """
+    k = np.asarray(k, dtype=np.uint64)
+    sign = k >> np.uint64(63) != 0
+    bits = np.where(sign, k & ~(np.uint64(1) << np.uint64(63)), ~k)
+    return bits.view(np.float64)
 
 
 def _split_words(v: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
@@ -154,12 +178,51 @@ def pack_constraints_multi(constraints_list) -> np.ndarray:
     return out
 
 
+def reduction_verdict(first: np.ndarray, last: np.ndarray,
+                      count: np.ndarray, edges: Sequence[Tuple[int, int]]
+                      = (), min_counts: Optional[Sequence[int]] = None,
+                      dwells: Optional[Sequence[Optional[float]]] = None
+                      ) -> np.ndarray:
+    """Per-doc verdict recomputed from host reduction tables.
+
+    ``first``/``last`` uint64 [n_docs, C], ``count`` int [n_docs, C] —
+    the tables :func:`refine_tracks_host` (or the synced kernel outputs)
+    produce.  The kernel's all-constraints-hit mask can't express a
+    ``k = 0`` (vacuous) constraint, so the jax backend recomputes the
+    verdict from the count table whenever reductions are present:
+    ``doc_hit ≡ count > 0`` exactly, byte-equal to the oracle's verdict.
+    """
+    n_docs, n_c = count.shape
+    out = np.ones(n_docs, dtype=bool)
+    for c in range(n_c):
+        doc_hit = count[:, c] > 0
+        k = 1 if min_counts is None else int(min_counts[c])
+        if k == 1:
+            ok = doc_hit
+        elif k <= 0:
+            ok = np.ones(n_docs, dtype=bool)
+        else:
+            ok = count[:, c] >= k
+        d = None if dwells is None else dwells[c]
+        if d is not None:
+            span = f64_from_sort_key(last[:, c]) \
+                - f64_from_sort_key(first[:, c])
+            ok = ok & doc_hit & (span >= float(d))
+        out &= ok
+    for i, j in edges:
+        out &= first[:, i] < first[:, j]
+    return out
+
+
 def refine_tracks_host(lat: np.ndarray, lng: np.ndarray, t: np.ndarray,
                        row_splits: Optional[np.ndarray], n_docs: int,
                        constraints: Sequence[Tuple[object, float, float]],
                        candidates: Optional[np.ndarray] = None,
                        edges: Sequence[Tuple[int, int]] = (),
-                       with_first_hits: bool = False):
+                       with_first_hits: bool = False,
+                       min_counts: Optional[Sequence[int]] = None,
+                       dwells: Optional[Sequence[Optional[float]]] = None,
+                       with_analytics: bool = False):
     """Numpy oracle: exact per-doc refine mask [n_docs] bool.
 
     ``candidates`` (bool [n_docs]) restricts evaluation to the index-probe
@@ -174,36 +237,71 @@ def refine_tracks_host(lat: np.ndarray, lng: np.ndarray, t: np.ndarray,
     doc's points satisfying the constraint, or :data:`FIRST_HIT_NONE` when
     none do.  Equal first hits do not count as before.
 
+    ``min_counts[c] = k`` replaces the "≥ 1 hit" verdict for constraint
+    ``c`` with "≥ k hits" (each satisfying track point counts once).
+    ``k = 0`` is vacuously true — the constraint stops filtering (the
+    planner also drops its index probe so un-hit docs survive to refine).
+    ``dwells[c] = d`` additionally requires the doc to have spent at least
+    ``d`` seconds in the constraint: ≥ 1 hit and
+    ``t(last hit) − t(first hit) >= d`` on the unpacked float64 values
+    (inclusive at the threshold; a single hit satisfies only ``d <= 0``).
+
     ``with_first_hits`` returns ``(mask, first)`` with ``first`` the
     uint64 ``[n_docs, C]`` first-hit table (sentinel outside ``candidates``
-    when restricted) — the parity surface the jax kernel must match byte
-    for byte.
+    when restricted); ``with_analytics`` returns
+    ``(mask, first, last, count)`` adding the uint64 last-hit table
+    (:data:`LAST_HIT_NONE` when no hit) and int64 hit-count table — the
+    parity surfaces the jax kernel must match byte for byte.
     """
     n_c = len(constraints)
     edges = list(edges)
-    need_first = bool(edges) or with_first_hits
+    any_dwell = dwells is not None and any(d is not None for d in dwells)
+    need_first = bool(edges) or with_first_hits or with_analytics or any_dwell
+    need_last = with_analytics or any_dwell
+    need_count = with_analytics or min_counts is not None
     first = np.full((n_docs, n_c), FIRST_HIT_NONE, dtype=np.uint64) \
         if need_first else None
+    last = np.full((n_docs, n_c), LAST_HIT_NONE, dtype=np.uint64) \
+        if need_last else None
+    count = np.zeros((n_docs, n_c), dtype=np.int64) if need_count else None
+
+    def ok_of(c, doc_hit):
+        ok = doc_hit
+        if min_counts is not None and int(min_counts[c]) != 1:
+            k = int(min_counts[c])
+            ok = np.ones(n_docs, dtype=bool) if k <= 0 else count[:, c] >= k
+        if dwells is not None and dwells[c] is not None:
+            span = f64_from_sort_key(last[:, c]) \
+                - f64_from_sort_key(first[:, c])
+            ok = ok & doc_hit & (span >= float(dwells[c]))
+        return ok
 
     def finish(out):
         for i, j in edges:
             out &= first[:, i] < first[:, j]
+        if with_analytics:
+            return out, first, last, count
         return (out, first) if with_first_hits else out
 
     if n_docs == 0:
         return finish(np.zeros(0, dtype=bool))
     if row_splits is None:                         # singular location + t
         keys = M.latlng_to_morton(lat, lng)
-        out = np.ones(n_docs, dtype=bool) if candidates is None \
-            else np.asarray(candidates, dtype=bool).copy()
-        tkey = f64_sort_key(t) if need_first else None
+        cand = None if candidates is None \
+            else np.asarray(candidates, dtype=bool)
+        out = np.ones(n_docs, dtype=bool) if cand is None else cand.copy()
+        tkey = f64_sort_key(t) if (need_first or need_last) else None
         for c, (region, t0, t1) in enumerate(constraints):
             hit = region.contains(keys) & (t >= t0) & (t <= t1)
+            masked = hit if cand is None else hit & cand
             if need_first:
-                masked = hit if candidates is None \
-                    else hit & np.asarray(candidates, dtype=bool)
                 first[:, c] = np.where(masked, tkey, FIRST_HIT_NONE)
-            out &= hit
+            if need_last:
+                last[:, c] = np.where(masked, tkey, LAST_HIT_NONE)
+            if need_count:
+                count[:, c] = masked.astype(np.int64)
+            out &= ok_of(c, masked) if (min_counts is not None
+                                        or any_dwell) else hit
         return finish(out)
     if candidates is not None:
         cand = np.asarray(candidates, dtype=bool)
@@ -216,7 +314,7 @@ def refine_tracks_host(lat: np.ndarray, lng: np.ndarray, t: np.ndarray,
         row_of = np.repeat(np.arange(n_docs), np.diff(row_splits))
         out = np.ones(n_docs, dtype=bool)
     keys = M.latlng_to_morton(lat, lng)
-    tkey = f64_sort_key(t) if need_first else None
+    tkey = f64_sort_key(t) if (need_first or need_last) else None
     for c, (region, t0, t1) in enumerate(constraints):
         hit = region.contains(keys) & (t >= t0) & (t <= t1)
         doc_hit = np.zeros(n_docs, dtype=bool)
@@ -225,5 +323,10 @@ def refine_tracks_host(lat: np.ndarray, lng: np.ndarray, t: np.ndarray,
             if need_first:
                 np.minimum.at(first[:, c], row_of,
                               np.where(hit, tkey, FIRST_HIT_NONE))
-        out &= doc_hit
+            if need_last:
+                np.maximum.at(last[:, c], row_of,
+                              np.where(hit, tkey, LAST_HIT_NONE))
+            if need_count:
+                np.add.at(count[:, c], row_of, hit)
+        out &= ok_of(c, doc_hit)
     return finish(out)

@@ -70,7 +70,9 @@ def run_shard_task(db: FDb, plan: Plan, shard_id: int,
         for rf in plan.refines:
             mask = backend.refine_tracks(shard.batch, rf.path,
                                          rf.constraints, mask,
-                                         edges=rf.edges)
+                                         edges=rf.edges,
+                                         min_counts=rf.min_counts,
+                                         dwells=rf.dwells)
         ids = backend.compact_mask(mask)
     else:
         ids = backend.select_ids(bm, shard.n)

@@ -37,6 +37,7 @@ the ``--profile`` bench flag's data source.  This module never imports
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import threading
 import time
@@ -53,7 +54,8 @@ from . import refine as _refine
 from . import segment_agg as _seg
 
 __all__ = ["run_wave_fused", "run_wave_fused_multi", "postings_bitmap",
-           "record_stage", "stage_times", "reset_stage_times"]
+           "segment_hll", "record_stage", "stage_times",
+           "reset_stage_times"]
 
 
 # --------------------------------------------------------------------------
@@ -102,17 +104,72 @@ def _mask_stage(bm, ns, num_docs: int):
     return (bits != 0) & (docs[None, :] < ns[:, None])
 
 
+def _unpack_sort_key(hi, lo):
+    """uint32 (hi, lo) packed-timestamp words → float64 (inverse of the
+    order-preserving IEEE-754 sort-key map).  Needs x64 enabled — callers
+    wrap dwell-carrying pipelines in ``enable_x64``."""
+    k = (hi.astype(jnp.uint64) << jnp.uint64(32)) | lo.astype(jnp.uint64)
+    sign = (k >> jnp.uint64(63)) != 0
+    bits = jnp.where(sign, k & ~(jnp.uint64(1) << jnp.uint64(63)), ~k)
+    return jax.lax.bitcast_convert_type(bits, jnp.float64)
+
+
+def _reduction_verdict(fh_hi, fh_lo, lh_hi, lh_lo, cnt, edges,
+                       min_counts, dwells):
+    """Per-doc verdict recomputed from the reduction tables (leading axes
+    arbitrary; constraint axis second-to-last).  The kernel's bits==full
+    mask can't express k=0 (vacuous) constraints, so the verdict ANDs
+    per-constraint ``ok`` terms built from the count table instead:
+    ``doc_hit ≡ cnt > 0`` exactly.  Static python loop — zero launches."""
+    n_c = cnt.shape[-2]
+    out = None
+    for c in range(n_c):
+        doc_hit = cnt[..., c, :] > 0
+        k = int(min_counts[c]) if c < len(min_counts) else 1
+        if k == 1:
+            ok = doc_hit
+        elif k <= 0:
+            ok = jnp.ones_like(doc_hit)
+        else:
+            ok = cnt[..., c, :] >= k
+        d = dwells[c] if c < len(dwells) else None
+        if d is not None:
+            span = _unpack_sort_key(lh_hi[..., c, :], lh_lo[..., c, :]) \
+                - _unpack_sort_key(fh_hi[..., c, :], fh_lo[..., c, :])
+            ok = ok & doc_hit & (span >= float(d))
+        out = ok if out is None else (out & ok)
+    for i, j in edges:               # A-then-B: first hit of i before j's
+        a_hi, a_lo = fh_hi[..., i, :], fh_lo[..., i, :]
+        b_hi, b_lo = fh_hi[..., j, :], fh_lo[..., j, :]
+        out = out & ((a_hi < b_hi) | ((a_hi == b_hi) & (a_lo < b_lo)))
+    return out
+
+
+def _has_reductions(min_counts, dwells) -> bool:
+    return any(int(k) != 1 for k in min_counts) \
+        or any(d is not None for d in dwells)
+
+
 def _refine_stage(impl: str, pts, rows, cov, num_docs: int,
-                  edges: Tuple[Tuple[int, int], ...]):
-    wf = bool(edges)
+                  edges: Tuple[Tuple[int, int], ...],
+                  min_counts: Tuple[int, ...] = (),
+                  dwells: Tuple[Optional[float], ...] = ()):
+    wa = _has_reductions(min_counts, dwells)
+    wf = bool(edges) and not wa
     if impl == "reference":
         r = _ref.refine_tracks_batched_ref(pts, rows, cov,
                                            num_docs=num_docs,
-                                           with_first_hits=wf)
+                                           with_first_hits=wf,
+                                           with_analytics=wa)
     else:
         r = _refine.refine_tracks_batched(pts, rows, cov, num_docs,
                                           interpret=(impl == "interpret"),
-                                          with_first_hits=wf)
+                                          with_first_hits=wf,
+                                          with_analytics=wa)
+    if wa:
+        _, fh_hi, fh_lo, lh_hi, lh_lo, cnt = r
+        return _reduction_verdict(fh_hi, fh_lo, lh_hi, lh_lo, cnt, edges,
+                                  min_counts, dwells)
     if not wf:
         return r
     out, fh_hi, fh_lo = r
@@ -164,7 +221,9 @@ def _agg_stage(impl: str, mask, codes, vals, total_groups: int,
 @functools.lru_cache(maxsize=None)
 def _fused_fn(impl: str, num_docs: int,
               edges: Tuple[Tuple[int, int], ...], total_groups: int,
-              has_refine: bool, minmax: Tuple[bool, ...] = ()):
+              has_refine: bool, minmax: Tuple[bool, ...] = (),
+              min_counts: Tuple[int, ...] = (),
+              dwells: Tuple[Optional[float], ...] = ()):
     """One jitted end-to-end wave pipeline for a static stage config."""
 
     def fn(probe_stack, ns, pts, rows, cov, codes, vals):
@@ -172,7 +231,7 @@ def _fused_fn(impl: str, num_docs: int,
         cand = mask.sum(axis=1).astype(jnp.int32)
         if has_refine:
             mask = mask & _refine_stage(impl, pts, rows, cov, num_docs,
-                                        edges)
+                                        edges, min_counts, dwells)
         sel_idx, sel_counts = _compact_stage(impl, mask)
         segs = None
         if total_groups > 0:
@@ -187,7 +246,8 @@ def _fused_fn(impl: str, num_docs: int,
 
 
 def _profiled(impl, probe_stack, ns, pts, rows, cov, codes, vals,
-              num_docs, edges, total_groups, has_refine, minmax=()):
+              num_docs, edges, total_groups, has_refine, minmax=(),
+              min_counts=(), dwells=()):
     """Same math, eager stage-by-stage with a sync + timer per stage."""
     t = time.perf_counter
     t0 = t()
@@ -197,7 +257,8 @@ def _profiled(impl, probe_stack, ns, pts, rows, cov, codes, vals,
     record_stage("probe", (t1 - t0) * 1e3)
     if has_refine:
         mask = jax.block_until_ready(
-            mask & _refine_stage(impl, pts, rows, cov, num_docs, edges))
+            mask & _refine_stage(impl, pts, rows, cov, num_docs, edges,
+                                 min_counts, dwells))
         t2 = t()
         record_stage("refine", (t2 - t1) * 1e3)
         t1 = t2
@@ -214,32 +275,37 @@ def _profiled(impl, probe_stack, ns, pts, rows, cov, codes, vals,
 
 def run_wave_fused(probe_stack, ns, pts=None, rows=None, cov=None,
                    codes=None, vals=(), *, num_docs: int,
-                   edges=(), total_groups: int = 0,
+                   edges=(), min_counts=(), dwells=(),
+                   total_groups: int = 0,
                    impl: str = "reference", profile: bool = False,
                    minmax=()):
     """Run one wave through the fused pipeline (see module docstring).
     ``minmax`` flags which value slots also reduce per-group min/max
-    (5-tuple partials) — same dispatch, no extra launches."""
+    (5-tuple partials); ``min_counts``/``dwells`` apply per-constraint
+    count/dwell verdicts inside the refine stage — same dispatch, no
+    extra launches.  Dwell verdicts unpack packed timestamps to float64
+    in the jit epilogue, so dwell-carrying pipelines run under
+    ``enable_x64`` on every impl (the integer kernels are unaffected)."""
     edges = tuple(tuple(e) for e in edges)
+    min_counts = tuple(int(k) for k in min_counts)
+    dwells = tuple(None if d is None else float(d) for d in dwells)
     vals = tuple(vals)
     minmax = tuple(bool(m) for m in minmax)
     has_refine = pts is not None
-    if impl == "reference":
-        # f64 value stacks + f64 accumulation, bit-equal to the host oracle
-        with jax.experimental.enable_x64():
-            if profile:
-                return _profiled(impl, probe_stack, ns, pts, rows, cov,
-                                 codes, vals, num_docs, edges,
-                                 total_groups, has_refine, minmax)
-            return _fused_fn(impl, num_docs, edges, total_groups,
-                             has_refine, minmax)(probe_stack, ns, pts,
-                                                 rows, cov, codes, vals)
-    if profile:
-        return _profiled(impl, probe_stack, ns, pts, rows, cov, codes,
-                         vals, num_docs, edges, total_groups, has_refine,
-                         minmax)
-    return _fused_fn(impl, num_docs, edges, total_groups, has_refine,
-                     minmax)(probe_stack, ns, pts, rows, cov, codes, vals)
+    any_dwell = any(d is not None for d in dwells)
+    # reference: f64 value stacks + f64 accumulation, bit-equal to the
+    # host oracle
+    ctx = jax.experimental.enable_x64() \
+        if (impl == "reference" or any_dwell) else contextlib.nullcontext()
+    with ctx:
+        if profile:
+            return _profiled(impl, probe_stack, ns, pts, rows, cov,
+                             codes, vals, num_docs, edges, total_groups,
+                             has_refine, minmax, min_counts, dwells)
+        return _fused_fn(impl, num_docs, edges, total_groups,
+                         has_refine, minmax, min_counts,
+                         dwells)(probe_stack, ns, pts, rows, cov, codes,
+                                 vals)
 
 
 # --------------------------------------------------------------------------
@@ -247,19 +313,44 @@ def run_wave_fused(probe_stack, ns, pts=None, rows=None, cov=None,
 # --------------------------------------------------------------------------
 
 def _refine_multi_stage(impl: str, pts, rows, cov, num_docs: int,
-                        edges_multi):
+                        edges_multi, min_counts_multi=(),
+                        dwells_multi=()):
     """Query-axis refine: cov [Q, C, 8, R] → masks [Q, S, num_docs], with
     each query's ordering edges applied against its own slice of the
-    first-hit tables (static per-query compare chain, zero launches)."""
-    wf = any(len(e) > 0 for e in edges_multi)
+    first-hit tables (static per-query compare chain, zero launches).
+    Queries carrying count/dwell reductions get their verdict recomputed
+    from their slice of the analytics tables instead — same launch."""
+    wa = any(_has_reductions(mc, ()) for mc in min_counts_multi) \
+        or any(_has_reductions((), dw) for dw in dwells_multi)
+    wf = any(len(e) > 0 for e in edges_multi) and not wa
     if impl == "reference":
         r = _ref.refine_tracks_multi_ref(pts, rows, cov,
                                          num_docs=num_docs,
-                                         with_first_hits=wf)
+                                         with_first_hits=wf,
+                                         with_analytics=wa)
     else:
         r = _refine.refine_tracks_multi(pts, rows, cov, num_docs,
                                         interpret=(impl == "interpret"),
-                                        with_first_hits=wf)
+                                        with_first_hits=wf,
+                                        with_analytics=wa)
+    if wa:
+        out, fh_hi, fh_lo, lh_hi, lh_lo, cnt = r
+        per_q = []
+        for qi, edges in enumerate(edges_multi):
+            mc = min_counts_multi[qi] if qi < len(min_counts_multi) else ()
+            dw = dwells_multi[qi] if qi < len(dwells_multi) else ()
+            if _has_reductions(mc, dw):
+                m = _reduction_verdict(fh_hi[qi], fh_lo[qi], lh_hi[qi],
+                                       lh_lo[qi], cnt[qi], edges, mc, dw)
+            else:
+                m = out[qi]
+                for i, j in edges:
+                    a_hi, a_lo = fh_hi[qi, :, i, :], fh_lo[qi, :, i, :]
+                    b_hi, b_lo = fh_hi[qi, :, j, :], fh_lo[qi, :, j, :]
+                    m = m & ((a_hi < b_hi)
+                             | ((a_hi == b_hi) & (a_lo < b_lo)))
+            per_q.append(m)
+        return jnp.stack(per_q)
     if not wf:
         return r
     out, fh_hi, fh_lo = r
@@ -275,7 +366,8 @@ def _refine_multi_stage(impl: str, pts, rows, cov, num_docs: int,
 
 
 @functools.lru_cache(maxsize=None)
-def _fused_multi_fn(impl: str, num_docs: int, edges_multi, has_refine):
+def _fused_multi_fn(impl: str, num_docs: int, edges_multi, has_refine,
+                    min_counts_multi=(), dwells_multi=()):
     """One jitted multi-query wave pipeline (probe → refine → compact).
     The query axis is folded into the shard axis for the probe and compact
     stages (the stacked kernels are shape-agnostic in S) and kept leading
@@ -290,7 +382,9 @@ def _fused_multi_fn(impl: str, num_docs: int, edges_multi, has_refine):
         cand = mask.sum(axis=2).astype(jnp.int32)
         if has_refine:
             mask = mask & _refine_multi_stage(impl, pts, rows, cov,
-                                              num_docs, edges_multi)
+                                              num_docs, edges_multi,
+                                              min_counts_multi,
+                                              dwells_multi)
         sel_idx, sel_counts = _compact_stage(
             impl, mask.reshape(q * s, num_docs))
         return (cand, sel_idx.reshape(q, s, num_docs),
@@ -301,6 +395,7 @@ def _fused_multi_fn(impl: str, num_docs: int, edges_multi, has_refine):
 
 def run_wave_fused_multi(probe_stacks, ns, pts=None, rows=None, cov=None,
                          *, num_docs: int, edges_multi=(),
+                         min_counts_multi=(), dwells_multi=(),
                          impl: str = "reference"):
     """Q coalesced queries through one wave in ONE dispatch.
 
@@ -308,16 +403,24 @@ def run_wave_fused_multi(probe_stacks, ns, pts=None, rows=None, cov=None,
     bitmaps (pad rows AND-identity as in the single-query path); ``cov``
     [Q, C, 8, R] uint32 — per-query constraint tables padded to common
     C/R (always-hit constraints / never-hit range slots); track buffers
-    are shared.  ``edges_multi`` is one edge tuple per query.  Returns
+    are shared.  ``edges_multi`` is one edge tuple per query;
+    ``min_counts_multi``/``dwells_multi`` one reduction tuple per query
+    (pad constraints keep the k=1 / no-dwell defaults).  Returns
     ``(cand [Q, S], sel_idx [Q, S, N], sel_counts [Q, S])``.
     """
     edges_multi = tuple(tuple(tuple(e) for e in es) for es in edges_multi)
+    min_counts_multi = tuple(tuple(int(k) for k in mc)
+                             for mc in min_counts_multi)
+    dwells_multi = tuple(tuple(None if d is None else float(d) for d in dw)
+                         for dw in dwells_multi)
     has_refine = pts is not None
-    fn = _fused_multi_fn(impl, num_docs, edges_multi, has_refine)
-    if impl == "reference":
-        with jax.experimental.enable_x64():
-            return fn(probe_stacks, ns, pts, rows, cov)
-    return fn(probe_stacks, ns, pts, rows, cov)
+    any_dwell = any(d is not None for dw in dwells_multi for d in dw)
+    fn = _fused_multi_fn(impl, num_docs, edges_multi, has_refine,
+                         min_counts_multi, dwells_multi)
+    ctx = jax.experimental.enable_x64() \
+        if (impl == "reference" or any_dwell) else contextlib.nullcontext()
+    with ctx:
+        return fn(probe_stacks, ns, pts, rows, cov)
 
 
 # --------------------------------------------------------------------------
@@ -348,3 +451,29 @@ def postings_bitmap(ids, t_min, t_max, t0, t1, n_docs: int):
     with jax.experimental.enable_x64():
         return _postings_bitmap(jnp.asarray(ids), t_min, t_max,
                                 jnp.float64(t0), jnp.float64(t1), n_docs)
+
+
+# --------------------------------------------------------------------------
+# Segment HLL — per-group HyperLogLog register max behind the seam
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("num_groups",))
+def _segment_hll(group_ids, regs, num_groups: int):
+    valid = group_ids >= 0
+    gid = jnp.where(valid, group_ids, 0)
+    r = jnp.where(valid[:, None], regs, jnp.uint8(0))
+    return jax.ops.segment_max(r, gid, num_segments=num_groups)
+
+
+def segment_hll(group_ids, regs, num_groups: int):
+    """Per-group HLL register max: group_ids [N] int32 (< 0 masked out) ×
+    regs [N, M] uint8 register rows → [num_groups, M] maxed planes.
+    ``segment_max``'s identity for uint8 is 0 — exactly an empty HLL
+    register — so groups with no rows come back as empty sketches.
+    Register max is the HLL merge: commutative and idempotent, so the
+    result is invariant to row order and partitioning by construction.
+    """
+    if num_groups <= 0:
+        return jnp.zeros((0, int(regs.shape[1])), jnp.uint8)
+    return _segment_hll(jnp.asarray(group_ids), jnp.asarray(regs),
+                        num_groups)

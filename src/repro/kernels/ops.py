@@ -43,8 +43,8 @@ from . import ssm_scan as _ssm
 
 __all__ = ["default_impl", "bitmap_binary", "bitmap_intersect",
            "bitmap_intersect_batched", "compact", "compact_batched",
-           "segment_agg", "refine_tracks", "refine_tracks_batched",
-           "refine_tracks_multi",
+           "segment_agg", "segment_hll", "refine_tracks",
+           "refine_tracks_batched", "refine_tracks_multi",
            "run_wave_fused", "run_wave_fused_multi", "postings_bitmap",
            "merge_partials",
            "flash_attention", "ssm_scan",
@@ -181,91 +181,126 @@ def segment_agg(group_ids, values, num_groups: int,
 
 
 def refine_tracks(pts, rows, cov, num_docs: int, impl: Optional[str] = None,
-                  with_first_hits: bool = False):
+                  with_first_hits: bool = False,
+                  with_analytics: bool = False):
     """Exact point-in-cover × time-window refine over one shard's packed
     ragged track → per-doc hit mask [num_docs] bool (see kernels.refine).
     ``with_first_hits`` adds the per-(constraint × doc) first-hit uint32
-    (hi, lo) word tables the ordered-query edge compare consumes — same
-    fused pass, still one launch."""
+    (hi, lo) word tables the ordered-query edge compare consumes;
+    ``with_analytics`` the full (first, last, count) reduction family —
+    same fused pass, still one launch."""
     impl = _resolve(impl)
     record_launch("refine_tracks")
     if impl == "reference":
         return _ref.refine_tracks_ref(pts, rows, cov, num_docs=num_docs,
-                                      with_first_hits=with_first_hits)
+                                      with_first_hits=with_first_hits,
+                                      with_analytics=with_analytics)
     return _refine.refine_tracks(pts, rows, cov, num_docs,
                                  interpret=(impl == "interpret"),
-                                 with_first_hits=with_first_hits)
+                                 with_first_hits=with_first_hits,
+                                 with_analytics=with_analytics)
 
 
 def refine_tracks_batched(pts, rows, cov, num_docs: int,
                           impl: Optional[str] = None,
-                          with_first_hits: bool = False):
+                          with_first_hits: bool = False,
+                          with_analytics: bool = False):
     """Wave-stacked refine [S, 4, P] × [C, 8, R] → hit masks
     [S, num_docs] bool — one launch per wave of shards
     (+ first-hit word tables [S, C, num_docs] × 2 under
-    ``with_first_hits``)."""
+    ``with_first_hits``; + last-hit word tables and the int32 hit-count
+    table under ``with_analytics``)."""
     impl = _resolve(impl)
     record_launch("refine_tracks_batched")
     if impl == "reference":
-        return _ref.refine_tracks_batched_ref(pts, rows, cov,
-                                              num_docs=num_docs,
-                                              with_first_hits=with_first_hits)
+        return _ref.refine_tracks_batched_ref(
+            pts, rows, cov, num_docs=num_docs,
+            with_first_hits=with_first_hits,
+            with_analytics=with_analytics)
     return _refine.refine_tracks_batched(pts, rows, cov, num_docs,
                                          interpret=(impl == "interpret"),
-                                         with_first_hits=with_first_hits)
+                                         with_first_hits=with_first_hits,
+                                         with_analytics=with_analytics)
 
 
 def refine_tracks_multi(pts, rows, cov, num_docs: int,
                         impl: Optional[str] = None,
-                        with_first_hits: bool = False):
+                        with_first_hits: bool = False,
+                        with_analytics: bool = False):
     """Query-axis refine: Q coalesced queries' constraint tables
     [Q, C, 8, R] against one wave's shared track buffers [S, 4, P] →
     hit masks [Q, S, num_docs] bool in ONE launch (+ first-hit word
-    tables [Q, S, C, num_docs] × 2 under ``with_first_hits``)."""
+    tables [Q, S, C, num_docs] × 2 under ``with_first_hits``; the full
+    reduction family under ``with_analytics``)."""
     impl = _resolve(impl)
     record_launch("refine_tracks_multi")
     if impl == "reference":
-        return _ref.refine_tracks_multi_ref(pts, rows, cov,
-                                            num_docs=num_docs,
-                                            with_first_hits=with_first_hits)
+        return _ref.refine_tracks_multi_ref(
+            pts, rows, cov, num_docs=num_docs,
+            with_first_hits=with_first_hits,
+            with_analytics=with_analytics)
     return _refine.refine_tracks_multi(pts, rows, cov, num_docs,
                                        interpret=(impl == "interpret"),
-                                       with_first_hits=with_first_hits)
+                                       with_first_hits=with_first_hits,
+                                       with_analytics=with_analytics)
 
 
 def run_wave_fused(probe_stack, ns, pts=None, rows=None, cov=None,
                    codes=None, vals=(), *, num_docs: int, edges=(),
-                   total_groups: int = 0, impl: Optional[str] = None,
-                   profile: bool = False, minmax=()):
+                   min_counts=(), dwells=(), total_groups: int = 0,
+                   impl: Optional[str] = None, profile: bool = False,
+                   minmax=()):
     """Whole-wave fused pipeline (probe → refine → compact → segment-agg)
     in ONE dispatch — see ``kernels.fused``.  Counts as a single launch:
     the fused path's ⌈shards/wave⌉ *total*-dispatch contract hangs off
     this counter.  Each stage lowers to its Pallas kernel under
     ``pallas``/``interpret`` and to the jnp oracle under ``reference``.
     ``minmax`` flags value slots that also reduce per-group min/max in the
-    same dispatch."""
+    same dispatch; ``min_counts``/``dwells`` apply the per-constraint
+    count/dwell reduction verdicts inside the refine stage — same single
+    dispatch."""
     impl = _resolve(impl)
     record_launch("run_wave_fused")
     return _fused.run_wave_fused(probe_stack, ns, pts, rows, cov, codes,
                                  vals, num_docs=num_docs, edges=edges,
+                                 min_counts=min_counts, dwells=dwells,
                                  total_groups=total_groups, impl=impl,
                                  profile=profile, minmax=minmax)
 
 
 def run_wave_fused_multi(probe_stacks, ns, pts=None, rows=None, cov=None, *,
                          num_docs: int, edges_multi=(),
+                         min_counts_multi=(), dwells_multi=(),
                          impl: Optional[str] = None):
     """Multi-query fused wave (probe → refine → compact) for Q coalesced
     queries against ONE resident wave of shards, in ONE dispatch.  The
     query axis leads every per-query table (``probe_stacks`` [Q, S, K, W],
     ``cov`` [Q, C, 8, R]); track buffers (``pts``/``rows``) are shared.
-    Counts as a single launch: Q coalesced queries still cost
-    ⌈shards/wave⌉ **total** dispatches — the serve-layer contract."""
+    ``min_counts_multi``/``dwells_multi`` carry per-query reduction tuples
+    (aligned with ``edges_multi``).  Counts as a single launch: Q
+    coalesced queries still cost ⌈shards/wave⌉ **total** dispatches — the
+    serve-layer contract."""
     impl = _resolve(impl)
     record_launch("run_wave_fused_multi")
     return _fused.run_wave_fused_multi(probe_stacks, ns, pts, rows, cov,
                                        num_docs=num_docs,
-                                       edges_multi=edges_multi, impl=impl)
+                                       edges_multi=edges_multi,
+                                       min_counts_multi=min_counts_multi,
+                                       dwells_multi=dwells_multi,
+                                       impl=impl)
+
+
+def segment_hll(group_ids, regs, num_groups: int,
+                impl: Optional[str] = None):
+    """Per-group HyperLogLog register max: group_ids [N] int32 (< 0
+    masked out) × regs [N, M] uint8 register rows → [num_groups, M]
+    maxed register planes.  Register max is the HLL merge operation —
+    commutative and idempotent, so the lowering is partition-invariant by
+    construction.  Segment-max is a pure-jnp lowering under every
+    ``impl`` (like ``postings_bitmap``) but still counts one launch."""
+    _resolve(impl)                    # validate; lowering is impl-agnostic
+    record_launch("segment_hll")
+    return _fused.segment_hll(group_ids, regs, num_groups)
 
 
 def postings_bitmap(ids, t_min, t_max, t0, t1, n_docs: int,

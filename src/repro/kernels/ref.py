@@ -133,11 +133,12 @@ def _pair_le(a_hi, a_lo, b_hi, b_lo):
 _FH_SENT = 0xFFFFFFFF          # first-hit "no hit" sentinel word (uint32)
 
 
-@functools.partial(jax.jit, static_argnames=("num_docs",
-                                             "with_first_hits"))
+@functools.partial(jax.jit, static_argnames=("num_docs", "with_first_hits",
+                                             "with_analytics"))
 def refine_tracks_ref(pts: jnp.ndarray, rows: jnp.ndarray,
                       cov: jnp.ndarray, num_docs: int,
-                      with_first_hits: bool = False):
+                      with_first_hits: bool = False,
+                      with_analytics: bool = False):
     """Exact Tesseract refine over one shard's packed ragged track.
 
     pts [4, P] uint32 — per-point (key_hi, key_lo, t_hi, t_lo) words;
@@ -152,25 +153,38 @@ def refine_tracks_ref(pts: jnp.ndarray, rows: jnp.ndarray,
     ``[C, num_docs]`` — the lexicographic min of (t_hi, t_lo) over the
     doc's satisfying points, (0xFFFFFFFF, 0xFFFFFFFF) when none — the
     table ordered queries compare edge-wise.
+
+    ``with_analytics`` (implies first hits) returns the full reduction
+    family from the same one-hot pass:
+    ``(mask, fh_hi, fh_lo, lh_hi, lh_lo, cnt)`` — the **last-hit**
+    lexicographic max as uint32 word pairs with a (0, 0) "never hit"
+    sentinel (key 0 only packs −NaN, which never passes a window compare),
+    and the per-(constraint × doc) **hit count** int32 table.  Count and
+    dwell (last − first) verdicts are applied by the caller.
     """
     n_constraints = int(cov.shape[0])
     p = pts.shape[1]
     sent = jnp.uint32(_FH_SENT)
+    need_first = with_first_hits or with_analytics
 
-    def table():
-        return (jnp.full((n_constraints, num_docs), sent, jnp.uint32),
-                jnp.full((n_constraints, num_docs), sent, jnp.uint32))
+    def table(fill, dtype=jnp.uint32):
+        return jnp.full((n_constraints, num_docs), fill, dtype)
+
+    def empty(out):
+        if with_analytics:
+            return (out, table(sent), table(sent), table(0), table(0),
+                    table(0, jnp.int32))
+        return (out, table(sent), table(sent)) if with_first_hits else out
 
     if num_docs == 0:
-        out = jnp.zeros((0,), jnp.bool_)
-        return (out, *table()) if with_first_hits else out
+        return empty(jnp.zeros((0,), jnp.bool_))
     if p == 0 or n_constraints == 0:
-        out = jnp.full((num_docs,), n_constraints == 0)
-        return (out, *table()) if with_first_hits else out
+        return empty(jnp.full((num_docs,), n_constraints == 0))
     k_hi, k_lo, t_hi, t_lo = pts[0], pts[1], pts[2], pts[3]
     safe_rows = jnp.where(rows >= 0, rows, num_docs)    # pad → dropped
     out = jnp.ones((num_docs,), jnp.bool_)
     fh_his, fh_los = [], []
+    lh_his, lh_los, cnts = [], [], []
     for c in range(n_constraints):
         in_win = (_pair_ge(t_hi, t_lo, cov[c, 4, 0], cov[c, 5, 0])
                   & _pair_le(t_hi, t_lo, cov[c, 6, 0], cov[c, 7, 0]))
@@ -185,7 +199,7 @@ def refine_tracks_ref(pts: jnp.ndarray, rows: jnp.ndarray,
         doc_hit = jnp.zeros((num_docs,), jnp.int32) \
             .at[safe_rows].max(hit.astype(jnp.int32), mode="drop")
         out = out & (doc_hit > 0)
-        if with_first_hits:
+        if need_first:
             # lexicographic (hi, lo) min in two passes: min the hi words,
             # then min the lo words among points matching that hi — exact
             # because the second pass only sees the argmin-hi candidates
@@ -197,55 +211,86 @@ def refine_tracks_ref(pts: jnp.ndarray, rows: jnp.ndarray,
                                    mode="drop")
             fh_his.append(fh_hi[:num_docs])
             fh_los.append(fh_lo[:num_docs])
+        if with_analytics:
+            # last-hit dual: lexicographic (hi, lo) max with a (0, 0)
+            # no-hit sentinel — exact for the same argmax-hi reason
+            lh_hi = jnp.zeros((num_docs + 1,), jnp.uint32) \
+                .at[safe_rows].max(jnp.where(hit, t_hi, 0), mode="drop")
+            at_max = hit & (t_hi == lh_hi[safe_rows])
+            lh_lo = jnp.zeros((num_docs + 1,), jnp.uint32) \
+                .at[safe_rows].max(jnp.where(at_max, t_lo, 0), mode="drop")
+            cnt = jnp.zeros((num_docs + 1,), jnp.int32) \
+                .at[safe_rows].add(hit.astype(jnp.int32), mode="drop")
+            lh_his.append(lh_hi[:num_docs])
+            lh_los.append(lh_lo[:num_docs])
+            cnts.append(cnt[:num_docs])
+    if with_analytics:
+        return (out, jnp.stack(fh_his), jnp.stack(fh_los),
+                jnp.stack(lh_his), jnp.stack(lh_los), jnp.stack(cnts))
     if with_first_hits:
         return out, jnp.stack(fh_his), jnp.stack(fh_los)
     return out
 
 
-@functools.partial(jax.jit, static_argnames=("num_docs",
-                                             "with_first_hits"))
+@functools.partial(jax.jit, static_argnames=("num_docs", "with_first_hits",
+                                             "with_analytics"))
 def refine_tracks_batched_ref(pts: jnp.ndarray, rows: jnp.ndarray,
                               cov: jnp.ndarray, num_docs: int,
-                              with_first_hits: bool = False):
+                              with_first_hits: bool = False,
+                              with_analytics: bool = False):
     """Wave-stacked refine: pts [S, 4, P], rows [S, P] → masks
     [S, num_docs] (every shard shares the query's constraint table);
     ``with_first_hits`` adds uint32 first-hit word tables
-    [S, C, num_docs] × 2 (hi, lo)."""
+    [S, C, num_docs] × 2 (hi, lo); ``with_analytics`` adds last-hit word
+    tables (0-sentinel) and an int32 hit-count table on top."""
     n_constraints = int(cov.shape[0])
     if pts.shape[0] == 0:
         out = jnp.zeros((0, num_docs), jnp.bool_)
-        if with_first_hits:
+        shape = (0, n_constraints, num_docs)
+        if with_analytics:
             sent = jnp.uint32(_FH_SENT)
-            t = jnp.full((0, n_constraints, num_docs), sent, jnp.uint32)
+            t = jnp.full(shape, sent, jnp.uint32)
+            z = jnp.zeros(shape, jnp.uint32)
+            return out, t, t, z, z, jnp.zeros(shape, jnp.int32)
+        if with_first_hits:
+            t = jnp.full(shape, jnp.uint32(_FH_SENT), jnp.uint32)
             return out, t, t
         return out
     return jax.vmap(
         lambda pp, rr: refine_tracks_ref(pp, rr, cov, num_docs,
-                                         with_first_hits))(pts, rows)
+                                         with_first_hits,
+                                         with_analytics))(pts, rows)
 
 
-@functools.partial(jax.jit, static_argnames=("num_docs",
-                                             "with_first_hits"))
+@functools.partial(jax.jit, static_argnames=("num_docs", "with_first_hits",
+                                             "with_analytics"))
 def refine_tracks_multi_ref(pts: jnp.ndarray, rows: jnp.ndarray,
                             cov: jnp.ndarray, num_docs: int,
-                            with_first_hits: bool = False):
+                            with_first_hits: bool = False,
+                            with_analytics: bool = False):
     """Multi-query wave refine oracle: cov [Q, C, 8, R] carries Q
     coalesced queries' constraint tables; pts [S, 4, P] / rows [S, P] are
     the wave's shared track buffers.  vmap over the query axis of the
     batched single-query oracle → masks [Q, S, num_docs]
-    (+ first-hit uint32 word tables [Q, S, C, num_docs] × 2)."""
+    (+ first-hit uint32 word tables [Q, S, C, num_docs] × 2; under
+    ``with_analytics`` also last-hit tables and int32 counts)."""
     n_queries, n_constraints = int(cov.shape[0]), int(cov.shape[1])
     s = pts.shape[0]
     if n_queries == 0 or s == 0:
         out = jnp.zeros((n_queries, s, num_docs), jnp.bool_)
+        shape = (n_queries, s, n_constraints, num_docs)
+        if with_analytics:
+            t = jnp.full(shape, jnp.uint32(_FH_SENT), jnp.uint32)
+            z = jnp.zeros(shape, jnp.uint32)
+            return out, t, t, z, z, jnp.zeros(shape, jnp.int32)
         if with_first_hits:
-            t = jnp.full((n_queries, s, n_constraints, num_docs),
-                         jnp.uint32(_FH_SENT), jnp.uint32)
+            t = jnp.full(shape, jnp.uint32(_FH_SENT), jnp.uint32)
             return out, t, t
         return out
     return jax.vmap(
         lambda cc: refine_tracks_batched_ref(pts, rows, cc, num_docs,
-                                             with_first_hits))(cov)
+                                             with_first_hits,
+                                             with_analytics))(cov)
 
 
 # --------------------------------------------------------- flash attention

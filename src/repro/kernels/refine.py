@@ -37,6 +37,16 @@ word planes with a (0xFFFFFFFF, 0xFFFFFFFF) "never hit" sentinel (only
 NaN timestamps could collide with it, and NaN never passes a window
 compare).  Ordered Tesseract queries (A before B) compare that table
 edge-wise on device; the ordering adds outputs, not launches.
+
+``with_analytics`` generalizes that min-reduce into the whole reduction
+family, still in the same one-hot compare pass: alongside the first-hit
+planes it max-reduces a **last-hit** (t_hi, t_lo) pair per
+(doc × constraint) — dual sentinel (0, 0); packed key 0 only encodes −NaN,
+which never passes a window compare — and sum-accumulates an int32
+**hit count** across the sequential point-grid axis.  Count thresholds
+(``at_least(k)``) and dwell verdicts (``last − first >= n`` seconds) are
+pure epilogue compares over these tables; the reductions add outputs to
+the existing ⌈shards/wave⌉ dispatches, never launches.
 """
 from __future__ import annotations
 
@@ -72,7 +82,7 @@ def _le(a_hi, a_lo, b_hi, b_lo):
 _FH_SENT = 0xFFFFFFFF          # first-hit "no hit" sentinel word
 
 
-def _refine_kernel(pts_ref, rows_ref, cov_ref, out_ref, *fh_refs,
+def _refine_kernel(pts_ref, rows_ref, cov_ref, out_ref, *aux_refs,
                    doc_block: int, n_constraints: int):
     g = pl.program_id(1)
     t = pl.program_id(2)
@@ -81,8 +91,10 @@ def _refine_kernel(pts_ref, rows_ref, cov_ref, out_ref, *fh_refs,
     @pl.when(t == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
-        for fh in fh_refs:
+        for fh in aux_refs[:2]:                    # first-hit planes → sent
             fh[...] = jnp.full_like(fh, sent)
+        for ref in aux_refs[2:]:                   # last-hit / count → 0
+            ref[...] = jnp.zeros_like(ref)
 
     k_hi = pts_ref[0, 0, :][:, None]               # (T, 1) uint32
     k_lo = pts_ref[0, 1, :][:, None]
@@ -110,12 +122,12 @@ def _refine_kernel(pts_ref, rows_ref, cov_ref, out_ref, *fh_refs,
         hit2d = onehot & hit_pt[:, None]           # (T, D)
         contrib = jnp.any(hit2d, axis=0)           # (D,)
         acc = acc | jnp.left_shift(contrib[None, :].astype(jnp.int32), c)
-        if fh_refs:
+        if aux_refs:
             # per-doc lexicographic (t_hi, t_lo) min over this point
             # block, two passes: min hi, then min lo among points whose
             # hi equals that min (exact — the second pass only sees the
             # argmin-hi candidates; no-hit docs stay at the sentinel)
-            fh_hi_ref, fh_lo_ref = fh_refs
+            fh_hi_ref, fh_lo_ref = aux_refs[0], aux_refs[1]
             blk_hi = jnp.min(jnp.where(hit2d, t_hi, sent), axis=0)  # (D,)
             at_min = hit2d & (t_hi == blk_hi[None, :])
             blk_lo = jnp.min(jnp.where(at_min, t_lo, sent), axis=0)
@@ -125,6 +137,24 @@ def _refine_kernel(pts_ref, rows_ref, cov_ref, out_ref, *fh_refs,
                 | ((blk_hi == acc_hi) & (blk_lo < acc_lo))
             fh_hi_ref[0, c, :] = jnp.where(take, blk_hi, acc_hi)
             fh_lo_ref[0, c, :] = jnp.where(take, blk_lo, acc_lo)
+        if len(aux_refs) > 2:
+            # last-hit dual: lexicographic max with (0, 0) init — safe as
+            # a sentinel because packed key 0 only encodes −NaN, which
+            # never passes a window compare; count sums hits across the
+            # sequential point-grid axis
+            lh_hi_ref, lh_lo_ref, cnt_ref = aux_refs[2:]
+            zero = jnp.uint32(0)
+            lblk_hi = jnp.max(jnp.where(hit2d, t_hi, zero), axis=0)
+            at_max = hit2d & (t_hi == lblk_hi[None, :])
+            lblk_lo = jnp.max(jnp.where(at_max, t_lo, zero), axis=0)
+            lacc_hi = lh_hi_ref[0, c, :]
+            lacc_lo = lh_lo_ref[0, c, :]
+            ltake = (lblk_hi > lacc_hi) \
+                | ((lblk_hi == lacc_hi) & (lblk_lo > lacc_lo))
+            lh_hi_ref[0, c, :] = jnp.where(ltake, lblk_hi, lacc_hi)
+            lh_lo_ref[0, c, :] = jnp.where(ltake, lblk_lo, lacc_lo)
+            cnt_ref[0, c, :] = cnt_ref[0, c, :] \
+                + jnp.sum(hit2d.astype(jnp.int32), axis=0)
     out_ref[...] = out_ref[...] | acc
 
 
@@ -144,13 +174,15 @@ def _pad_cov(cov: jnp.ndarray) -> jnp.ndarray:
 
 @functools.partial(jax.jit, static_argnames=("num_docs", "point_block",
                                              "doc_block", "interpret",
-                                             "with_first_hits"))
+                                             "with_first_hits",
+                                             "with_analytics"))
 def refine_tracks_batched(pts: jnp.ndarray, rows: jnp.ndarray,
                           cov: jnp.ndarray, num_docs: int,
                           point_block: int = DEFAULT_POINT_BLOCK,
                           doc_block: int = DEFAULT_DOC_BLOCK,
                           interpret: bool = False,
-                          with_first_hits: bool = False):
+                          with_first_hits: bool = False,
+                          with_analytics: bool = False):
     """pts [S, 4, P] uint32, rows [S, P] int32 (−1 pad), cov [C, 8, R]
     uint32 → per-doc hit mask [S, num_docs] bool (wave-ragged doc counts
     zero-padded to ``num_docs`` by the caller; slice per shard).
@@ -162,24 +194,32 @@ def refine_tracks_batched(pts: jnp.ndarray, rows: jnp.ndarray,
     satisfying constraint c, (0xFFFFFFFF, 0xFFFFFFFF) when none.  Ordered
     (A-before-B) queries compare this table edge-wise; still one launch
     per wave.
+
+    ``with_analytics`` (implies first hits) returns the full reduction
+    family ``(mask, fh_hi, fh_lo, lh_hi, lh_lo, cnt)``: **last-hit**
+    lexicographic max word pairs with a (0, 0) no-hit sentinel, and an
+    int32 ``[S, C, num_docs]`` **hit-count** table — count/dwell verdicts
+    are epilogue compares at the caller, same single launch per wave.
     """
     s, _, p = pts.shape
     n_constraints = int(cov.shape[0])
     full = jnp.int32((1 << n_constraints) - 1)
     sent = jnp.uint32(_FH_SENT)
 
-    def empty_table():
-        return jnp.full((s, n_constraints, num_docs), sent, jnp.uint32)
+    def table(fill, dtype=jnp.uint32):
+        return jnp.full((s, n_constraints, num_docs), fill, dtype)
+
+    def empty(out):
+        if with_analytics:
+            return (out, table(sent), table(sent), table(0), table(0),
+                    table(0, jnp.int32))
+        return (out, table(sent), table(sent)) if with_first_hits else out
 
     if s == 0 or num_docs == 0:
-        out = jnp.zeros((s, num_docs), jnp.bool_)
-        return (out, empty_table(), empty_table()) if with_first_hits \
-            else out
+        return empty(jnp.zeros((s, num_docs), jnp.bool_))
     if p == 0 or n_constraints == 0:
         # no points → no constraint can hit; no constraints → vacuous truth
-        out = jnp.full((s, num_docs), n_constraints == 0)
-        return (out, empty_table(), empty_table()) if with_first_hits \
-            else out
+        return empty(jnp.full((s, num_docs), n_constraints == 0))
     cov = _pad_cov(cov)
     r_pad = cov.shape[2]
     padded_p = pl.cdiv(p, point_block) * point_block
@@ -188,13 +228,18 @@ def refine_tracks_batched(pts: jnp.ndarray, rows: jnp.ndarray,
     rows_p = jnp.full((s, padded_p), -1, jnp.int32).at[:, :p].set(rows)
     out_shape = [jax.ShapeDtypeStruct((s, padded_d), jnp.int32)]
     out_specs = [pl.BlockSpec((1, doc_block), lambda i, g, t: (i, g))]
-    if with_first_hits:
-        fh_shape = jax.ShapeDtypeStruct((s, n_constraints, padded_d),
-                                        jnp.uint32)
-        fh_spec = pl.BlockSpec((1, n_constraints, doc_block),
-                               lambda i, g, t: (i, 0, g))
-        out_shape += [fh_shape, fh_shape]
-        out_specs += [fh_spec, fh_spec]
+    if with_first_hits or with_analytics:
+        tbl_shape = jax.ShapeDtypeStruct((s, n_constraints, padded_d),
+                                         jnp.uint32)
+        tbl_spec = pl.BlockSpec((1, n_constraints, doc_block),
+                                lambda i, g, t: (i, 0, g))
+        out_shape += [tbl_shape, tbl_shape]
+        out_specs += [tbl_spec, tbl_spec]
+        if with_analytics:
+            cnt_shape = jax.ShapeDtypeStruct((s, n_constraints, padded_d),
+                                             jnp.int32)
+            out_shape += [tbl_shape, tbl_shape, cnt_shape]
+            out_specs += [tbl_spec, tbl_spec, tbl_spec]
     outs = pl.pallas_call(
         functools.partial(_refine_kernel, doc_block=doc_block,
                           n_constraints=n_constraints),
@@ -213,12 +258,12 @@ def refine_tracks_batched(pts: jnp.ndarray, rows: jnp.ndarray,
     )(pts_p, rows_p, cov)
     bits = outs[0]
     mask = bits[:, :num_docs] == full
-    if with_first_hits:
-        return mask, outs[1][:, :, :num_docs], outs[2][:, :, :num_docs]
+    if with_analytics or with_first_hits:
+        return (mask, *(o[:, :, :num_docs] for o in outs[1:]))
     return mask
 
 
-def _refine_kernel_multi(pts_ref, rows_ref, cov_ref, out_ref, *fh_refs,
+def _refine_kernel_multi(pts_ref, rows_ref, cov_ref, out_ref, *aux_refs,
                          doc_block: int, n_constraints: int):
     """Query-axis variant of ``_refine_kernel``: grid (q, s, g, t), the
     constraint table block is the q-th query's [C, 8, R] slice, track
@@ -230,8 +275,10 @@ def _refine_kernel_multi(pts_ref, rows_ref, cov_ref, out_ref, *fh_refs,
     @pl.when(t == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
-        for fh in fh_refs:
+        for fh in aux_refs[:2]:                    # first-hit planes → sent
             fh[...] = jnp.full_like(fh, sent)
+        for ref in aux_refs[2:]:                   # last-hit / count → 0
+            ref[...] = jnp.zeros_like(ref)
 
     k_hi = pts_ref[0, 0, :][:, None]               # (T, 1) uint32
     k_lo = pts_ref[0, 1, :][:, None]
@@ -259,8 +306,8 @@ def _refine_kernel_multi(pts_ref, rows_ref, cov_ref, out_ref, *fh_refs,
         hit2d = onehot & hit_pt[:, None]           # (T, D)
         contrib = jnp.any(hit2d, axis=0)           # (D,)
         acc = acc | jnp.left_shift(contrib[None, :].astype(jnp.int32), c)
-        if fh_refs:
-            fh_hi_ref, fh_lo_ref = fh_refs
+        if aux_refs:
+            fh_hi_ref, fh_lo_ref = aux_refs[0], aux_refs[1]
             blk_hi = jnp.min(jnp.where(hit2d, t_hi, sent), axis=0)  # (D,)
             at_min = hit2d & (t_hi == blk_hi[None, :])
             blk_lo = jnp.min(jnp.where(at_min, t_lo, sent), axis=0)
@@ -270,18 +317,34 @@ def _refine_kernel_multi(pts_ref, rows_ref, cov_ref, out_ref, *fh_refs,
                 | ((blk_hi == acc_hi) & (blk_lo < acc_lo))
             fh_hi_ref[0, 0, c, :] = jnp.where(take, blk_hi, acc_hi)
             fh_lo_ref[0, 0, c, :] = jnp.where(take, blk_lo, acc_lo)
+        if len(aux_refs) > 2:
+            lh_hi_ref, lh_lo_ref, cnt_ref = aux_refs[2:]
+            zero = jnp.uint32(0)
+            lblk_hi = jnp.max(jnp.where(hit2d, t_hi, zero), axis=0)
+            at_max = hit2d & (t_hi == lblk_hi[None, :])
+            lblk_lo = jnp.max(jnp.where(at_max, t_lo, zero), axis=0)
+            lacc_hi = lh_hi_ref[0, 0, c, :]
+            lacc_lo = lh_lo_ref[0, 0, c, :]
+            ltake = (lblk_hi > lacc_hi) \
+                | ((lblk_hi == lacc_hi) & (lblk_lo > lacc_lo))
+            lh_hi_ref[0, 0, c, :] = jnp.where(ltake, lblk_hi, lacc_hi)
+            lh_lo_ref[0, 0, c, :] = jnp.where(ltake, lblk_lo, lacc_lo)
+            cnt_ref[0, 0, c, :] = cnt_ref[0, 0, c, :] \
+                + jnp.sum(hit2d.astype(jnp.int32), axis=0)
     out_ref[...] = out_ref[...] | acc
 
 
 @functools.partial(jax.jit, static_argnames=("num_docs", "point_block",
                                              "doc_block", "interpret",
-                                             "with_first_hits"))
+                                             "with_first_hits",
+                                             "with_analytics"))
 def refine_tracks_multi(pts: jnp.ndarray, rows: jnp.ndarray,
                         cov: jnp.ndarray, num_docs: int,
                         point_block: int = DEFAULT_POINT_BLOCK,
                         doc_block: int = DEFAULT_DOC_BLOCK,
                         interpret: bool = False,
-                        with_first_hits: bool = False):
+                        with_first_hits: bool = False,
+                        with_analytics: bool = False):
     """Multi-query wave refine: Q coalesced queries' constraint tables
     against ONE wave of shards' track buffers in a single launch.
 
@@ -292,7 +355,8 @@ def refine_tracks_multi(pts: jnp.ndarray, rows: jnp.ndarray,
     the caller: never-hit slots on the range axis, always-hit constraints
     on the C axis).  Returns hit masks [Q, S, num_docs] bool, plus uint32
     first-hit word tables [Q, S, C, num_docs] × 2 under
-    ``with_first_hits``.
+    ``with_first_hits``; ``with_analytics`` adds last-hit word tables
+    (0-sentinel) and an int32 hit-count table, same launch.
     """
     s, _, p = pts.shape
     n_queries = int(cov.shape[0])
@@ -300,18 +364,20 @@ def refine_tracks_multi(pts: jnp.ndarray, rows: jnp.ndarray,
     full = jnp.int32((1 << n_constraints) - 1)
     sent = jnp.uint32(_FH_SENT)
 
-    def empty_table():
-        return jnp.full((n_queries, s, n_constraints, num_docs), sent,
-                        jnp.uint32)
+    def table(fill, dtype=jnp.uint32):
+        return jnp.full((n_queries, s, n_constraints, num_docs), fill,
+                        dtype)
+
+    def empty(out):
+        if with_analytics:
+            return (out, table(sent), table(sent), table(0), table(0),
+                    table(0, jnp.int32))
+        return (out, table(sent), table(sent)) if with_first_hits else out
 
     if n_queries == 0 or s == 0 or num_docs == 0:
-        out = jnp.zeros((n_queries, s, num_docs), jnp.bool_)
-        return (out, empty_table(), empty_table()) if with_first_hits \
-            else out
+        return empty(jnp.zeros((n_queries, s, num_docs), jnp.bool_))
     if p == 0 or n_constraints == 0:
-        out = jnp.full((n_queries, s, num_docs), n_constraints == 0)
-        return (out, empty_table(), empty_table()) if with_first_hits \
-            else out
+        return empty(jnp.full((n_queries, s, num_docs), n_constraints == 0))
     cov = jnp.stack([_pad_cov(cov[q]) for q in range(n_queries)])
     r_pad = cov.shape[3]
     padded_p = pl.cdiv(p, point_block) * point_block
@@ -321,13 +387,18 @@ def refine_tracks_multi(pts: jnp.ndarray, rows: jnp.ndarray,
     out_shape = [jax.ShapeDtypeStruct((n_queries, s, padded_d), jnp.int32)]
     out_specs = [pl.BlockSpec((1, 1, doc_block),
                               lambda q, i, g, t: (q, i, g))]
-    if with_first_hits:
-        fh_shape = jax.ShapeDtypeStruct(
+    if with_first_hits or with_analytics:
+        tbl_shape = jax.ShapeDtypeStruct(
             (n_queries, s, n_constraints, padded_d), jnp.uint32)
-        fh_spec = pl.BlockSpec((1, 1, n_constraints, doc_block),
-                               lambda q, i, g, t: (q, i, 0, g))
-        out_shape += [fh_shape, fh_shape]
-        out_specs += [fh_spec, fh_spec]
+        tbl_spec = pl.BlockSpec((1, 1, n_constraints, doc_block),
+                                lambda q, i, g, t: (q, i, 0, g))
+        out_shape += [tbl_shape, tbl_shape]
+        out_specs += [tbl_spec, tbl_spec]
+        if with_analytics:
+            cnt_shape = jax.ShapeDtypeStruct(
+                (n_queries, s, n_constraints, padded_d), jnp.int32)
+            out_shape += [tbl_shape, tbl_shape, cnt_shape]
+            out_specs += [tbl_spec, tbl_spec, tbl_spec]
     outs = pl.pallas_call(
         functools.partial(_refine_kernel_multi, doc_block=doc_block,
                           n_constraints=n_constraints),
@@ -348,27 +419,30 @@ def refine_tracks_multi(pts: jnp.ndarray, rows: jnp.ndarray,
     )(pts_p, rows_p, cov)
     bits = outs[0]
     mask = bits[:, :, :num_docs] == full
-    if with_first_hits:
-        return mask, outs[1][..., :num_docs], outs[2][..., :num_docs]
+    if with_analytics or with_first_hits:
+        return (mask, *(o[..., :num_docs] for o in outs[1:]))
     return mask
 
 
 @functools.partial(jax.jit, static_argnames=("num_docs", "point_block",
                                              "doc_block", "interpret",
-                                             "with_first_hits"))
+                                             "with_first_hits",
+                                             "with_analytics"))
 def refine_tracks(pts: jnp.ndarray, rows: jnp.ndarray, cov: jnp.ndarray,
                   num_docs: int, point_block: int = DEFAULT_POINT_BLOCK,
                   doc_block: int = DEFAULT_DOC_BLOCK,
-                  interpret: bool = False, with_first_hits: bool = False):
+                  interpret: bool = False, with_first_hits: bool = False,
+                  with_analytics: bool = False):
     """Single-shard refine: pts [4, P], rows [P], cov [C, 8, R] →
     hit mask [num_docs] bool (+ uint32 first-hit word tables
-    [C, num_docs] × 2 under ``with_first_hits``)."""
+    [C, num_docs] × 2 under ``with_first_hits``; the full
+    (mask, fh, lh, cnt) reduction family under ``with_analytics``)."""
     out = refine_tracks_batched(pts[None], rows[None], cov, num_docs,
                                 point_block=point_block,
                                 doc_block=doc_block,
                                 interpret=interpret,
-                                with_first_hits=with_first_hits)
-    if with_first_hits:
-        mask, fh_hi, fh_lo = out
-        return mask[0], fh_hi[0], fh_lo[0]
+                                with_first_hits=with_first_hits,
+                                with_analytics=with_analytics)
+    if with_analytics or with_first_hits:
+        return tuple(o[0] for o in out)
     return out[0]

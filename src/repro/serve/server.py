@@ -95,10 +95,12 @@ class QueryServer:
 
     def __init__(self, engine: Optional[AdHocEngine] = None,
                  catalog=None, backend=None, *,
+                 config=None,
                  max_pending: int = 64, max_coalesce: int = 16,
                  cache=None, tick_s: float = 0.001, start: bool = True):
         if engine is None:
-            engine = AdHocEngine(catalog=catalog, backend=backend)
+            engine = AdHocEngine(catalog=catalog, backend=backend,
+                                 config=config)
         self.engine = engine
         self.max_pending = int(max_pending)
         self.max_coalesce = max(1, int(max_coalesce))
@@ -328,7 +330,9 @@ class QueryServer:
         if refine is not None:
             masks = backend.refine_tracks_batched(
                 [sh.batch for sh in shards], refine.path,
-                refine.constraints, masks, edges=refine.edges)
+                refine.constraints, masks, edges=refine.edges,
+                min_counts=getattr(refine, "min_counts", None),
+                dwells=getattr(refine, "dwells", None))
         return n_cands, backend.compact_masks(masks)
 
     def _run_group(self, chunk: List[_Pending]) -> None:
@@ -391,9 +395,11 @@ class QueryServer:
                         for pl in plans]
                     pre = [db.shards[s] for s in nxt] if nxt else None
                     out = None
-                    if fused_enabled() and getattr(backend,
-                                                   "batched_dispatch",
-                                                   False):
+                    cfg = getattr(self.engine, "config", None)
+                    if fused_enabled(cfg.fused if cfg is not None
+                                     else None) \
+                            and getattr(backend, "batched_dispatch",
+                                        False):
                         with backend.partition_context(
                                 pi, pplan.num_partitions):
                             out = backend.run_wave_fused_multi(

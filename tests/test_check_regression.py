@@ -82,9 +82,20 @@ def test_suite_mode(tmp_path, capsys):
     assert "MISSING FILE" in capsys.readouterr().err
 
 
+def test_no_args_defaults_to_registry(tmp_path, capsys):
+    """Bare invocation compares the blocking set from the
+    benchmarks/suites.py registry (same table run.py --only reads) —
+    an empty current dir fails on every suite, it is not an arg error."""
+    from benchmarks.suites import REGRESSION_SUITES
+
+    assert check_regression.main(["--current-dir", str(tmp_path)]) == 1
+    err = capsys.readouterr().err
+    for suite in REGRESSION_SUITES:
+        assert f"BENCH_{suite}.json" in err
+    assert "analytics" in REGRESSION_SUITES
+
+
 def test_arg_validation():
-    with pytest.raises(SystemExit):
-        check_regression.main([])
     with pytest.raises(SystemExit):
         check_regression.main(["--suite", "a", "--current", "x",
                                "--baseline", "y"])
